@@ -1,0 +1,109 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md sect. Roofline).
+
+Per (arch x shape x mesh) cell, derives the three roofline terms from the
+compiled dry-run (all per-chip; the SPMD module IS the per-chip program):
+
+  compute    = HLO_FLOPs_per_chip / 197 TFLOP/s   (bf16 peak, TPU v5e)
+  memory     = HLO_bytes_per_chip / 819 GB/s      (HBM bandwidth)
+  collective = collective_bytes_per_chip / 50 GB/s (ICI per-link)
+
+plus MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D (inference), the
+useful-compute ratio MODEL_FLOPS / (HLO_FLOPs * chips), the dominant term,
+the roofline-fraction score MODEL_FLOPS / (chips * peak * t_dominant), and a
+what-would-move-it note.  HLO quantities are trip-count-corrected
+(launch/hlo_analysis.py).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                       "dryrun")
+
+
+def terms(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    n = rec["n_devices"]
+    t_c = rec["hlo_flops"] / PEAK_FLOPS
+    t_m = rec["hlo_bytes"] / HBM_BW
+    # analytic floor: every argument/output byte (params, optimizer state,
+    # caches, batch) moves through HBM at least once per step
+    mem = rec.get("memory") or {}
+    floor = (mem.get("argument_bytes", 0) + mem.get("output_bytes", 0))
+    t_m = max(t_m, floor / HBM_BW)
+    t_x = rec["collective_bytes_total"] / ICI_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])
+    useful = rec["model_flops"] / max(rec["hlo_flops"] * n, 1.0)
+    frac = rec["model_flops"] / (n * PEAK_FLOPS * max(dom[1], 1e-12))
+    move = {
+        "compute": "cut redundant HLO flops (remat policy, MoE capacity "
+                   "factor, fused attention kernel)",
+        "memory": "raise arithmetic intensity: larger per-chip batch, "
+                  "bf16 cache/states, fuse bandwidth-bound chains",
+        "collective": "re-shard to cut resharding collectives; overlap "
+                      "via latency-hiding scheduler; int8-compress DP "
+                      "all-reduce",
+    }[dom[0]]
+    return {"t_compute": t_c, "t_memory": t_m, "t_collective": t_x,
+            "dominant": dom[0], "t_dominant": dom[1], "useful_ratio": useful,
+            "roofline_fraction": frac, "move": move}
+
+
+def load_records(art_dir: str = ART_DIR) -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(art_dir: str = ART_DIR) -> List[str]:
+    rows = []
+    recs = load_records(art_dir)
+    if not recs:
+        return ["roofline.no_artifacts,0.0,run repro.launch.dryrun first"]
+    n_ok = n_skip = n_err = 0
+    for rec in recs:
+        tag = f"{rec['arch']}:{rec['shape']}:{rec['mesh']}"
+        if rec.get("status") == "skipped":
+            n_skip += 1
+            rows.append(f"roofline.{tag},0.0,SKIP ({rec['reason'][:60]})")
+            continue
+        if rec.get("status") != "ok":
+            n_err += 1
+            rows.append(f"roofline.{tag},0.0,ERROR {rec.get('error','')[:80]}")
+            continue
+        n_ok += 1
+        t = terms(rec)
+        extra = ""
+        if rec["shape"] in ("decode_32k", "long_500k"):
+            # serving cells: the roofline bound on throughput is the batch
+            # over the dominant (memory) term -- tok/s, not flop fraction
+            from repro.models.common import SHAPES
+            bsz = SHAPES[rec["shape"]].global_batch
+            extra = f" decode_tok/s<={bsz / max(t['t_dominant'], 1e-12):.0f}"
+        rows.append(
+            f"roofline.{tag},{t['t_dominant']*1e6:.1f},"
+            f"compute={t['t_compute']*1e3:.2f}ms "
+            f"memory={t['t_memory']*1e3:.2f}ms "
+            f"collective={t['t_collective']*1e3:.2f}ms "
+            f"dom={t['dominant']} "
+            f"useful={t['useful_ratio']:.2f} "
+            f"roofline_frac={t['roofline_fraction']:.3f}{extra}")
+    rows.append(f"roofline.summary,0.0,ok={n_ok} skipped={n_skip} "
+                f"errors={n_err}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

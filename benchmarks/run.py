@@ -1,0 +1,28 @@
+"""Benchmark harness: one module per paper table + system benches.
+
+Prints ``name,us_per_call,derived`` CSV (one line per measurement).
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (roofline, stencil_throughput, table1_subkernels,
+                            table2_requirements, table3_model_validation)
+    mods = [("table1", table1_subkernels), ("table2", table2_requirements),
+            ("table3", table3_model_validation),
+            ("stencil_throughput", stencil_throughput),
+            ("roofline", roofline)]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name, mod in mods:
+        if only and only != name:
+            continue
+        for row in mod.run():
+            print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Paper Table 3: performance-model validation.
+
+Reports, per kernel configuration:
+  * the analytic columns (naive instruction limit, L1/streaming bandwidth
+    limits) -- these reproduce the published numbers exactly;
+  * our scheduler's simulated throughput under the paper simulator's
+    OOO-renaming semantics vs the paper's simulated and observed values;
+  * the strictly in-order-safe schedule (WAR=1) -- deployable as-emitted;
+  * the steady-state pipelined estimate (cross-iteration overlap).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.core.perfmodel import PAPER_TABLE3, analyze
+from repro.core.synth import PAPER_CONFIGS
+
+
+def run() -> List[str]:
+    rows = []
+    errs_analytic = []
+    errs_sim = []
+    for cfg in PAPER_CONFIGS:
+        t0 = time.perf_counter()
+        e = analyze(cfg)
+        us = (time.perf_counter() - t0) * 1e6
+        p = PAPER_TABLE3[cfg.name]
+        errs_analytic += [abs(e.naive_mstencil - p[0]) / p[0],
+                          abs(e.l1_bw_mstencil - p[2]) / p[2],
+                          abs(e.streaming_bw_mstencil - p[3]) / p[3]]
+        sim_err = (e.simulated_mstencil - p[1]) / p[1]
+        errs_sim.append(sim_err)
+        rows.append(
+            f"table3.{cfg.name},{us:.1f},"
+            f"naive={e.naive_mstencil:.2f}(paper {p[0]}) "
+            f"sim={e.simulated_mstencil:.2f}(paper {p[1]}; {sim_err:+.1%}) "
+            f"strict={e.simulated_strict_mstencil:.2f} "
+            f"piped={e.pipelined_mstencil:.2f} "
+            f"l1bw={e.l1_bw_mstencil:.2f}(paper {p[2]}) "
+            f"strm={e.streaming_bw_mstencil:.2f}(paper {p[3]}) "
+            f"pred_l1={e.predicted_l1:.2f}(obs {p[5]}) "
+            f"pred_strm={e.predicted_streaming:.2f}(obs {p[7]})")
+    rows.append(f"table3.analytic_max_err,0.0,"
+                f"{max(errs_analytic):.2%} (naive+bandwidth columns)")
+    rows.append(f"table3.sim_err_range,0.0,"
+                f"[{min(errs_sim):+.1%}, {max(errs_sim):+.1%}] vs paper "
+                f"greedy (ours >= paper on "
+                f"{sum(1 for x in errs_sim if x >= -0.001)}/{len(errs_sim)})")
+    # the headline claim: 27-pt at 85%+ of arithmetic peak in-L1
+    from repro.core.synth import StencilConfig
+    e27 = analyze(StencilConfig(27, "mm", 2, 3))
+    rows.append(f"table3.27pt_peak_fraction,0.0,"
+                f"{e27.predicted_l1 / 62.96:.1%} of arithmetic peak "
+                f"(paper: 85%)")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

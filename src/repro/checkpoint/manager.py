@@ -1,0 +1,137 @@
+"""Fault-tolerant checkpointing: atomic, keep-K, async, mesh-independent.
+
+Checkpoints are written as flat ``.npz`` archives of the host-gathered pytree
+plus a JSON manifest (step, data-pipeline cursor, mesh shape at save time).
+Restore is *elastic*: arrays are stored logically (unsharded), so a restart
+may re-shard onto a different mesh/device count -- the loader just applies
+the new sharding spec.  Writes go to a temp file + atomic rename; a
+``keep`` window garbage-collects old steps; ``save_async`` overlaps the
+serialization with the next training step (the device->host copy is the only
+synchronous part).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+Params = Any
+
+
+def _flatten(tree: Params, prefix: str = "") -> Dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "fiub" or str(arr.dtype) == "bfloat16":
+            # numpy can't serialize ml_dtypes (bfloat16 etc.); fp32 is a
+            # lossless container for bf16 and restore re-casts per template.
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # -- paths ------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def latest_step(self) -> Optional[int]:
+        steps = [int(d.split("_")[1]) for d in os.listdir(self.dir)
+                 if d.startswith("step_")
+                 and os.path.exists(os.path.join(self.dir, d, "MANIFEST.json"))]
+        return max(steps) if steps else None
+
+    # -- save -------------------------------------------------------------
+    def save(self, step: int, tree: Params,
+             meta: Optional[Dict] = None) -> str:
+        host_tree = jax.tree.map(np.asarray, jax.device_get(tree))
+        return self._write(step, host_tree, meta or {})
+
+    def save_async(self, step: int, tree: Params,
+                   meta: Optional[Dict] = None) -> None:
+        """Device->host copy happens now; disk write on a worker thread."""
+        host_tree = jax.tree.map(np.asarray, jax.device_get(tree))
+        self.wait()
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host_tree, meta or {}))
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_tree: Params, meta: Dict) -> str:
+        final = self._step_dir(step)
+        tmp = tempfile.mkdtemp(dir=self.dir, prefix=".tmp_")
+        try:
+            flat = _flatten(host_tree)
+            np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+            treedef = jax.tree.structure(host_tree)
+            with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+                json.dump({"step": step, "meta": meta,
+                           "treedef": str(treedef),
+                           "n_arrays": len(flat)}, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)          # atomic publish
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        self._gc()
+        return final
+
+    def _gc(self) -> None:
+        steps = sorted(int(d.split("_")[1]) for d in os.listdir(self.dir)
+                       if d.startswith("step_"))
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # -- restore ----------------------------------------------------------
+    def restore(self, template: Params, step: Optional[int] = None,
+                shardings: Optional[Params] = None
+                ) -> Tuple[Params, Dict]:
+        """Restore into the structure of ``template``.
+
+        ``shardings``: optional pytree of jax.sharding.Sharding -- arrays are
+        placed per-spec, which is how a checkpoint saved on one mesh resumes
+        on another (elastic restart).
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self._step_dir(step)
+        with open(os.path.join(d, "MANIFEST.json")) as f:
+            manifest = json.load(f)
+        arrays = np.load(os.path.join(d, "arrays.npz"))
+        flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for path, leaf in flat_t:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in path)
+            arr = arrays[key]
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(f"shape mismatch for {key}: "
+                                 f"{arr.shape} vs {leaf.shape}")
+            leaves.append(arr.astype(leaf.dtype))
+        tree = jax.tree.unflatten(treedef, leaves)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda a, s: jax.device_put(a, s), tree, shardings)
+        return tree, manifest

@@ -1,0 +1,2 @@
+from .gradient import (compress_decompress, compressed_psum,  # noqa: F401
+                       init_error_feedback)

@@ -1,0 +1,42 @@
+"""Architecture registry: the 10 assigned configs + the paper's stencils."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from ..models.common import ArchConfig
+
+ARCH_IDS: List[str] = [
+    "internvl2-2b",
+    "mixtral-8x7b",
+    "arctic-480b",
+    "zamba2-7b",
+    "falcon-mamba-7b",
+    "starcoder2-7b",
+    "nemotron-4-15b",
+    "qwen2-0.5b",
+    "qwen1.5-0.5b",
+    "seamless-m4t-large-v2",
+]
+
+_cache: Dict[str, ArchConfig] = {}
+_rcache: Dict[str, ArchConfig] = {}
+
+
+def _module(arch_id: str):
+    return importlib.import_module(
+        f"repro.configs.{arch_id.replace('-', '_').replace('.', '_')}")
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    if arch_id not in _cache:
+        _cache[arch_id] = _module(arch_id).CONFIG
+    return _cache[arch_id]
+
+
+def get_reduced_config(arch_id: str) -> ArchConfig:
+    """Smoke-test config: same family/topology, tiny dims."""
+    if arch_id not in _rcache:
+        _rcache[arch_id] = _module(arch_id).reduced()
+    return _rcache[arch_id]

@@ -1,0 +1,25 @@
+"""arctic-480b [moe]: 128 experts top-2 alongside a dense residual MLP.
+
+[hf:Snowflake/snowflake-arctic-base; hf].  35L d=7168 56H (GQA kv=8)
+d_ff=4864 vocab=32000.  Dense-MoE hybrid: every layer adds a dense residual
+MLP in parallel with the routed experts (residual_d_ff documented as 4864,
+matching the expert width, where the card is silent).  Full attention =>
+long_500k skipped.
+"""
+
+import dataclasses
+
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="arctic-480b", family="moe", n_layers=35, d_model=7168, n_heads=56,
+    n_kv_heads=8, d_ff=4864, vocab_size=32000, n_experts=128, top_k=2,
+    moe_dense_residual=True, residual_d_ff=4864, activation="swiglu",
+    rope_theta=1e6, capacity_factor=1.25,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=96,
+        vocab_size=512, n_experts=8, top_k=2, residual_d_ff=96)

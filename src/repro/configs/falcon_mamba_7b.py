@@ -1,0 +1,28 @@
+"""falcon-mamba-7b [ssm]: attention-free Mamba-1 LM.
+
+[arXiv:2410.05355; unverified].  64L d=4096 vocab=65024, ssm_state=16,
+d_inner = 2*d_model = 8192, conv kernel 4.  The fullest application of the
+paper's streaming-kernel technique (DESIGN.md sect. 5); O(1) decode state =>
+runs long_500k.
+"""
+
+import dataclasses
+
+from repro.models.common import ArchConfig
+
+import jax.numpy as jnp
+
+CONFIG = ArchConfig(
+    name="falcon-mamba-7b", family="ssm", n_layers=64, d_model=4096,
+    n_heads=1, n_kv_heads=1, d_ff=0, vocab_size=65024, ssm_state=16,
+    ssm_conv=4, d_inner=8192, ssm_kind="mamba1",
+    # beyond-paper perf: bf16 scan-tensor storage halves the memory-bound
+    # (B, Lc, di, N) traffic (EXPERIMENTS.md Perf falcon-H3)
+    ssm_scan_dtype=jnp.bfloat16,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, d_inner=128, ssm_state=4,
+        vocab_size=512, ssm_scan_dtype=None)

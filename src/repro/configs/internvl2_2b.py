@@ -1,0 +1,22 @@
+"""internvl2-2b [vlm]: InternViT frontend stub + InternLM2-1.8B backbone.
+
+[arXiv:2404.16821; hf].  24L d=2048 16H (GQA kv=8) d_ff=8192 vocab=92553.
+Frontend is a stub per the assignment: precomputed ViT patch embeddings
+(InternViT hidden 1024) enter via a linear projection as a 256-token prefix.
+"""
+
+import dataclasses
+
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="internvl2-2b", family="vlm", n_layers=24, d_model=2048, n_heads=16,
+    n_kv_heads=8, d_ff=8192, vocab_size=92553, activation="swiglu",
+    rope_theta=1e6, frontend="patch", frontend_dim=1024, frontend_len=256,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+        vocab_size=512, frontend_dim=32, frontend_len=8)

@@ -1,0 +1,21 @@
+"""mixtral-8x7b [moe]: 8 experts top-2 + sliding-window attention.
+
+[arXiv:2401.04088; hf].  32L d=4096 32H (GQA kv=8) d_ff=14336 vocab=32000.
+SWA window 4096 => banded (stencil-pattern) attention; runs long_500k.
+"""
+
+import dataclasses
+
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mixtral-8x7b", family="moe", n_layers=32, d_model=4096, n_heads=32,
+    n_kv_heads=8, d_ff=14336, vocab_size=32000, n_experts=8, top_k=2,
+    window=4096, activation="swiglu", rope_theta=1e6,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+        vocab_size=512, n_experts=4, top_k=2, window=16)

@@ -1,0 +1,21 @@
+"""nemotron-4-15b [dense]: GQA + squared-ReLU MLP, huge vocab.
+
+[arXiv:2402.16819; unverified].  32L d=6144 48H (GQA kv=8) d_ff=24576
+vocab=256000.  Full attention => long_500k skipped.
+"""
+
+import dataclasses
+
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="nemotron-4-15b", family="dense", n_layers=32, d_model=6144,
+    n_heads=48, n_kv_heads=8, d_ff=24576, vocab_size=256000,
+    activation="sq_relu", rope_theta=1e4,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+        vocab_size=512)

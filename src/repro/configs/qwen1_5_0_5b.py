@@ -1,0 +1,20 @@
+"""qwen1.5-0.5b [dense]: MHA (kv=16), QKV bias, tied embeddings.
+
+[hf:Qwen/Qwen1.5-0.5B; hf].  24L d=1024 16H (kv=16) d_ff=2816 vocab=151936.
+"""
+
+import dataclasses
+
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen1.5-0.5b", family="dense", n_layers=24, d_model=1024,
+    n_heads=16, n_kv_heads=16, d_ff=2816, vocab_size=151936,
+    activation="swiglu", qkv_bias=True, tie_embeddings=True, rope_theta=1e6,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+        vocab_size=512)

@@ -1,0 +1,22 @@
+"""qwen2-0.5b [dense]: GQA kv=2, QKV bias, tied embeddings.
+
+[arXiv:2407.10671; hf].  24L d=896 14H (GQA kv=2) d_ff=4864 vocab=151936.
+Note 14 heads does not divide the 16-way model axis: the partition planner
+falls back to d_ff/vocab sharding for the attention projections.
+"""
+
+import dataclasses
+
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-0.5b", family="dense", n_layers=24, d_model=896, n_heads=14,
+    n_kv_heads=2, d_ff=4864, vocab_size=151936, activation="swiglu",
+    qkv_bias=True, tie_embeddings=True, rope_theta=1e6,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=56, n_heads=7, n_kv_heads=1, d_ff=128,
+        vocab_size=512)

@@ -1,0 +1,21 @@
+"""starcoder2-7b [dense]: GQA + RoPE + sliding-window attention.
+
+[arXiv:2402.19173; hf].  32L d=4608 36H (GQA kv=4) d_ff=18432 vocab=49152.
+GELU MLP, biases on QKV, SWA window 4096 => runs long_500k.
+"""
+
+import dataclasses
+
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="starcoder2-7b", family="dense", n_layers=32, d_model=4608,
+    n_heads=36, n_kv_heads=4, d_ff=18432, vocab_size=49152,
+    activation="gelu", qkv_bias=True, window=4096, rope_theta=1e5,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+        vocab_size=512, window=16)

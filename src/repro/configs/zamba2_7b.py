@@ -1,0 +1,26 @@
+"""zamba2-7b [hybrid]: Mamba-2 trunk + shared attention block every 6 layers.
+
+[arXiv:2411.15242; unverified].  81L d=3584 32H (GQA kv=32 => MHA)
+d_ff=14336, ssm_state=64.  d_inner = 2*d_model = 7168, Mamba-2 head dim 64.
+The shared attn+MLP block re-uses ONE parameter set across applications
+(Zamba's parameter sharing).  Sub-quadratic per-token decode => runs
+long_500k.
+"""
+
+import dataclasses
+
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-7b", family="hybrid", n_layers=81, d_model=3584, n_heads=32,
+    n_kv_heads=32, d_ff=14336, vocab_size=32000, ssm_state=64, ssm_conv=4,
+    d_inner=7168, ssm_kind="mamba2", ssm_head_dim=64, attn_every=6,
+    activation="swiglu", rope_theta=1e4,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=4, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+        vocab_size=512, ssm_state=8, d_inner=128, ssm_head_dim=16,
+        attn_every=2)

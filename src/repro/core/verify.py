@@ -1,0 +1,138 @@
+"""Functional verification of synthesized kernels against numpy oracles.
+
+Lays out real (frame-rows x P) arrays in the virtual machine's memory,
+initializes the kernel's register state, executes the *scheduled* body T
+times, and compares the written output region against a pure-numpy stencil.
+This is the paper's "simulate ... to debug the code for results correctness"
+loop (sect. 4.1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from .scheduler import greedy_schedule
+from .simulator import Machine
+from .synth import StencilConfig, SynthKernel, synth_stencil
+
+
+@dataclasses.dataclass
+class VerifyResult:
+    ok: bool
+    max_abs_err: float
+    produced: np.ndarray
+    expected: np.ndarray
+
+
+def _weights(cfg: StencilConfig, rng: np.random.Generator) -> Dict:
+    if cfg.points == 3:
+        return {"w": rng.uniform(0.5, 1.5, size=2)}          # [edge, center]
+    if cfg.points == 7:
+        return {"w": rng.uniform(0.5, 1.5, size=4)}          # [wc, wk, wi, wj]
+    return {"w": rng.uniform(0.5, 1.5, size=(2, 2, 2))}      # w[|di|,|dj|,|dk|]
+
+
+def _oracle(cfg: StencilConfig, a: np.ndarray, w) -> np.ndarray:
+    """a: (I, J, P) frame; returns full-frame result (valid in the interior)."""
+    r = np.zeros_like(a)
+    if cfg.points == 3:
+        r[:, :, 1:-1] = (w[0] * a[:, :, :-2] + w[1] * a[:, :, 1:-1]
+                         + w[0] * a[:, :, 2:])
+    elif cfg.points == 7:
+        wc, wk, wi, wj = w
+        r[1:-1, 1:-1, 1:-1] = (
+            wc * a[1:-1, 1:-1, 1:-1]
+            + wk * (a[1:-1, 1:-1, :-2] + a[1:-1, 1:-1, 2:])
+            + wj * (a[1:-1, :-2, 1:-1] + a[1:-1, 2:, 1:-1])
+            + wi * (a[:-2, 1:-1, 1:-1] + a[2:, 1:-1, 1:-1]))
+    else:
+        r3 = np.zeros_like(a)
+        for di in (-1, 0, 1):
+            for dj in (-1, 0, 1):
+                for dk in (-1, 0, 1):
+                    r3[1:-1, 1:-1, 1:-1] += (
+                        w[abs(di), abs(dj), abs(dk)]
+                        * a[1 + di:a.shape[0] - 1 + di,
+                            1 + dj:a.shape[1] - 1 + dj,
+                            1 + dk:a.shape[2] - 1 + dk])
+        r = r3
+    return r
+
+
+def run_kernel(cfg: StencilConfig, t_iters: int = 8, seed: int = 0,
+               kern: Optional[SynthKernel] = None,
+               schedule: bool = True) -> VerifyResult:
+    kern = kern or synth_stencil(cfg)
+    rng = np.random.default_rng(seed)
+    w = _weights(cfg, rng)["w"]
+
+    frame_i = max(r[0] for r in kern.rows) + 1
+    frame_j = max(r[1] for r in kern.rows) + 1
+    p_words = 2 * (t_iters * kern.k_steps) + 8
+    a = rng.standard_normal((frame_i, frame_j, p_words))
+
+    m = Machine(mem_words=1 << 18)
+    a_base = 64                          # byte addr, 16B aligned
+    row_stride = p_words * 8
+    # R array origin: staggered by 8 bytes for straddling result pairs so the
+    # quad stores land on 16-byte boundaries (paper sect. 5.4 remark).
+    r0 = a_base + frame_i * frame_j * row_stride + 64
+    if not kern.aligned_results:
+        r0 += 8
+    m.write_array(a_base, a)
+
+    # initial register state
+    k0 = 2 if kern.aligned_results else 0   # first k of the first iteration
+    for reg, spec in kern.init_fprs.items():
+        tag, _, arg = spec.partition(":")
+        if tag == "W3":
+            m.fpr[reg] = (float(w[0]), float(w[1]))
+        elif tag == "W27":
+            p, q = (int(x) for x in arg.split(","))
+            m.fpr[reg] = (float(w[p, q, 0]), float(w[p, q, 1]))
+        elif tag == "W7kc":
+            m.fpr[reg] = (float(w[0]), float(w[1]))
+        elif tag == "W7ij":
+            m.fpr[reg] = (float(w[2]), float(w[3]))
+        else:
+            ii, jj = (int(x) for x in arg.split(",")[:2])
+            row = a[ii, jj]
+            if tag in ("X3",):                       # [a_0 | a_1]
+                m.fpr[reg] = (float(row[0]), float(row[1]))
+            elif tag == "X7":                        # [a_{k0-1} | a_{k0}]
+                m.fpr[reg] = (float(row[k0 - 1]), float(row[k0]))
+            elif tag == "Qm1":                       # [a_{k0-2} | a_{k0-1}]
+                m.fpr[reg] = (float(row[k0 - 2]), float(row[k0 - 1]))
+            elif tag in ("Q", "Q7"):                 # [a_{k0} | a_{k0+1}]
+                m.fpr[reg] = (float(row[k0]), float(row[k0 + 1]))
+            else:  # pragma: no cover
+                raise ValueError(spec)
+
+    ks = 1 if not kern.aligned_results else k0   # k index of first stored word
+    for (ii, jj), g in kern.row_gpr.items():
+        m.gpr[g] = a_base + (ii * frame_j + jj) * row_stride + 8 * k0
+    for (i, j), g in kern.out_gpr.items():
+        m.gpr[g] = r0 + (i * frame_j + j) * row_stride + 8 * ks
+
+    body = kern.body
+    if schedule:
+        sched = greedy_schedule(kern.body)
+        body = [kern.body[i] for i in sched.order]
+    for _ in range(t_iters):
+        m.execute(body)
+
+    expected_full = _oracle(cfg, a, w)
+    n_written = 2 * t_iters * kern.k_steps
+    prod_rows, exp_rows = [], []
+    for (i, j) in kern.out_rows:
+        base = r0 + (i * frame_j + j) * row_stride + 8 * ks
+        prod_rows.append(m.read_array(base, n_written))
+        exp_rows.append(expected_full[i, j, ks:ks + n_written])
+    produced = np.stack(prod_rows)
+    expected = np.stack(exp_rows)
+    err = float(np.max(np.abs(produced - expected))) if produced.size else 0.0
+    ok = bool(np.allclose(produced, expected, rtol=1e-12, atol=1e-12))
+    return VerifyResult(ok, err, produced, expected)

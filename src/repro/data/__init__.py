@@ -1,0 +1,1 @@
+from .pipeline import SyntheticDataset, make_batch_specs  # noqa: F401

@@ -1,0 +1,42 @@
+"""Optimization feature flags for A/B perf measurement (EXPERIMENTS.md Perf).
+
+Each beyond-baseline optimization is gated so the dry-run can measure a cell
+with and without it under identical code + metric:
+
+  H1 megatron_sharding: role-aware TP dims (column-parallel in-projections,
+     row-parallel out-projections) instead of largest-divisible-dim.
+  H2 banded_attention: sliding-window prefill reads only the reachable key
+     band per query chunk (O(L*W) instead of O(L^2)).
+  H3 ssm_small_chunk + ssm_bf16_scan: Lc=32 scan chunks (fewer associative
+     levels) and bf16 scan-tensor storage for mamba1.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+FLAGS: Dict[str, bool] = {
+    "megatron_sharding": True,
+    # row-parallel out-projections measured WORSE at arctic scale (f32
+    # cotangent psums outweigh the removed re-gathers) -- kept off;
+    # see EXPERIMENTS.md Perf arctic-H1 (refuted)
+    "megatron_row_parallel": False,
+    "banded_attention": True,
+    # smaller scan chunks measured WORSE (4x more bodies -> more boundary
+    # collectives/overhead) -- kept off; falcon-H3a (refuted)
+    "ssm_small_chunk": False,
+    "ssm_bf16_scan": True,
+    # FSDP for inference cells replaced by TP-only weights (no per-layer
+    # param gathers at serve time) -- mixtral-H2b
+    "inference_fsdp": False,
+}
+
+
+def set_flag(name: str, value: bool) -> None:
+    if name not in FLAGS:
+        raise KeyError(f"unknown flag {name}; have {sorted(FLAGS)}")
+    FLAGS[name] = value
+
+
+def flag(name: str) -> bool:
+    return FLAGS[name]

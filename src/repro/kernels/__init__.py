@@ -1,0 +1,8 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU; TPU is the target)."""
+
+from .flash_attention import attention_ref, flash_attention  # noqa: F401
+from .mamba_scan import mamba_scan, mamba_scan_ref  # noqa: F401
+from .stencil3 import stencil3, stencil3_ref  # noqa: F401
+from .stencil7 import stencil7, stencil7_ref  # noqa: F401
+from .stencil27 import stencil27, stencil27_ref  # noqa: F401
+from .stencil_mxu import stencil27_mxu, stencil27_mxu_ref  # noqa: F401

@@ -1,0 +1,61 @@
+"""Pallas TPU flash-attention kernel (blocked online softmax).
+
+Streaming form of attention in the paper's sense: the key/value sequence is
+streamed through VMEM in blocks along a sequential grid axis while the
+(m, l, acc) running statistics persist in VMEM scratch -- the same
+persistent-state steady-state loop as the PPC450 stream kernels.  Supports
+GQA (kv-head block selected by query head in the index map), causal masking
+and sliding windows (banded attention: the 1-D stencil access pattern).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def flash_attention_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                           *, scale: float, causal: bool, window: int | None,
+                           q_offset: int, bq: int, bk: int, nk: int):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (Bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)          # (Bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)          # (Bk, D)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (Bq, Bk)
+
+    iq = pl.program_id(2)
+    qi = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + q_offset
+    ki = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), dtype=bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= qi - ki < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                          # (Bq, 1)
+    m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    m_scr[...] = m_cur
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        # fully-masked rows (outside the window) produce l == 0; emit zeros
+        l = l_scr[...]
+        safe = jnp.where(l > 0, l, 1.0)
+        o_ref[0, 0] = (acc_scr[...] / safe).astype(o_ref.dtype)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for (GQA / causal / sliding-window) attention."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True,
+                  window: Optional[int] = None,
+                  q_offset: int = 0) -> jnp.ndarray:
+    """q: (B, H, Lq, D); k, v: (B, Hkv, Lk, D).  H % Hkv == 0.
+
+    ``q_offset``: global position of q[.., 0, .] relative to k (decode step:
+    q_offset = Lk - Lq).  ``window``: only attend to keys within the last
+    ``window`` positions (Mistral/StarCoder2-style sliding window).
+    """
+    b, h, lq, dh = q.shape
+    hkv = k.shape[1]
+    group = h // hkv
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / jnp.sqrt(float(dh))
+    qi = jnp.arange(lq)[:, None] + q_offset
+    ki = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((lq, k.shape[2]), dtype=bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= qi - ki < window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)
+                      ).astype(q.dtype)

@@ -1,0 +1,2 @@
+from .ops import mamba_scan  # noqa: F401
+from .ref import mamba_scan_ref  # noqa: F401

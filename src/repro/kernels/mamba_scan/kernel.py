@@ -1,0 +1,49 @@
+"""Pallas TPU kernel for the Mamba-1 selective scan.
+
+Streaming structure following the paper's steady-state loop: the grid walks
+(batch, L/chunk) with the chunk axis sequential; the carried state h lives in
+a VMEM scratch buffer across grid steps (the PPC450 kernels' persistent
+stream registers).  Within a chunk the linear recurrence is solved by an
+associative scan over (decay, input) pairs -- log-depth dense VPU work with
+decays in (0, 1] (numerically stable), leaving one sequential dependency per
+chunk instead of per step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def mamba_scan_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref,
+                      h_scratch):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scratch[...] = jnp.zeros_like(h_scratch)
+
+    x = x_ref[0].astype(jnp.float32)        # (Lc, D)
+    dt = dt_ref[0].astype(jnp.float32)      # (Lc, D)
+    a = a_ref[...].astype(jnp.float32)      # (D, N)
+    bm = b_ref[0].astype(jnp.float32)       # (Lc, N)
+    c = c_ref[0].astype(jnp.float32)        # (Lc, N)
+    d = d_ref[...].astype(jnp.float32)      # (D,)
+    h0 = h_scratch[...]                     # (D, N)
+
+    # per-step decay and driven input: h_t = decay_t * h_{t-1} + u_t
+    decay = jnp.exp(dt[:, :, None] * a[None])               # (Lc, D, N)
+    u = (dt * x)[:, :, None] * bm[:, None, :]               # (Lc, D, N)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    cum_a, cum_b = jax.lax.associative_scan(combine, (decay, u), axis=0)
+    h = cum_a * h0[None] + cum_b                            # (Lc, D, N)
+
+    y = jnp.einsum("ldn,ln->ld", h, c) + d[None] * x
+    y_ref[0] = y.astype(y_ref.dtype)
+    h_scratch[...] = h[-1]

@@ -1,0 +1,2 @@
+from .ops import stencil27  # noqa: F401
+from .ref import stencil27_ref  # noqa: F401

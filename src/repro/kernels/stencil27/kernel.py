@@ -1,0 +1,32 @@
+"""Pallas TPU kernel for the symmetric 27-point stencil.
+
+Decomposition mirrors the paper's synthesis: the 27-point operator is nine
+3-point k-kernels summed over the (di, dj) plane neighbourhood (sect. 3.1).
+On TPU each (i +- 1) plane contributes through its four symmetric neighbour
+sums (centre / j-edges / k-edges / jk-corners), weighted by
+w[|di|] x {(0,0), (1,0), (0,1), (1,1)} -- 12 FMAs per point over three
+planes, all on the VPU with k on the lane axis.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .._stencil_common import (interior_mask, shifted_planes,
+                               sym_neighbor_sums)
+
+
+def stencil27_kernel(a_prev, a_cur, a_next, w_ref, o_ref, *, bi: int,
+                     m_total: int):
+    i_blk = pl.program_id(0)
+    w = w_ref[...]
+    up, mid, down = shifted_planes(a_prev[...], a_cur[...], a_next[...])
+    acc = jnp.zeros(mid.shape, dtype=jnp.float32)
+    for plane, wi in ((mid, 0), (up, 1), (down, 1)):
+        c0, cj, ck, cjk = sym_neighbor_sums(plane.astype(jnp.float32))
+        acc = (acc + w[wi, 0, 0] * c0 + w[wi, 1, 0] * cj
+               + w[wi, 0, 1] * ck + w[wi, 1, 1] * cjk)
+    n, p = mid.shape[1], mid.shape[2]
+    mask = interior_mask(bi, n, p, i_blk, m_total)
+    o_ref[...] = jnp.where(mask, acc, 0.0).astype(o_ref.dtype)

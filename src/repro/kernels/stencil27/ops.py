@@ -1,0 +1,21 @@
+"""Jitted public entry point for the 27-point Pallas stencil."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .._stencil_common import pick_block_i, stencil_pallas_call
+from .kernel import stencil27_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_i", "interpret"))
+def stencil27(a: jax.Array, w: jax.Array, block_i: int | None = None,
+              interpret: bool = True) -> jax.Array:
+    """Apply the symmetric 27-point stencil; w has shape (2, 2, 2)."""
+    if block_i is None:
+        block_i = pick_block_i(*a.shape, a.dtype.itemsize)
+    w = w.astype(jnp.float32)
+    return stencil_pallas_call(stencil27_kernel, a, w, block_i, interpret)

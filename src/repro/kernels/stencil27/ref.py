@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the symmetric 27-point stencil (Dirichlet boundary).
+
+Weights w[|di|, |dj|, |dk|] -- 8 unique coefficients (paper sect. 3.1):
+symmetry along but not between the three dimensions.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def stencil27_ref(a: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    assert w.shape == (2, 2, 2)
+    acc = jnp.zeros_like(a[1:-1, 1:-1, 1:-1])
+    for di in (-1, 0, 1):
+        for dj in (-1, 0, 1):
+            for dk in (-1, 0, 1):
+                sl = a[1 + di:a.shape[0] - 1 + di,
+                       1 + dj:a.shape[1] - 1 + dj,
+                       1 + dk:a.shape[2] - 1 + dk]
+                acc = acc + w[abs(di), abs(dj), abs(dk)] * sl
+    return jnp.zeros_like(a).at[1:-1, 1:-1, 1:-1].set(acc)

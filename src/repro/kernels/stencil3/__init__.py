@@ -1,0 +1,2 @@
+from .ops import stencil3  # noqa: F401
+from .ref import stencil3_ref  # noqa: F401

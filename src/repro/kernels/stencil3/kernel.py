@@ -1,0 +1,22 @@
+"""Pallas TPU kernel for the 1-D 3-point stencil over batched rows.
+
+The paper's 3-point building block: rows on the sublane axis (the jam), k on
+the lane axis.  Neighbours are lane shifts of the resident block -- the
+load-copy strategy; no halo is needed because each block holds whole rows.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def stencil3_kernel(a_ref, w_ref, o_ref):
+    a = a_ref[...].astype(jnp.float32)
+    w = w_ref[...]
+    acc = (w[1] * a
+           + w[0] * (jnp.roll(a, 1, axis=-1) + jnp.roll(a, -1, axis=-1)))
+    p = a.shape[-1]
+    kk = jax.lax.broadcasted_iota(jnp.int32, a.shape, a.ndim - 1)
+    mask = (kk > 0) & (kk < p - 1)
+    o_ref[...] = jnp.where(mask, acc, 0.0).astype(o_ref.dtype)

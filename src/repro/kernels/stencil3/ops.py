@@ -1,0 +1,39 @@
+"""Jitted public entry point for the batched 1-D 3-point Pallas stencil."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .kernel import stencil3_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def stencil3(a: jax.Array, w: jax.Array, block_rows: int | None = None,
+             interpret: bool = True) -> jax.Array:
+    """Apply the symmetric 3-point stencil along the last axis.
+
+    ``a``: (rows, P) (flatten higher dims first); ``w`` = (w_edge, w_center).
+    """
+    rows, p = a.shape
+    if block_rows is None:
+        block_rows = rows
+        for cand in (256, 128, 64, 32, 16, 8):
+            if rows % cand == 0 and cand * p * a.dtype.itemsize <= 4 << 20:
+                block_rows = cand
+                break
+    if rows % block_rows != 0:
+        raise ValueError(f"block_rows {block_rows} must divide rows={rows}")
+    w = w.astype(jnp.float32)
+    return pl.pallas_call(
+        stencil3_kernel,
+        grid=(rows // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, p), lambda i: (i, 0)),
+                  pl.BlockSpec(w.shape, lambda i: (0,))],
+        out_specs=pl.BlockSpec((block_rows, p), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        interpret=interpret,
+    )(a, w)

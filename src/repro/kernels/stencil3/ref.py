@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the symmetric 3-point stencil along the last axis."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def stencil3_ref(a: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """w = (w_edge, w_center); boundary (first/last k) left zero."""
+    core = w[0] * a[..., :-2] + w[1] * a[..., 1:-1] + w[0] * a[..., 2:]
+    return jnp.zeros_like(a).at[..., 1:-1].set(core)

@@ -1,0 +1,2 @@
+from .ops import stencil7  # noqa: F401
+from .ref import stencil7_ref  # noqa: F401

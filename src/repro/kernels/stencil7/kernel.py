@@ -1,0 +1,29 @@
+"""Pallas TPU kernel for the symmetric 7-point stencil.
+
+The centre plane carries the k-direction 3-point plus the j-edge sum; the
+i +- 1 planes contribute only their centres (the paper's aligned-quad side
+streams).  7 FMAs per point, k on the lane axis.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .._stencil_common import interior_mask, shifted_planes
+
+
+def stencil7_kernel(a_prev, a_cur, a_next, w_ref, o_ref, *, bi: int,
+                    m_total: int):
+    i_blk = pl.program_id(0)
+    w = w_ref[...]
+    wc, wk, wj, wi = w[0], w[1], w[2], w[3]
+    up, mid, down = shifted_planes(a_prev[...], a_cur[...], a_next[...])
+    mid32 = mid.astype(jnp.float32)
+    acc = (wc * mid32
+           + wk * (jnp.roll(mid32, 1, axis=-1) + jnp.roll(mid32, -1, axis=-1))
+           + wj * (jnp.roll(mid32, 1, axis=-2) + jnp.roll(mid32, -1, axis=-2))
+           + wi * (up.astype(jnp.float32) + down.astype(jnp.float32)))
+    n, p = mid.shape[1], mid.shape[2]
+    mask = interior_mask(bi, n, p, i_blk, m_total)
+    o_ref[...] = jnp.where(mask, acc, 0.0).astype(o_ref.dtype)

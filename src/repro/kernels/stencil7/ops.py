@@ -1,0 +1,21 @@
+"""Jitted public entry point for the 7-point Pallas stencil."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .._stencil_common import pick_block_i, stencil_pallas_call
+from .kernel import stencil7_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_i", "interpret"))
+def stencil7(a: jax.Array, w: jax.Array, block_i: int | None = None,
+             interpret: bool = True) -> jax.Array:
+    """Apply the symmetric 7-point stencil; w = (wc, wk, wj, wi)."""
+    if block_i is None:
+        block_i = pick_block_i(*a.shape, a.dtype.itemsize)
+    w = w.astype(jnp.float32)
+    return stencil_pallas_call(stencil7_kernel, a, w, block_i, interpret)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the symmetric 7-point stencil (Dirichlet boundary).
+
+Weights (wc, wk, wj, wi) -- 4 unique coefficients (paper sect. 3.1).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def stencil7_ref(a: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    wc, wk, wj, wi = w[0], w[1], w[2], w[3]
+    core = (wc * a[1:-1, 1:-1, 1:-1]
+            + wk * (a[1:-1, 1:-1, :-2] + a[1:-1, 1:-1, 2:])
+            + wj * (a[1:-1, :-2, 1:-1] + a[1:-1, 2:, 1:-1])
+            + wi * (a[:-2, 1:-1, 1:-1] + a[2:, 1:-1, 1:-1]))
+    return jnp.zeros_like(a).at[1:-1, 1:-1, 1:-1].set(core)

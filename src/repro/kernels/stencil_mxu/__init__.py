@@ -1,0 +1,2 @@
+from .ops import stencil27_mxu  # noqa: F401
+from .ref import stencil27_mxu_ref  # noqa: F401

@@ -1,0 +1,24 @@
+"""Jitted entry point for the MXU-form 27-point stencil."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .._stencil_common import pick_block_i, stencil_pallas_call
+from .kernel import band_matrices, stencil27_mxu_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_i", "interpret"))
+def stencil27_mxu(a: jax.Array, w: jax.Array, block_i: int | None = None,
+                  interpret: bool = True) -> jax.Array:
+    """27-point stencil via banded MXU matmuls; w: (2, 2, 2) as stencil27.
+
+    w[.,.,0] is the k-centre weight, w[.,.,1] the k-edge weight.
+    """
+    if block_i is None:
+        block_i = pick_block_i(*a.shape, a.dtype.itemsize)
+    t = band_matrices(w.astype(jnp.float32), a.shape[-1])
+    return stencil_pallas_call(stencil27_mxu_kernel, a, t, block_i, interpret)

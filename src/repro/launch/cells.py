@@ -1,0 +1,42 @@
+"""Cell definitions for the dry-run matrix (import-safe: no env mutation)."""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data import make_batch_specs
+from repro.models.common import SHAPES
+
+
+def input_specs(arch: str, shape_name: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of a cell.
+
+    Weak-type-correct, shardable, no device allocation: the dry-run lowers
+    against these.  Training/prefill cells get the token/label/frontend
+    batch; decode cells get the one-token request batch (the cache/state
+    specs are derived from the model via eval_shape in launch/dryrun.py).
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return make_batch_specs(cfg, shape)
+    if shape.kind == "prefill":
+        specs = make_batch_specs(cfg, shape)
+        specs.pop("labels")
+        return specs
+    return {"tokens": jax.ShapeDtypeStruct((shape.global_batch, 1),
+                                           jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def skip_reason(arch: str, shape: str) -> Optional[str]:
+    cfg = get_config(arch)
+    if shape == "long_500k" and not cfg.subquadratic:
+        return ("full quadratic attention: 500k-token decode infeasible "
+                "by design (DESIGN.md sect. 5); arch has no sub-quadratic "
+                "path (not SSM/hybrid/SWA)")
+    return None

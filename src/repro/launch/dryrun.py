@@ -1,0 +1,312 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves the distribution config is coherent without real
+hardware: ``jax.jit(step).lower(**ShapeDtypeStructs).compile()`` must succeed
+on the production meshes, and the compiled artifact yields
+``memory_analysis()`` (fits-per-device proof) and ``cost_analysis()``
+(FLOPs/bytes for the roofline), plus per-collective byte counts parsed from
+the optimized HLO.  Results are written to ``artifacts/dryrun/*.json`` which
+``benchmarks/roofline.py`` consumes.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --cells all --mesh both
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCH_IDS, get_config  # noqa: E402
+from repro.data import make_batch_specs  # noqa: E402
+from repro.launch.cells import skip_reason  # noqa: E402
+from repro.launch.hlo_analysis import analyze_hlo  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.sharding.ctx import use_mesh  # noqa: E402
+from repro.models import build_model, model_flops, param_count  # noqa: E402
+from repro.models.common import SHAPES  # noqa: E402
+from repro.optim import build_optimizer  # noqa: E402
+from repro.runtime import TrainConfig, make_train_step  # noqa: E402
+from repro.sharding import (batch_sharding, decode_state_sharding,  # noqa: E402
+                            param_sharding, plan_summary)
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+_MEGATRON_MASTER = None   # captured from flags (after --ablate) on first cell
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "s32": 4,
+                "u64": 8, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|s64|s32|s16|s8|u64|u32|u16|u8|"
+                       r"pred|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Sum result-shape bytes of every collective op in the optimized HLO."""
+    stats: Dict[str, Dict[str, float]] = {
+        c: {"count": 0, "bytes": 0} for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w\.\-]+\s*=\s*(\([^)]*\)|[^=]*?)\s*"
+                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute)(-start|-done)?\(", line)
+        if not m or (m.group(3) == "-done"):
+            continue
+        kind = m.group(2)
+        stats[kind]["count"] += 1
+        stats[kind]["bytes"] += _shape_bytes(m.group(1))
+    return stats
+
+
+def _choose_optimizer(cfg) -> str:
+    # >=100B params: factored second moment or the fp32 moments don't fit.
+    return "adafactor" if param_count(cfg) > 100e9 else "adamw"
+
+
+def build_cell(arch: str, shape_name: str, mesh):
+    """Returns (fn, arg_specs(shapes), in_shardings, out_shardings, meta)."""
+    from repro.flags import FLAGS
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    fsdp = param_count(cfg) > 20e9
+    key = jax.random.PRNGKey(0)
+    # Empirically-selected sharding policy (EXPERIMENTS.md Perf, H1d):
+    # role-aware Megatron rules win on every inference cell and on
+    # MoE/enc-dec training, but lose to the size heuristic on dense/SSM
+    # training (backward collective patterns differ); row-parallel
+    # out-projections only ever win without a backward pass.  The master
+    # switch (possibly --ablate'd) gates the whole policy; per-cell values
+    # are derived fresh so cells don't leak state into each other.
+    global _MEGATRON_MASTER
+    if _MEGATRON_MASTER is None:
+        _MEGATRON_MASTER = FLAGS["megatron_sharding"]
+    FLAGS["megatron_sharding"] = _MEGATRON_MASTER and (
+        shape.kind != "train" or cfg.family in ("moe", "encdec"))
+    FLAGS["megatron_row_parallel"] = (_MEGATRON_MASTER
+                                      and shape.kind != "train")
+
+    if shape.kind == "train":
+        opt = build_optimizer(_choose_optimizer(cfg))
+        params_s = jax.eval_shape(model.init, key)
+        opt_s = jax.eval_shape(opt.init, params_s)
+        state_s = {"params": params_s, "opt": opt_s,
+                   "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        p_shard, notes = param_sharding(cfg, state_s, mesh, fsdp=fsdp)
+        batch_specs = make_batch_specs(cfg, shape)
+        b_shard = batch_sharding(shape, batch_specs, mesh)
+        # >=100B: accumulation microbatches cut the remat activation stacks
+        # below the per-device HBM budget; but each microbatch re-gathers
+        # FSDP params, so accum trades HBM for ICI (EXPERIMENTS.md Perf)
+        accum = int(os.environ.get("REPRO_ACCUM",
+                                   "4" if param_count(cfg) > 100e9 else "1"))
+        tc = TrainConfig(accum=accum)
+        lr = lambda s: jnp.asarray(1e-4, jnp.float32)
+        step = make_train_step(model, opt, lr, tc)
+        meta = {"optimizer": opt.name, "fsdp": fsdp, "accum": accum,
+                "plan": plan_summary(notes)}
+        out_shard = (p_shard, {"loss": NamedSharding(mesh, P()),
+                               "gnorm": NamedSharding(mesh, P()),
+                               "lr": NamedSharding(mesh, P())})
+        return (step, (state_s, batch_specs), (p_shard, b_shard), out_shard,
+                meta, model_flops(cfg, shape.seq_len * shape.global_batch,
+                                  "train"))
+
+    if shape.kind == "prefill":
+        from repro.flags import flag
+        params_s = jax.eval_shape(model.init, key)
+        # inference: TP-only weights avoid per-layer FSDP gathers; a 47B
+        # bf16 model fits a 16-way model axis (mixtral-H2b)
+        p_shard, notes = param_sharding(cfg, params_s, mesh,
+                                        fsdp=fsdp and flag("inference_fsdp"))
+        batch_specs = make_batch_specs(cfg, shape)
+        batch_specs.pop("labels")
+        b_shard = batch_sharding(shape, batch_specs, mesh)
+        fn = model.prefill_fn
+        meta = {"fsdp": fsdp, "plan": plan_summary(notes)}
+        return (fn, (params_s, batch_specs), (p_shard, b_shard), None, meta,
+                model_flops(cfg, shape.seq_len * shape.global_batch,
+                            "inference"))
+
+    # decode: one new token against a cache of seq_len
+    params_s = jax.eval_shape(model.init, key)
+    p_shard, _ = param_sharding(cfg, params_s, mesh, fsdp=False)
+    b = shape.global_batch
+    frontend_s = None
+    if cfg.family == "encdec":
+        from repro.models.encdec import ENC_LEN
+        frontend_s = jax.ShapeDtypeStruct((b, ENC_LEN, cfg.frontend_dim),
+                                          jnp.float32)
+    if frontend_s is not None:
+        state_s = jax.eval_shape(
+            lambda p, f: model.init_decode_state(p, b, shape.seq_len,
+                                                 frontend=f),
+            params_s, frontend_s)
+    else:
+        state_s = jax.eval_shape(
+            lambda p: model.init_decode_state(p, b, shape.seq_len),
+            params_s)
+    st_shard = decode_state_sharding(cfg, state_s, mesh)
+    tok_s = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    tok_shard = batch_sharding(shape, {"tokens": tok_s}, mesh)["tokens"]
+    pos_s = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = model.decode_step
+    meta = {"cache_len": shape.seq_len}
+    return (fn, (params_s, state_s, tok_s, pos_s),
+            (p_shard, st_shard, tok_shard, NamedSharding(mesh, P())), None,
+            meta, model_flops(cfg, b, "inference"))
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             out_dir: str = ARTIFACT_DIR) -> Dict[str, Any]:
+    os.makedirs(out_dir, exist_ok=True)
+    result: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                              "mesh": mesh_name}
+    reason = skip_reason(arch, shape_name)
+    tag = f"{arch}__{shape_name}__{mesh_name}"
+    if reason:
+        result["status"] = "skipped"
+        result["reason"] = reason
+        _write(out_dir, tag, result)
+        print(f"[dryrun] SKIP {tag}: {reason}")
+        return result
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    try:
+        fn, specs, in_shard, out_shard, meta, mflops = build_cell(
+            arch, shape_name, mesh)
+        t0 = time.time()
+        with mesh, use_mesh(mesh):
+            jitted = jax.jit(fn, in_shardings=in_shard,
+                             out_shardings=out_shard)
+            lowered = jitted.lower(*specs)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0] if cost else {}
+        hlo = compiled.as_text()
+        # trip-count-aware per-device totals (cost_analysis counts loop
+        # bodies once; analyze_hlo multiplies known_trip_count through)
+        deep = analyze_hlo(hlo)
+        result.update({
+            "status": "ok",
+            "n_devices": n_dev,
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "meta": {k: v for k, v in meta.items() if k != "plan"},
+            "plan": meta.get("plan", ""),
+            "model_flops": mflops,
+            "hlo_flops_raw": float(cost.get("flops", -1)) if cost else -1,
+            "hlo_bytes_raw": (float(cost.get("bytes accessed", -1))
+                              if cost else -1),
+            "hlo_flops": deep["flops"],
+            "hlo_bytes": deep["bytes"],
+            "collectives": deep["collectives"],
+            "collective_bytes_total": deep["collective_bytes"],
+        })
+        if mem is not None:
+            result["memory"] = {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", -1),
+                "output_bytes": getattr(mem, "output_size_in_bytes", -1),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", -1),
+                "generated_code_bytes":
+                    getattr(mem, "generated_code_size_in_bytes", -1),
+            }
+            print(f"[dryrun] {tag}: memory_analysis "
+                  f"args={result['memory']['argument_bytes']/1e9:.2f}GB "
+                  f"temp={result['memory']['temp_bytes']/1e9:.2f}GB "
+                  f"out={result['memory']['output_bytes']/1e9:.2f}GB")
+        print(f"[dryrun] {tag}: OK devices={n_dev} "
+              f"lower={t_lower:.1f}s compile={t_compile:.1f}s "
+              f"hlo_flops={result['hlo_flops']:.3e} "
+              f"coll_bytes={result['collective_bytes_total']:.3e}")
+    except Exception as e:  # noqa: BLE001
+        result["status"] = "error"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] FAIL {tag}: {result['error']}")
+    _write(out_dir, tag, result)
+    return result
+
+
+def _write(out_dir: str, tag: str, result: Dict) -> None:
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(result, f, indent=1, default=str)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS + [None])
+    ap.add_argument("--shape", default=None,
+                    choices=list(SHAPES.keys()) + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--cells", default=None,
+                    help="'all' or comma list arch:shape")
+    ap.add_argument("--out", default=ARTIFACT_DIR)
+    ap.add_argument("--ablate", default="",
+                    help="comma list of optimization flags to disable "
+                         "(A/B baseline runs; see repro.flags)")
+    args = ap.parse_args()
+
+    if args.ablate:
+        from repro.flags import set_flag
+        for name in args.ablate.split(","):
+            set_flag(name.strip(), False)
+        print(f"[dryrun] ablated: {args.ablate}")
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.cells == "all":
+        cells = [(a, s) for a in ARCH_IDS for s in SHAPES]
+    elif args.cells:
+        cells = [tuple(c.split(":")) for c in args.cells.split(",")]
+    else:
+        cells = [(args.arch, args.shape)]
+
+    n_fail = 0
+    for (a, s) in cells:
+        for m in meshes:
+            r = run_cell(a, s, m, out_dir=args.out)
+            n_fail += r["status"] == "error"
+    print(f"[dryrun] done; {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Production mesh construction (single-pod 16x16, multi-pod 2x16x16).
+
+A function, not a module-level constant: importing this module never touches
+jax device state (device count is locked at first backend init, and tests /
+benches must see the single real CPU device).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh for unit tests on host-platform placeholder devices."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

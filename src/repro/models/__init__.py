@@ -1,0 +1,2 @@
+from .api import Model, active_param_count, build_model, model_flops, param_count  # noqa: F401
+from .common import SHAPES, ArchConfig, ShapeConfig, pad_vocab  # noqa: F401

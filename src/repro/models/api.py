@@ -1,0 +1,140 @@
+"""Unified model API: one protocol across dense/MoE/SSM/hybrid/enc-dec/VLM."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, hybrid, lm, ssm_lm
+from .common import ArchConfig, Params, pad_vocab
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable[[jax.Array], Params]
+    loss_fn: Callable[[Params, Dict], jax.Array]
+    apply_fn: Callable[[Params, Dict], jax.Array]          # full logits
+    init_decode_state: Callable[..., Params]
+    decode_step: Callable[..., Any]
+    prefill_fn: Callable[[Params, Dict], jax.Array] = None  # last-token logits
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return Model(
+            cfg=cfg,
+            init=lambda key: lm.init_lm(key, cfg),
+            loss_fn=lambda p, b: lm.lm_loss(p, cfg, b),
+            apply_fn=lambda p, b: lm.lm_apply(p, cfg, b["tokens"],
+                                              b.get("frontend"),
+                                              remat=False)[0],
+            prefill_fn=lambda p, b: lm.lm_apply(p, cfg, b["tokens"],
+                                                b.get("frontend"), remat=True,
+                                                last_only=True)[0],
+            init_decode_state=lambda p, bs, ms, frontend=None:
+                lm.init_kv_cache(cfg, bs, ms),
+            decode_step=lambda p, st, tok, pos:
+                lm.lm_decode_step(p, cfg, st, tok, pos),
+        )
+    if cfg.family == "ssm":
+        return Model(
+            cfg=cfg,
+            init=lambda key: ssm_lm.init_ssm_lm(key, cfg),
+            loss_fn=lambda p, b: ssm_lm.ssm_lm_loss(p, cfg, b),
+            apply_fn=lambda p, b: ssm_lm.ssm_lm_apply(p, cfg, b["tokens"],
+                                                      remat=False)[0],
+            prefill_fn=lambda p, b: ssm_lm.ssm_lm_apply(
+                p, cfg, b["tokens"], remat=True, last_only=True)[0],
+            init_decode_state=lambda p, bs, ms, frontend=None:
+                ssm_lm.init_ssm_lm_state(cfg, bs),
+            decode_step=lambda p, st, tok, pos:
+                ssm_lm.ssm_lm_decode_step(p, cfg, st, tok, pos),
+        )
+    if cfg.family == "hybrid":
+        return Model(
+            cfg=cfg,
+            init=lambda key: hybrid.init_hybrid(key, cfg),
+            loss_fn=lambda p, b: hybrid.hybrid_loss(p, cfg, b),
+            apply_fn=lambda p, b: hybrid.hybrid_apply(p, cfg, b["tokens"],
+                                                      remat=False)[0],
+            prefill_fn=lambda p, b: hybrid.hybrid_apply(
+                p, cfg, b["tokens"], remat=True, last_only=True)[0],
+            init_decode_state=lambda p, bs, ms, frontend=None:
+                hybrid.init_hybrid_state(cfg, bs, ms),
+            decode_step=lambda p, st, tok, pos:
+                hybrid.hybrid_decode_step(p, cfg, st, tok, pos),
+        )
+    if cfg.family == "encdec":
+        return Model(
+            cfg=cfg,
+            init=lambda key: encdec.init_encdec(key, cfg),
+            loss_fn=lambda p, b: encdec.encdec_loss(p, cfg, b),
+            apply_fn=lambda p, b: encdec.decode_train(
+                p, cfg, b["tokens"], encdec.encode(p, cfg, b["frontend"],
+                                                   remat=False), remat=False),
+            prefill_fn=lambda p, b: encdec.decode_train(
+                p, cfg, b["tokens"],
+                encdec.encode(p, cfg, b["frontend"], remat=True),
+                remat=True, last_only=True),
+            init_decode_state=lambda p, bs, ms, frontend=None:
+                encdec.init_encdec_state(p, cfg, bs, ms, frontend),
+            decode_step=lambda p, st, tok, pos:
+                encdec.encdec_decode_step(p, cfg, st, tok, pos),
+        )
+    raise ValueError(cfg.family)
+
+
+def param_count(cfg: ArchConfig) -> int:
+    """Analytic parameter count (used for MODEL_FLOPS in the roofline)."""
+    d, f, v = cfg.d_model, cfg.d_ff, pad_vocab(cfg.vocab_size)
+    hd = cfg.hd
+    attn = d * hd * (cfg.n_heads + 2 * cfg.n_kv_heads) + cfg.n_heads * hd * d
+    mlp_p = d * f * (3 if cfg.activation == "swiglu" else 2)
+    emb = v * d * (1 if cfg.tie_embeddings else 2)
+    if cfg.family in ("dense", "vlm"):
+        per_layer = attn + mlp_p + 2 * d
+        return cfg.n_layers * per_layer + emb
+    if cfg.family == "moe":
+        experts = cfg.n_experts * 3 * d * f + d * cfg.n_experts
+        res = (3 * d * (cfg.residual_d_ff or f)
+               if cfg.moe_dense_residual else 0)
+        return cfg.n_layers * (attn + experts + res + 2 * d) + emb
+    di, n = cfg.d_inner, cfg.ssm_state
+    if cfg.family == "ssm":
+        dt_rank = max(1, d // 16)
+        per = (d * 2 * di + di * d + cfg.ssm_conv * di
+               + di * (dt_rank + 2 * n) + dt_rank * di + di * n)
+        return cfg.n_layers * per + emb
+    if cfg.family == "hybrid":
+        per = d * 2 * di + di * d + cfg.ssm_conv * di + di * 2 * n
+        shared = attn + mlp_p
+        return cfg.n_layers * per + shared + emb
+    if cfg.family == "encdec":
+        enc = cfg.enc_layers * (attn + mlp_p + 2 * d)
+        dec = cfg.dec_layers * (2 * attn + mlp_p + 3 * d)
+        return enc + dec + emb
+    raise ValueError(cfg.family)
+
+
+def active_param_count(cfg: ArchConfig) -> int:
+    """Parameters touched per token (MoE: top-k of experts)."""
+    if cfg.family != "moe":
+        return param_count(cfg)
+    d, f = cfg.d_model, cfg.d_ff
+    v = pad_vocab(cfg.vocab_size)
+    hd = cfg.hd
+    attn = d * hd * (cfg.n_heads + 2 * cfg.n_kv_heads) + cfg.n_heads * hd * d
+    act_experts = cfg.top_k * 3 * d * f + d * cfg.n_experts
+    res = 3 * d * (cfg.residual_d_ff or f) if cfg.moe_dense_residual else 0
+    return cfg.n_layers * (attn + act_experts + res + 2 * d) + 2 * v * d
+
+
+def model_flops(cfg: ArchConfig, tokens: int, kind: str = "train") -> float:
+    """6*N_active*D (trains) or 2*N_active*D (inference) -- the roofline's
+    MODEL_FLOPS numerator."""
+    n = active_param_count(cfg)
+    return (6.0 if kind == "train" else 2.0) * n * tokens

@@ -1,0 +1,144 @@
+"""GQA attention with RoPE, sliding windows, and a KV cache.
+
+Two execution paths: ``impl="xla"`` (pure jnp; what the multi-pod dry-run
+lowers, since Pallas TPU kernels cannot be compiled by the CPU stand-in
+backend) and ``impl="pallas"`` (the flash-attention kernel from
+``repro.kernels`` for real TPU deployments / interpret-mode tests).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.flash_attention import flash_attention
+from .common import ArchConfig, Params, init_linear, linear, rope
+
+
+def init_attention(key, cfg: ArchConfig, n_heads: Optional[int] = None,
+                   n_kv: Optional[int] = None) -> Params:
+    nh = n_heads or cfg.n_heads
+    nk = n_kv or cfg.n_kv_heads
+    hd = cfg.hd
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(ks[0], cfg.d_model, nh * hd, cfg.dtype, cfg.qkv_bias),
+        "wk": init_linear(ks[1], cfg.d_model, nk * hd, cfg.dtype, cfg.qkv_bias),
+        "wv": init_linear(ks[2], cfg.d_model, nk * hd, cfg.dtype, cfg.qkv_bias),
+        "wo": init_linear(ks[3], nh * hd, cfg.d_model, cfg.dtype),
+    }
+
+
+def _sdpa_block(q, k, v, causal: bool, window: Optional[int], q_offset,
+                k_offset=0) -> jax.Array:
+    """q: (B, Lq, H, D); k, v: (B, Lk, Hkv, D) -- one dense attention block.
+
+    ``q_offset``/``k_offset``: global positions of q[:,0]/k[:,0].
+    """
+    b, lq, h, dh = q.shape
+    lk, hkv = k.shape[1], k.shape[2]
+    group = h // hkv
+    qg = q.reshape(b, lq, hkv, group, dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(float(dh))
+    qi = jnp.arange(lq)[:, None] + q_offset
+    ki = jnp.arange(lk)[None, :] + k_offset
+    mask = jnp.ones((lq, lk), dtype=bool)
+    if causal:
+        mask = mask & (ki <= qi)
+    if window is not None:
+        mask = mask & (qi - ki < window)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, lq, h, dh).astype(q.dtype)
+
+
+def _sdpa_xla(q, k, v, causal: bool, window: Optional[int], q_offset,
+              chunk: int = 1024) -> jax.Array:
+    """Query-chunked attention: bounds the live score tensor to
+    (B, H, chunk, Lk) -- the flash-attention streaming structure expressed at
+    the XLA level so the dry-run lowers with a sane memory footprint.
+
+    With a sliding window, each q chunk reads only the (window + chunk)-long
+    key band that can attend -- the paper's banded-stencil access pattern,
+    cutting SWA prefill from O(L^2) to O(L*W) flops/bytes
+    (EXPERIMENTS.md Perf, mixtral-H2).
+    """
+    lq = q.shape[1]
+    lk = k.shape[1]
+    if lq <= chunk or lq % chunk != 0:
+        return _sdpa_block(q, k, v, causal, window, q_offset)
+    nq = lq // chunk
+    qc = jnp.moveaxis(q.reshape(q.shape[0], nq, chunk, *q.shape[2:]), 1, 0)
+    offs = q_offset + jnp.arange(nq) * chunk
+
+    from ..flags import flag
+    banded = (flag("banded_attention") and window is not None and causal
+              and window + chunk < lk and (window + chunk) % chunk == 0)
+    klen = min(lk, window + chunk) if window is not None else lk
+
+    def one(args):
+        qi, off = args
+        if banded:
+            # keys in [off + chunk - klen, off + chunk): the reachable band
+            k_start = jnp.clip(off + chunk - klen, 0, lk - klen)
+            kb = jax.lax.dynamic_slice_in_dim(k, k_start, klen, 1)
+            vb = jax.lax.dynamic_slice_in_dim(v, k_start, klen, 1)
+            return _sdpa_block(qi, kb, vb, causal, window, off,
+                               k_offset=k_start)
+        return _sdpa_block(qi, k, v, causal, window, off)
+
+    oc = jax.lax.map(one, (qc, offs))
+    return jnp.moveaxis(oc, 0, 1).reshape(q.shape)
+
+
+def attention(p: Params, x: jax.Array, cfg: ArchConfig,
+              positions: jax.Array,
+              cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+              cache_pos: Optional[jax.Array] = None,
+              causal: bool = True,
+              window: Optional[int] = None,
+              n_heads: Optional[int] = None, n_kv: Optional[int] = None,
+              impl: str = "xla",
+              ) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """x: (B, L, d).  With a cache (decode): k/v appended at ``cache_pos``.
+
+    cache: (k, v) each (B, S_max, Hkv, D).  Returns (out, new_cache).
+    """
+    b, l, _ = x.shape
+    nh = n_heads or cfg.n_heads
+    nk = n_kv or cfg.n_kv_heads
+    hd = cfg.hd
+    q = linear(p["wq"], x).reshape(b, l, nh, hd)
+    k = linear(p["wk"], x).reshape(b, l, nk, hd)
+    v = linear(p["wv"], x).reshape(b, l, nk, hd)
+    if cfg.use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        ck, cv = cache
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, cache_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, cache_pos, 0, 0))
+        new_cache = (ck, cv)
+        k_all, v_all = ck, cv
+        q_offset = cache_pos
+    else:
+        k_all, v_all = k, v
+        q_offset = 0
+
+    if impl == "pallas" and cache is None:
+        o = flash_attention(q.transpose(0, 2, 1, 3), k_all.transpose(0, 2, 1, 3),
+                            v_all.transpose(0, 2, 1, 3), causal=causal,
+                            window=window, q_offset=0)
+        o = o.transpose(0, 2, 1, 3)
+    else:
+        o = _sdpa_xla(q, k_all, v_all, causal, window, q_offset)
+    out = linear(p["wo"], o.reshape(b, l, nh * hd))
+    return out, new_cache

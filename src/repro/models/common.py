@@ -1,0 +1,199 @@
+"""Architecture/shape configs and shared pure-JAX layers (pytree params)."""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 => d_model // n_heads
+    # attention
+    window: Optional[int] = None   # sliding-window size (SWA archs)
+    qkv_bias: bool = False
+    rope_theta: float = 1e6
+    use_rope: bool = True          # enc-dec uses learned absolute positions
+    # mlp
+    activation: str = "swiglu"     # swiglu | gelu | sq_relu
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_dense_residual: bool = False
+    residual_d_ff: int = 0
+    capacity_factor: float = 1.25
+    # SSM
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    d_inner: int = 0
+    ssm_kind: str = ""             # mamba1 | mamba2
+    ssm_head_dim: int = 64
+    # dtype of the materialized (B, Lc, d_inner, N) scan tensors -- the
+    # memory-bound core of mamba1 (EXPERIMENTS.md Perf falcon-H3); combine
+    # math upcasts per level, einsums accumulate f32.
+    ssm_scan_dtype: Any = None     # None => float32
+    # hybrid
+    attn_every: int = 0            # shared attn+MLP block cadence (zamba2)
+    # enc-dec
+    enc_layers: int = 0
+    dec_layers: int = 0
+    # modality frontend stub
+    frontend: str = ""             # "" | "patch" | "frames"
+    frontend_dim: int = 0
+    frontend_len: int = 256
+    # misc
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    dtype: Any = jnp.bfloat16
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def subquadratic(self) -> bool:
+        """Can this arch serve 500k-token contexts? (SSM / SWA archs.)"""
+        return self.family in ("ssm", "hybrid") or self.window is not None
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str                      # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def pad_vocab(vocab: int, multiple: int = 256) -> int:
+    """Pad the embedding table so it shards evenly over the model axis."""
+    return ((vocab + multiple - 1) // multiple) * multiple
+
+
+# ---------------------------------------------------------------------------
+# Primitive layers
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def init_linear(key, d_in: int, d_out: int, dtype, bias: bool = False) -> Params:
+    w = jax.random.normal(key, (d_in, d_out), dtype=jnp.float32)
+    w = (w / math.sqrt(d_in)).astype(dtype)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype=dtype)
+    return p
+
+
+def linear(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., L, n_heads, head_dim); positions: (..., L)."""
+    hd = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., L, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def activation_fn(name: str):
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "sq_relu":            # Nemotron-4 squared ReLU
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+def init_mlp(key, cfg: ArchConfig, d_ff: Optional[int] = None) -> Params:
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.activation == "swiglu":
+        return {"wi": init_linear(ks[0], cfg.d_model, d_ff, cfg.dtype),
+                "wg": init_linear(ks[1], cfg.d_model, d_ff, cfg.dtype),
+                "wo": init_linear(ks[2], d_ff, cfg.d_model, cfg.dtype)}
+    return {"wi": init_linear(ks[0], cfg.d_model, d_ff, cfg.dtype),
+            "wo": init_linear(ks[2], d_ff, cfg.d_model, cfg.dtype)}
+
+
+def mlp(p: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    if cfg.activation == "swiglu":
+        return linear(p["wo"], jax.nn.silu(linear(p["wg"], x))
+                      * linear(p["wi"], x))
+    act = activation_fn(cfg.activation)
+    return linear(p["wo"], act(linear(p["wi"], x)))
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()
+
+
+def chunked_ce_loss(x: jax.Array, labels: jax.Array, mask: jax.Array,
+                    logits_fn, chunk: int = 1024) -> jax.Array:
+    """Cross-entropy without materializing full-sequence logits.
+
+    ``x``: (B, S, d) final hidden states; ``logits_fn(xc) -> (B, c, V)``.
+    Scans over sequence-chunk *indices*, dynamic-slicing x in place (a
+    stacked xs copy would replicate the hidden states; see dry-run notes),
+    so the live logits tensor is (B, chunk, V) -- at 256k vocab x 4k seq the
+    full tensor would be TBs.
+    """
+    from ..sharding.ctx import shard_hint
+    b, s, _ = x.shape
+    if s <= chunk or s % chunk:
+        logits = logits_fn(x)
+        return cross_entropy(logits, labels, mask)
+    n = s // chunk
+    x = shard_hint(x, ("pod", "data"), None, None)
+
+    def body(carry, i):
+        xc = jax.lax.dynamic_slice_in_dim(x, i * chunk, chunk, 1)
+        lc = jax.lax.dynamic_slice_in_dim(labels, i * chunk, chunk, 1)
+        mc = jax.lax.dynamic_slice_in_dim(mask, i * chunk, chunk, 1)
+        logp = jax.nn.log_softmax(logits_fn(xc).astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, lc[..., None], axis=-1)[..., 0]
+        num, den = carry
+        return (num + (nll * mc).sum(), den + mc.sum()), None
+
+    (num, den), _ = jax.lax.scan(
+        jax.checkpoint(body, prevent_cse=False),
+        (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        jnp.arange(n))
+    return num / jnp.maximum(den, 1)

@@ -1,0 +1,185 @@
+"""Encoder-decoder transformer backbone (seamless-m4t family).
+
+The audio frontend is a stub per the assignment: the encoder consumes
+precomputed frame embeddings through a linear projection.  Positions use
+learned absolute embeddings (documented simplification of Seamless's
+relative-position scheme).  Decode caches decoder self-attention KV at the
+full cache length and precomputes encoder cross KV once.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention, init_attention
+from .common import (ArchConfig, Params, chunked_ce_loss, init_linear,
+                     init_mlp, linear, mlp, pad_vocab, rms_norm)
+
+ENC_LEN = 1024     # stub frontend frames fed to the encoder at decode time
+
+
+def _enc_len(cfg: ArchConfig, seq_len: int) -> int:
+    return min(seq_len, 4096)
+
+
+def init_cross_attention(key, cfg: ArchConfig) -> Params:
+    return init_attention(key, cfg)
+
+
+def cross_attention(p: Params, x: jax.Array, enc_kv: Tuple[jax.Array, jax.Array],
+                    cfg: ArchConfig) -> jax.Array:
+    """x: (B, Lq, d); enc_kv: precomputed (k, v) each (B, Lk, H, hd)."""
+    b, lq, _ = x.shape
+    nh, hd = cfg.n_heads, cfg.hd
+    q = linear(p["wq"], x).reshape(b, lq, nh, hd)
+    k, v = enc_kv
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(float(hd))
+    o = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, axis=-1),
+                   v.astype(jnp.float32)).astype(x.dtype)
+    return linear(p["wo"], o.reshape(b, lq, nh * hd))
+
+
+def enc_kv(p: Params, enc_out: jax.Array, cfg: ArchConfig
+           ) -> Tuple[jax.Array, jax.Array]:
+    b, lk, _ = enc_out.shape
+    k = linear(p["wk"], enc_out).reshape(b, lk, cfg.n_kv_heads, cfg.hd)
+    v = linear(p["wv"], enc_out).reshape(b, lk, cfg.n_kv_heads, cfg.hd)
+    rep = cfg.n_heads // cfg.n_kv_heads
+    return jnp.repeat(k, rep, axis=2), jnp.repeat(v, rep, axis=2)
+
+
+def init_encdec(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 8 + cfg.enc_layers + cfg.dec_layers)
+    vpad = pad_vocab(cfg.vocab_size)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln1": jnp.ones((cfg.d_model,), cfg.dtype),
+                "attn": init_attention(k1, cfg),
+                "ln2": jnp.ones((cfg.d_model,), cfg.dtype),
+                "mlp": init_mlp(k2, cfg)}
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"ln1": jnp.ones((cfg.d_model,), cfg.dtype),
+                "attn": init_attention(k1, cfg),
+                "lnx": jnp.ones((cfg.d_model,), cfg.dtype),
+                "xattn": init_cross_attention(k2, cfg),
+                "ln2": jnp.ones((cfg.d_model,), cfg.dtype),
+                "mlp": init_mlp(k3, cfg)}
+
+    ne, nd = cfg.enc_layers, cfg.dec_layers
+    return {
+        "frontend_proj": init_linear(ks[0], cfg.frontend_dim, cfg.d_model,
+                                     cfg.dtype),
+        "embed": (jax.random.normal(ks[1], (vpad, cfg.d_model), jnp.float32)
+                  * 0.02).astype(cfg.dtype),
+        "pos_enc": (jax.random.normal(ks[2], (65536, cfg.d_model),
+                                      jnp.float32) * 0.02).astype(cfg.dtype),
+        "enc_layers": jax.vmap(enc_layer)(jnp.stack(ks[8:8 + ne])),
+        "enc_norm": jnp.ones((cfg.d_model,), cfg.dtype),
+        "dec_layers": jax.vmap(dec_layer)(jnp.stack(ks[8 + ne:8 + ne + nd])),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.dtype),
+        "lm_head": init_linear(ks[3], cfg.d_model, vpad, cfg.dtype),
+    }
+
+
+def encode(params: Params, cfg: ArchConfig, frames: jax.Array,
+           remat: bool = True) -> jax.Array:
+    x = linear(params["frontend_proj"], frames.astype(cfg.dtype))
+    x = x + params["pos_enc"][: x.shape[1]][None]
+    positions = jnp.arange(x.shape[1])[None]
+
+    def body(h, lp):
+        a, _ = attention(lp["attn"], rms_norm(h, lp["ln1"], cfg.norm_eps),
+                         cfg, positions, causal=False)
+        h = h + a
+        return h + mlp(lp["mlp"], rms_norm(h, lp["ln2"], cfg.norm_eps), cfg), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def decode_train(params: Params, cfg: ArchConfig, tokens: jax.Array,
+                 enc_out: jax.Array, remat: bool = True,
+                 return_hidden: bool = False,
+                 last_only: bool = False) -> jax.Array:
+    x = params["embed"][tokens] + params["pos_enc"][: tokens.shape[1]][None]
+    positions = jnp.arange(x.shape[1])[None]
+
+    def body(h, lp):
+        a, _ = attention(lp["attn"], rms_norm(h, lp["ln1"], cfg.norm_eps),
+                         cfg, positions, causal=True)
+        h = h + a
+        kv = enc_kv(lp["xattn"], enc_out, cfg)
+        h = h + cross_attention(lp["xattn"],
+                                rms_norm(h, lp["lnx"], cfg.norm_eps), kv, cfg)
+        return h + mlp(lp["mlp"], rms_norm(h, lp["ln2"], cfg.norm_eps), cfg), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x
+    if last_only:
+        x = x[:, -1:]
+    return linear(params["lm_head"], x)
+
+
+def encdec_loss(params: Params, cfg: ArchConfig, batch: Dict) -> jax.Array:
+    enc_out = encode(params, cfg, batch["frontend"])
+    x = decode_train(params, cfg, batch["tokens"], enc_out,
+                     return_hidden=True)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    return chunked_ce_loss(x, jnp.maximum(labels, 0), mask,
+                           lambda xc: linear(params["lm_head"], xc))
+
+
+def init_encdec_state(params: Params, cfg: ArchConfig, batch: int,
+                      max_seq: int, frames: jax.Array) -> Params:
+    """Precompute encoder output + cross KV; allocate decoder self cache."""
+    enc_out = encode(params, cfg, frames, remat=False)
+    kvs = jax.vmap(lambda lp: jnp.stack(enc_kv(lp["xattn"], enc_out, cfg)))(
+        params["dec_layers"])
+    return {
+        "cross_kv": kvs,        # (L_dec, 2, B, enc_len, H, hd)
+        "k": jnp.zeros((cfg.dec_layers, batch, max_seq, cfg.n_kv_heads,
+                        cfg.hd), cfg.dtype),
+        "v": jnp.zeros((cfg.dec_layers, batch, max_seq, cfg.n_kv_heads,
+                        cfg.hd), cfg.dtype),
+    }
+
+
+def encdec_decode_step(params: Params, cfg: ArchConfig, state: Params,
+                       tokens: jax.Array, pos: jax.Array
+                       ) -> Tuple[jax.Array, Params]:
+    x = params["embed"][tokens] + jax.lax.dynamic_slice_in_dim(
+        params["pos_enc"], pos, 1, 0)[None]
+    positions = jnp.full((1, 1), pos, dtype=jnp.int32)
+
+    def body(h, inp):
+        lp, ck, cv, xkv = inp
+        a, new_cache = attention(lp["attn"],
+                                 rms_norm(h, lp["ln1"], cfg.norm_eps), cfg,
+                                 positions, cache=(ck, cv), cache_pos=pos)
+        h = h + a
+        h = h + cross_attention(lp["xattn"],
+                                rms_norm(h, lp["lnx"], cfg.norm_eps),
+                                (xkv[0], xkv[1]), cfg)
+        h = h + mlp(lp["mlp"], rms_norm(h, lp["ln2"], cfg.norm_eps), cfg)
+        return h, new_cache
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["dec_layers"], state["k"], state["v"],
+                  state["cross_kv"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = linear(params["lm_head"], x)
+    return logits, {"cross_kv": state["cross_kv"], "k": nk, "v": nv}

@@ -1,0 +1,149 @@
+"""Zamba2-style hybrid: Mamba-2 trunk + a *shared* attention/MLP block.
+
+One set of attention+MLP parameters is re-applied every ``attn_every``
+layers (Zamba's parameter-sharing trick); each application owns a slot in a
+stacked KV cache during decode.  Mixing full attention at a sparse cadence
+keeps the arch sub-quadratic enough for the long_500k cell: the KV cost is
+(n_layers / attn_every) caches instead of n_layers.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention, init_attention
+from .common import (ArchConfig, Params, chunked_ce_loss, init_linear,
+                     init_mlp, linear, mlp, pad_vocab, rms_norm)
+from .ssm import init_mamba, init_ssm_state, mamba_block
+
+
+def n_shared_applications(cfg: ArchConfig) -> int:
+    return (cfg.n_layers + cfg.attn_every - 1) // cfg.attn_every
+
+
+def init_hybrid(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 4 + cfg.n_layers)
+    vpad = pad_vocab(cfg.vocab_size)
+
+    def one(k):
+        return {"ln": jnp.ones((cfg.d_model,), cfg.dtype),
+                "mamba": init_mamba(k, cfg)}
+
+    return {
+        "embed": (jax.random.normal(ks[0], (vpad, cfg.d_model), jnp.float32)
+                  * 0.02).astype(cfg.dtype),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.dtype),
+        "layers": jax.vmap(one)(jnp.stack(ks[4:4 + cfg.n_layers])),
+        "shared": {
+            "ln1": jnp.ones((cfg.d_model,), cfg.dtype),
+            "attn": init_attention(ks[1], cfg),
+            "ln2": jnp.ones((cfg.d_model,), cfg.dtype),
+            "mlp": init_mlp(ks[2], cfg),
+        },
+        "lm_head": init_linear(ks[3], cfg.d_model, vpad, cfg.dtype),
+    }
+
+
+def _shared_block(sp: Params, x: jax.Array, cfg: ArchConfig, positions,
+                  cache=None, cache_pos=None):
+    a, new_cache = attention(sp["attn"], rms_norm(x, sp["ln1"], cfg.norm_eps),
+                             cfg, positions, cache=cache, cache_pos=cache_pos)
+    x = x + a
+    x = x + mlp(sp["mlp"], rms_norm(x, sp["ln2"], cfg.norm_eps), cfg)
+    return x, new_cache
+
+
+def hybrid_hidden(params: Params, cfg: ArchConfig, tokens: jax.Array,
+                  remat: bool = True) -> jax.Array:
+    x = params["embed"][tokens]
+    positions = jnp.arange(x.shape[1])[None, :]
+    idxs = jnp.arange(cfg.n_layers)
+
+    def body(h, inp):
+        lp, idx = inp
+        m, _ = mamba_block(lp["mamba"], rms_norm(h, lp["ln"], cfg.norm_eps),
+                           cfg)
+        h = h + m
+        h = jax.lax.cond(
+            idx % cfg.attn_every == 0,
+            lambda hh: _shared_block(params["shared"], hh, cfg, positions)[0],
+            lambda hh: hh, h)
+        return h, None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, (params["layers"], idxs))
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def hybrid_apply(params: Params, cfg: ArchConfig, tokens: jax.Array,
+                 frontend=None, remat: bool = True, last_only: bool = False
+                 ) -> Tuple[jax.Array, jax.Array]:
+    x = hybrid_hidden(params, cfg, tokens, remat)
+    if last_only:
+        x = x[:, -1:]
+    return linear(params["lm_head"], x), jnp.zeros((), jnp.float32)
+
+
+def hybrid_loss(params: Params, cfg: ArchConfig, batch: Dict) -> jax.Array:
+    x = hybrid_hidden(params, cfg, batch["tokens"])
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    return chunked_ce_loss(
+        x, jnp.maximum(labels, 0), mask,
+        lambda xc: linear(params["lm_head"], xc))
+
+
+def init_hybrid_state(cfg: ArchConfig, batch: int, max_seq: int) -> Params:
+    napp = n_shared_applications(cfg)
+    ssm = init_ssm_state(cfg, batch)
+    return {
+        "ssm": jax.tree.map(
+            lambda t: jnp.broadcast_to(t[None], (cfg.n_layers,) + t.shape),
+            ssm),
+        "k": jnp.zeros((napp, batch, max_seq, cfg.n_kv_heads, cfg.hd),
+                       cfg.dtype),
+        "v": jnp.zeros((napp, batch, max_seq, cfg.n_kv_heads, cfg.hd),
+                       cfg.dtype),
+    }
+
+
+def hybrid_decode_step(params: Params, cfg: ArchConfig, state: Params,
+                       tokens: jax.Array, pos: jax.Array
+                       ) -> Tuple[jax.Array, Params]:
+    x = params["embed"][tokens]
+    positions = jnp.full((1, 1), pos, dtype=jnp.int32)
+    idxs = jnp.arange(cfg.n_layers)
+
+    def body(carry, inp):
+        h, kc, vc = carry
+        lp, st, idx = inp
+        m, new_st = mamba_block(lp["mamba"],
+                                rms_norm(h, lp["ln"], cfg.norm_eps), cfg,
+                                state=st)
+        h = h + m
+
+        def with_attn(args):
+            hh, kcc, vcc = args
+            app = idx // cfg.attn_every
+            ck = jax.lax.dynamic_index_in_dim(kcc, app, 0, keepdims=False)
+            cv = jax.lax.dynamic_index_in_dim(vcc, app, 0, keepdims=False)
+            hh, (nk, nv) = _shared_block(params["shared"], hh, cfg, positions,
+                                         cache=(ck, cv), cache_pos=pos)
+            kcc = jax.lax.dynamic_update_index_in_dim(kcc, nk, app, 0)
+            vcc = jax.lax.dynamic_update_index_in_dim(vcc, nv, app, 0)
+            return hh, kcc, vcc
+
+        h, kc, vc = jax.lax.cond(idx % cfg.attn_every == 0, with_attn,
+                                 lambda a: a, (h, kc, vc))
+        return (h, kc, vc), new_st
+
+    (x, kc, vc), new_ssm = jax.lax.scan(
+        body, (x, state["k"], state["v"]),
+        (params["layers"], state["ssm"], idxs))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = linear(params["lm_head"], x)
+    return logits, {"ssm": new_ssm, "k": kc, "v": vc}

@@ -1,0 +1,160 @@
+"""Decoder-only language model: dense / GQA / MoE / VLM-backbone variants.
+
+Layers are stacked (leading layer axis) and applied with ``lax.scan`` so the
+compiled HLO is depth-independent (critical for 480B-scale dry-run compiles);
+each scan body is rematerialized (activation checkpointing).  The VLM/audio
+modality frontend is a stub per the assignment: precomputed patch/frame
+embeddings enter through a linear projection and occupy the sequence prefix.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention, init_attention
+from .common import (ArchConfig, Params, chunked_ce_loss, cross_entropy,
+                     init_linear, init_mlp, linear, mlp, pad_vocab, rms_norm)
+from .moe import init_moe, moe_ffn
+
+
+def init_layer(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 3)
+    p: Params = {
+        "ln1": jnp.ones((cfg.d_model,), cfg.dtype),
+        "attn": init_attention(ks[0], cfg),
+        "ln2": jnp.ones((cfg.d_model,), cfg.dtype),
+    }
+    if cfg.n_experts:
+        p["ffn"] = init_moe(ks[1], cfg)
+    else:
+        p["ffn"] = init_mlp(ks[1], cfg)
+    return p
+
+
+def init_lm(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 4 + cfg.n_layers)
+    vpad = pad_vocab(cfg.vocab_size)
+    p: Params = {
+        "embed": (jax.random.normal(ks[0], (vpad, cfg.d_model), jnp.float32)
+                  * 0.02).astype(cfg.dtype),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.dtype),
+        "layers": jax.vmap(lambda k: init_layer(k, cfg))(
+            jnp.stack(ks[4:4 + cfg.n_layers])),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = init_linear(ks[1], cfg.d_model, vpad, cfg.dtype)
+    if cfg.frontend:
+        p["frontend_proj"] = init_linear(ks[2], cfg.frontend_dim, cfg.d_model,
+                                         cfg.dtype)
+    return p
+
+
+def _ffn_apply(lp: Params, x: jax.Array, cfg: ArchConfig
+               ) -> Tuple[jax.Array, jax.Array]:
+    if cfg.n_experts:
+        return moe_ffn(lp["ffn"], x, cfg)
+    return mlp(lp["ffn"], x, cfg), jnp.zeros((), jnp.float32)
+
+
+def _layer_apply(lp: Params, x: jax.Array, cfg: ArchConfig,
+                 positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    h, _ = attention(lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps), cfg,
+                     positions, window=cfg.window)
+    x = x + h
+    f, aux = _ffn_apply(lp, rms_norm(x, lp["ln2"], cfg.norm_eps), cfg)
+    return x + f, aux
+
+
+def embed_inputs(params: Params, cfg: ArchConfig, tokens: jax.Array,
+                 frontend: Optional[jax.Array] = None) -> jax.Array:
+    x = params["embed"][tokens]
+    if frontend is not None:
+        fx = linear(params["frontend_proj"], frontend.astype(cfg.dtype))
+        x = jnp.concatenate([fx, x], axis=1)
+    return x
+
+
+def lm_logits(params: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    return (x @ params["embed"].T if cfg.tie_embeddings
+            else linear(params["lm_head"], x))
+
+
+def lm_hidden(params: Params, cfg: ArchConfig, tokens: jax.Array,
+              frontend: Optional[jax.Array] = None,
+              remat: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Trunk forward.  Returns (final hidden states, aux_loss)."""
+    x = embed_inputs(params, cfg, tokens, frontend)
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(carry, lp):
+        h, aux = carry
+        h2, aux2 = _layer_apply(lp, h, cfg, positions)
+        return (h2, aux + aux2), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+def lm_apply(params: Params, cfg: ArchConfig, tokens: jax.Array,
+             frontend: Optional[jax.Array] = None, remat: bool = True,
+             last_only: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Forward to logits; ``last_only`` = prefill mode (final position only,
+    so a 32k prefill never materializes (B, 32k, V) logits)."""
+    x, aux = lm_hidden(params, cfg, tokens, frontend, remat)
+    if last_only:
+        x = x[:, -1:]
+    return lm_logits(params, cfg, x), aux
+
+
+def lm_loss(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array]
+            ) -> jax.Array:
+    x, aux = lm_hidden(params, cfg, batch["tokens"], batch.get("frontend"))
+    labels = batch["labels"]
+    npad = x.shape[1] - labels.shape[1]
+    if npad:                       # frontend prefix carries no labels
+        x = x[:, npad:]
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = chunked_ce_loss(x, jnp.maximum(labels, 0), mask,
+                           lambda xc: lm_logits(params, cfg, xc))
+    return loss + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# Decode path (KV cache)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_seq: int) -> Params:
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, cfg.dtype), "v": jnp.zeros(shape, cfg.dtype)}
+
+
+def lm_decode_step(params: Params, cfg: ArchConfig, cache: Params,
+                   tokens: jax.Array, pos: jax.Array
+                   ) -> Tuple[jax.Array, Params]:
+    """One-token decode. tokens: (B, 1); pos: scalar int32 position."""
+    x = params["embed"][tokens]
+    positions = jnp.full((1, 1), pos, dtype=jnp.int32)
+
+    def body(h, inp):
+        lp, ck, cv = inp
+        a, new_cache = attention(lp["attn"],
+                                 rms_norm(h, lp["ln1"], cfg.norm_eps), cfg,
+                                 positions, cache=(ck, cv), cache_pos=pos,
+                                 window=cfg.window)
+        h = h + a
+        f, _ = _ffn_apply(lp, rms_norm(h, lp["ln2"], cfg.norm_eps), cfg)
+        return h + f, new_cache
+
+    x, (nk, nv) = jax.lax.scan(body, x,
+                               (params["layers"], cache["k"], cache["v"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["embed"].T if cfg.tie_embeddings
+              else linear(params["lm_head"], x))
+    return logits, {"k": nk, "v": nv}

@@ -1,0 +1,222 @@
+"""Mamba-1 and Mamba-2 blocks (chunked streaming scans, pure JAX).
+
+These are the framework's flagship *streaming numerical kernels* in the
+paper's sense (DESIGN.md sect. 4): O(L) flops over sequentially streamed
+activations with a small carried state.
+
+Memory discipline mirrors the paper's register-resident streaming: the
+sequence is processed in chunks by ``lax.scan`` carrying only the SSM state,
+so the materialized per-chunk tensors stay VMEM/HBM-bounded at 500k-token
+contexts.  Mamba-2 uses the SSD chunked form -- intra-chunk work becomes
+(Lc x Lc) matmuls (MXU-native, the TPU answer to the paper's FMA-saturation
+goal), inter-chunk state passes through the scan carry.  The decode path is
+the single-step recurrence on an explicit (conv window, ssm state) cache.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ArchConfig, Params, init_linear, linear
+
+CHUNK = 128
+
+
+def init_mamba(key, cfg: ArchConfig) -> Params:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    ks = jax.random.split(key, 8)
+    p: Params = {
+        "in_proj": init_linear(ks[0], d, 2 * di, cfg.dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, di), jnp.float32)
+                   * 0.2).astype(cfg.dtype),
+        "conv_b": jnp.zeros((di,), cfg.dtype),
+        "out_proj": init_linear(ks[2], di, d, cfg.dtype),
+    }
+    if cfg.ssm_kind == "mamba1":
+        dt_rank = max(1, d // 16)
+        p["a_log"] = jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                      (di, 1)))                 # (di, N)
+        p["d_skip"] = jnp.ones((di,), jnp.float32)
+        p["x_proj"] = init_linear(ks[3], di, dt_rank + 2 * n, cfg.dtype)
+        p["dt_proj"] = init_linear(ks[4], dt_rank, di, cfg.dtype, bias=True)
+    else:  # mamba2 (SSD): scalar decay per head; B/C projected from x
+        nh = di // cfg.ssm_head_dim
+        p["bc_proj"] = init_linear(ks[3], di, 2 * n, cfg.dtype)
+        p["dt_bias"] = jnp.zeros((nh,), jnp.float32)
+        p["a_log"] = jnp.zeros((nh,), jnp.float32)              # scalar/head
+        p["d_skip"] = jnp.ones((nh,), jnp.float32)
+    return p
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d. x: (B, L, di); w: (K, di); state (B, K-1, di)."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k)) + b
+    new_state = xp[:, -(k - 1):] if k > 1 else state
+    return jax.nn.silu(out), new_state
+
+
+def _assoc_scan(decay: jax.Array, u: jax.Array, h0: jax.Array) -> jax.Array:
+    """h_t = decay_t * h_{t-1} + u_t over axis 1, seeded with h0."""
+    def combine(a, b):
+        a1, b1 = a
+        a2, b2 = b
+        return a1 * a2, a2 * b1 + b2
+
+    cum_a, cum_b = jax.lax.associative_scan(combine, (decay, u), axis=1)
+    return cum_a * h0[:, None] + cum_b
+
+
+def _chunked(l: int, cap: int = CHUNK) -> int:
+    c = min(cap, l)
+    while l % c:
+        c //= 2
+    return max(c, 1)
+
+
+def mamba_block(p: Params, x: jax.Array, cfg: ArchConfig,
+                state: Optional[Params] = None
+                ) -> Tuple[jax.Array, Optional[Params]]:
+    """x: (B, L, d).  ``state`` = {"conv", "ssm"} for stepwise decode."""
+    if cfg.ssm_kind == "mamba1":
+        return _mamba1(p, x, cfg, state)
+    return _mamba2(p, x, cfg, state)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1: diagonal per-(channel, state) recurrence, chunked associative scan.
+# ---------------------------------------------------------------------------
+
+def _mamba1(p, x, cfg, state):
+    b, l, _ = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    xz = linear(p["in_proj"], x)
+    xi, z = jnp.split(xz, 2, axis=-1)                    # (B, L, di)
+    conv_state = state["conv"] if state is not None else None
+    xi, new_conv = _causal_conv(xi, p["conv_w"], p["conv_b"], conv_state)
+
+    dt_rank = p["dt_proj"]["w"].shape[0]
+    proj = linear(p["x_proj"], xi)
+    dt, bm, c = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(linear(p["dt_proj"], dt)).astype(jnp.float32)
+    a = -jnp.exp(p["a_log"])                             # (di, N)
+    bm32 = bm.astype(jnp.float32)
+    c32 = c.astype(jnp.float32)
+    xi32 = xi.astype(jnp.float32)
+
+    h0 = (state["ssm"] if state is not None
+          else jnp.zeros((b, di, n), jnp.float32))
+
+    # Smaller chunks than mamba2: the (B, Lc, di, N) scan tensors are the
+    # memory-bound core; log2(Lc) associative-scan levels each materialize
+    # tensor pairs, so Lc=32 (5 levels) moves ~30% less than Lc=128 (7).
+    from ..flags import flag
+    lc = _chunked(l, cap=32 if flag("ssm_small_chunk") else CHUNK)
+    nchunk = l // lc
+    sd = (cfg.ssm_scan_dtype if flag("ssm_bf16_scan") else None) \
+        or jnp.float32
+
+    def chunk_fn(h_prev, inp):
+        xt, dtt, bt, ct = inp                            # (B, Lc, ...)
+        decay = jnp.exp(dtt[..., None] * a[None, None])  # (B, Lc, di, N)
+        u = (dtt * xt)[..., None] * bt[:, :, None, :]
+        h = _assoc_scan(decay.astype(sd), u.astype(sd),
+                        h_prev.astype(sd))               # (B, Lc, di, N)
+        y = jnp.einsum("bldn,bln->bld", h, ct,
+                       preferred_element_type=jnp.float32)
+        return h[:, -1].astype(jnp.float32), y
+
+    def split(t):
+        return jnp.moveaxis(t.reshape(b, nchunk, lc, *t.shape[2:]), 1, 0)
+
+    h_last, ys = jax.lax.scan(chunk_fn, h0,
+                              (split(xi32), split(dt), split(bm32),
+                               split(c32)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, l, di)
+    y = y + p["d_skip"][None, None] * xi32
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = linear(p["out_proj"], y)
+    new_state = ({"conv": new_conv, "ssm": h_last}
+                 if state is not None else None)
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD): scalar-per-head decay; chunked matmul (MXU) formulation.
+# ---------------------------------------------------------------------------
+
+def _mamba2(p, x, cfg, state):
+    b, l, _ = x.shape
+    di, n, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    nh = di // hd
+    xz = linear(p["in_proj"], x)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    xi, new_conv = _causal_conv(xi, p["conv_w"], p["conv_b"], conv_state)
+
+    bc = linear(p["bc_proj"], xi)
+    bm, c = jnp.split(bc, 2, axis=-1)                    # (B, L, N)
+    bm32, c32 = bm.astype(jnp.float32), c.astype(jnp.float32)
+    xh = xi.reshape(b, l, nh, hd).astype(jnp.float32)
+    dt = jax.nn.softplus(xh.mean(-1) + p["dt_bias"][None, None])  # (B, L, nh)
+    a = -jnp.exp(p["a_log"])                                      # (nh,)
+    g_step = dt * a[None, None]                                   # (B, L, nh) <= 0
+    dtx = dt[..., None] * xh                                      # (B, L, nh, hd)
+
+    h0 = (state["ssm"] if state is not None
+          else jnp.zeros((b, nh, hd, n), jnp.float32))
+
+    lc = _chunked(l)
+    nchunk = l // lc
+
+    def chunk_fn(h_prev, inp):
+        gs, u, bt, ct = inp        # (B,Lc,nh), (B,Lc,nh,hd), (B,Lc,N), (B,Lc,N)
+        g = jnp.cumsum(gs, axis=1)                       # (B, Lc, nh)
+        # intra-chunk: S[b,h,i,j] = (C_i . B_j) exp(g_i - g_j) for i >= j
+        cb = jnp.einsum("bin,bjn->bij", ct, bt)          # (B, Lc, Lc)
+        dmat = jnp.exp(g[:, :, None, :] - g[:, None, :, :])  # (B, i, j, nh)
+        tri = jnp.tril(jnp.ones((lc, lc), jnp.float32))
+        s = cb[..., None] * dmat * tri[None, :, :, None]
+        y_intra = jnp.einsum("bijh,bjhd->bihd", s, u)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.exp(g)[..., None] * jnp.einsum(
+            "bin,bhdn->bihd", ct, h_prev)
+        # new carried state
+        g_last = g[:, -1]                                # (B, nh)
+        w_j = jnp.exp(g_last[:, None] - g)               # (B, Lc, nh)
+        h_new = (jnp.exp(g_last)[..., None, None] * h_prev
+                 + jnp.einsum("bjh,bjhd,bjn->bhdn", w_j, u, bt))
+        return h_new, y_intra + y_inter
+
+    def split(t):
+        return jnp.moveaxis(t.reshape(b, nchunk, lc, *t.shape[2:]), 1, 0)
+
+    h_last, ys = jax.lax.scan(chunk_fn, h0,
+                              (split(g_step), split(dtx), split(bm32),
+                               split(c32)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, l, nh, hd)
+    y = y + p["d_skip"][None, None, :, None] * xh
+    y = y.reshape(b, l, di).astype(x.dtype) * jax.nn.silu(z)
+    out = linear(p["out_proj"], y)
+    new_state = ({"conv": new_conv, "ssm": h_last}
+                 if state is not None else None)
+    return out, new_state
+
+
+def init_ssm_state(cfg: ArchConfig, batch: int) -> Params:
+    di, n, k = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    conv = jnp.zeros((batch, k - 1, di), cfg.dtype)
+    if cfg.ssm_kind == "mamba1":
+        ssm = jnp.zeros((batch, di, n), jnp.float32)
+    else:
+        nh = di // cfg.ssm_head_dim
+        ssm = jnp.zeros((batch, nh, cfg.ssm_head_dim, n), jnp.float32)
+    return {"conv": conv, "ssm": ssm}

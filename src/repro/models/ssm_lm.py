@@ -1,0 +1,96 @@
+"""Attention-free SSM language model (falcon-mamba-7b family)."""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import (ArchConfig, Params, chunked_ce_loss, init_linear,
+                     linear, pad_vocab, rms_norm)
+from .ssm import init_mamba, init_ssm_state, mamba_block
+
+
+def init_ssm_lm(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 2 + cfg.n_layers)
+    vpad = pad_vocab(cfg.vocab_size)
+    layer_keys = jnp.stack(ks[2:])
+
+    def one(k):
+        return {"ln": jnp.ones((cfg.d_model,), cfg.dtype),
+                "mamba": init_mamba(k, cfg)}
+
+    p: Params = {
+        "embed": (jax.random.normal(ks[0], (vpad, cfg.d_model), jnp.float32)
+                  * 0.02).astype(cfg.dtype),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.dtype),
+        "layers": jax.vmap(one)(layer_keys),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = init_linear(ks[1], cfg.d_model, vpad, cfg.dtype)
+    return p
+
+
+def ssm_lm_logits(params: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    return (x @ params["embed"].T if cfg.tie_embeddings
+            else linear(params["lm_head"], x))
+
+
+def ssm_lm_hidden(params: Params, cfg: ArchConfig, tokens: jax.Array,
+                  remat: bool = True) -> jax.Array:
+    x = params["embed"][tokens]
+
+    def body(h, lp):
+        m, _ = mamba_block(lp["mamba"], rms_norm(h, lp["ln"], cfg.norm_eps),
+                           cfg)
+        return h + m, None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def ssm_lm_apply(params: Params, cfg: ArchConfig, tokens: jax.Array,
+                 frontend=None, remat: bool = True, last_only: bool = False
+                 ) -> Tuple[jax.Array, jax.Array]:
+    x = ssm_lm_hidden(params, cfg, tokens, remat)
+    if last_only:
+        x = x[:, -1:]
+    return ssm_lm_logits(params, cfg, x), jnp.zeros((), jnp.float32)
+
+
+def ssm_lm_loss(params: Params, cfg: ArchConfig, batch: Dict) -> jax.Array:
+    x = ssm_lm_hidden(params, cfg, batch["tokens"])
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    return chunked_ce_loss(x, jnp.maximum(labels, 0), mask,
+                           lambda xc: ssm_lm_logits(params, cfg, xc))
+
+
+def init_ssm_lm_state(cfg: ArchConfig, batch: int) -> Params:
+    one = init_ssm_state(cfg, batch)
+    return jax.tree.map(
+        lambda t: jnp.broadcast_to(t[None], (cfg.n_layers,) + t.shape), one)
+
+
+def ssm_lm_decode_step(params: Params, cfg: ArchConfig, state: Params,
+                       tokens: jax.Array, pos: jax.Array
+                       ) -> Tuple[jax.Array, Params]:
+    """SSM decode: O(1) per token in the context length -- the reason this
+    family runs the long_500k cell."""
+    x = params["embed"][tokens]
+
+    def body(h, inp):
+        lp, st = inp
+        m, new_st = mamba_block(lp["mamba"],
+                                rms_norm(h, lp["ln"], cfg.norm_eps), cfg,
+                                state=st)
+        return h + m, new_st
+
+    x, new_state = jax.lax.scan(body, x, (params["layers"], state))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["embed"].T if cfg.tie_embeddings
+              else linear(params["lm_head"], x))
+    return logits, new_state

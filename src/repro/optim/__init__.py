@@ -1,0 +1,3 @@
+from .optimizers import (Optimizer, adafactor, adamw, build_optimizer,  # noqa: F401
+                         clip_by_global_norm)
+from .schedules import warmup_cosine  # noqa: F401

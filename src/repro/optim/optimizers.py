@@ -1,0 +1,128 @@
+"""Optimizers: AdamW (fp32 moments) and Adafactor (factored second moment).
+
+AdamW is the default; Adafactor is selected for >=100B-parameter archs
+(arctic-480b) where full fp32 moments would not fit the per-device HBM
+budget -- the optimizer-state sizing is part of the dry-run memory analysis.
+Pure pytree implementation (no optax dependency in this environment).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Params], Any]
+    update: Callable[[Params, Any, Params, jax.Array], Tuple[Params, Any]]
+    # update(grads, state, params, lr) -> (new_params, new_state)
+
+
+def clip_by_global_norm(grads: Params, max_norm: float) -> Tuple[Params, jax.Array]:
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        step = state["step"] + 1
+        b1c = 1 - b1 ** step.astype(jnp.float32)
+        b2c = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * jnp.square(g32)
+            upd_ = (m / b1c) / (jnp.sqrt(v / b2c) + eps)
+            upd_ = upd_ + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * upd_).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+        new_p = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, {"mu": new_m, "nu": new_v, "step": step}
+
+    return Optimizer("adamw", init, update)
+
+
+def adafactor(eps: float = 1e-30, decay: float = 0.8,
+              clip_threshold: float = 1.0) -> Optimizer:
+    """Factored second-moment estimator (Shazeer & Stern, 2018), no momentum.
+
+    State per (.., R, C) matrix: one R-vector + one C-vector instead of R*C
+    fp32 moments: ~O(sqrt) memory, the enabling trick for the 480B dry-run.
+    """
+    def init(params):
+        def one(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"m": jax.tree.map(one, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        step = state["step"] + 1
+        beta = 1.0 - (step.astype(jnp.float32)) ** -decay
+
+        def upd(g, st, p):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if p.ndim >= 2:
+                vr = beta * st["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * st["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(axis=-1, keepdims=True)
+                                       [..., None], eps))
+                u = g32 * jax.lax.rsqrt(denom + eps)
+                new_st = {"vr": vr, "vc": vc}
+            else:
+                v = beta * st["v"] + (1 - beta) * g2
+                u = g32 * jax.lax.rsqrt(v + eps)
+                new_st = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_st
+
+        is_state = lambda t: isinstance(t, dict) and ("v" in t or "vr" in t)
+        leaves_g, treedef = jax.tree.flatten(grads)
+        leaves_p = treedef.flatten_up_to(params)
+        leaves_st = jax.tree.flatten(state["m"], is_leaf=is_state)[0]
+        out = [upd(g, st, p)
+               for g, st, p in zip(leaves_g, leaves_st, leaves_p)]
+        new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+        return new_p, {"m": new_m, "step": step}
+
+    return Optimizer("adafactor", init, update)
+
+
+def build_optimizer(name: str, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "adafactor":
+        return adafactor(**kw)
+    raise ValueError(name)

@@ -1,0 +1,3 @@
+from .loop import Trainer, TrainConfig, make_train_step  # noqa: F401
+from .pipeline import bubble_fraction, pipeline_forward  # noqa: F401
+from .straggler import StepTimer  # noqa: F401

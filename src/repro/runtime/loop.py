@@ -1,0 +1,173 @@
+"""Fault-tolerant training loop: accumulation, compression, checkpoints.
+
+``make_train_step`` builds the jitted step:
+  * GSPMD path (default): loss over the sharded global batch; autodiff's
+    implicit collectives carry the DP reduction (overlapped by XLA's
+    latency-hiding scheduler).
+  * Compressed-DP path: shard_map over the data axis with an explicit int8
+    error-feedback all-reduce (compression/gradient.py).
+
+Gradient accumulation scans over microbatches inside the step.  The Trainer
+wraps the loop with checkpoint/restart (atomic keep-K, async), preemption
+("checkpoint now") handling, and straggler detection.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..checkpoint import CheckpointManager
+from ..compression import compressed_psum, init_error_feedback
+from ..models.api import Model
+from ..optim import Optimizer, clip_by_global_norm
+from .straggler import StepTimer
+
+Params = Any
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    keep: int = 3
+    accum: int = 1                  # gradient-accumulation microbatches
+    clip_norm: float = 1.0
+    compress_grads: bool = False    # int8 error-feedback DP all-reduce
+    log_every: int = 10
+
+
+def make_train_step(model: Model, opt: Optimizer, lr_fn: Callable,
+                    tc: TrainConfig, mesh=None, data_axis: str = "data"):
+    """Returns step(state, batch) -> (state, metrics); jit at call site."""
+
+    def grads_of(params, batch):
+        if tc.accum == 1:
+            return jax.value_and_grad(model.loss_fn)(params, batch)
+
+        def micro(c, mb):
+            loss, g = jax.value_and_grad(model.loss_fn)(params, mb)
+            acc_loss, acc_g = c
+            return (acc_loss + loss,
+                    jax.tree.map(jnp.add, acc_g, g)), None
+
+        mbs = jax.tree.map(
+            lambda x: x.reshape(tc.accum, x.shape[0] // tc.accum,
+                                *x.shape[1:]), batch)
+        zero = jax.tree.map(jnp.zeros_like, params)
+        (loss, g), _ = jax.lax.scan(micro, (jnp.zeros(()), zero), mbs)
+        inv = 1.0 / tc.accum
+        return loss * inv, jax.tree.map(lambda t: t * inv, g)
+
+    if not tc.compress_grads:
+        def step(state, batch):
+            loss, grads = grads_of(state["params"], batch)
+            grads, gnorm = clip_by_global_norm(grads, tc.clip_norm)
+            lr = lr_fn(state["step"])
+            new_p, new_opt = opt.update(grads, state["opt"], state["params"],
+                                        lr)
+            return ({"params": new_p, "opt": new_opt,
+                     "step": state["step"] + 1},
+                    {"loss": loss, "gnorm": gnorm, "lr": lr})
+        return step
+
+    # Compressed-DP path: explicit collectives via shard_map.
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def sharded_step(state, batch):
+        def inner(st, b):
+            loss, grads = grads_of(st["params"], b)
+            grads, new_ef = compressed_psum(grads, st["ef"], data_axis)
+            loss = jax.lax.pmean(loss, data_axis)
+            grads, gnorm = clip_by_global_norm(grads, tc.clip_norm)
+            lr = lr_fn(st["step"])
+            new_p, new_opt = opt.update(grads, st["opt"], st["params"], lr)
+            return ({"params": new_p, "opt": new_opt, "ef": new_ef,
+                     "step": st["step"] + 1},
+                    {"loss": loss, "gnorm": gnorm, "lr": lr})
+
+        state_spec = jax.tree.map(lambda _: P(), state)
+        state_spec["ef"] = jax.tree.map(lambda _: P(), state["ef"])
+        batch_spec = jax.tree.map(lambda _: P(data_axis), batch)
+        return shard_map(inner, mesh=mesh,
+                         in_specs=(state_spec, batch_spec),
+                         out_specs=(state_spec,
+                                    jax.tree.map(lambda _: P(),
+                                                 {"loss": 0, "gnorm": 0,
+                                                  "lr": 0})),
+                         check_rep=False)(state, batch)
+
+    return sharded_step
+
+
+def init_train_state(model: Model, opt: Optimizer, key,
+                     compress: bool = False) -> Dict:
+    params = model.init(key)
+    state = {"params": params, "opt": opt.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    if compress:
+        state["ef"] = init_error_feedback(params)
+    return state
+
+
+class Trainer:
+    """Checkpointed, preemption-safe, straggler-aware training driver."""
+
+    def __init__(self, model: Model, opt: Optimizer, lr_fn, tc: TrainConfig,
+                 dataset, mesh=None):
+        self.model, self.opt, self.lr_fn, self.tc = model, opt, lr_fn, tc
+        self.dataset = dataset
+        self.mesh = mesh
+        self.ckpt = (CheckpointManager(tc.ckpt_dir, keep=tc.keep)
+                     if tc.ckpt_dir else None)
+        self.timer = StepTimer()
+        self._preempted = False
+        self.metrics_log = []
+
+    def _handle_preemption(self, *_):
+        self._preempted = True
+
+    def run(self, key, state: Optional[Dict] = None) -> Dict:
+        step_fn = jax.jit(make_train_step(self.model, self.opt, self.lr_fn,
+                                          self.tc, mesh=self.mesh))
+        if state is None:
+            state = init_train_state(self.model, self.opt, key,
+                                     self.tc.compress_grads)
+            start = 0
+            if self.ckpt and self.ckpt.latest_step() is not None:
+                state, manifest = self.ckpt.restore(state)
+                start = int(manifest["step"])
+        else:
+            start = int(state["step"])
+
+        old = signal.signal(signal.SIGTERM, self._handle_preemption)
+        try:
+            for step in range(start, self.tc.steps):
+                batch = jax.tree.map(jnp.asarray,
+                                     self.dataset.global_batch(step))
+                self.timer.start()
+                state, metrics = step_fn(state, batch)
+                jax.block_until_ready(metrics["loss"])
+                self.timer.stop(step)
+                if step % self.tc.log_every == 0 or step == self.tc.steps - 1:
+                    self.metrics_log.append(
+                        {"step": step,
+                         "loss": float(metrics["loss"]),
+                         "gnorm": float(metrics["gnorm"])})
+                if self.ckpt and ((step + 1) % self.tc.ckpt_every == 0
+                                  or self._preempted):
+                    self.ckpt.save_async(step + 1, state,
+                                         meta={"preempted": self._preempted})
+                if self._preempted:
+                    break
+        finally:
+            if self.ckpt:
+                self.ckpt.wait()
+            signal.signal(signal.SIGTERM, old)
+        return state

@@ -1,0 +1,47 @@
+"""Per-step wall-time monitoring / straggler mitigation hooks.
+
+On a real multi-pod deployment every SPMD step is gang-scheduled, so a
+straggling host surfaces as a slow *global* step.  The mitigation ladder is:
+flag (log), then checkpoint + evict via the elastic-restart path (the
+checkpoint layer restores onto any mesh).  Here we implement the detector
+and the policy hook; the restart itself is exercised in tests through
+CheckpointManager's elastic restore.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Callable, List, Optional
+
+
+@dataclasses.dataclass
+class StepTimer:
+    window: int = 32
+    threshold: float = 2.0                 # x median => straggler suspicion
+    on_straggler: Optional[Callable[[int, float, float], None]] = None
+
+    def __post_init__(self):
+        self._times: List[float] = []
+        self._t0: Optional[float] = None
+        self.flagged: List[int] = []
+
+    def start(self) -> None:
+        self._t0 = time.perf_counter()
+
+    def stop(self, step: int) -> float:
+        dt = time.perf_counter() - self._t0
+        med = statistics.median(self._times) if self._times else dt
+        self._times.append(dt)
+        if len(self._times) > self.window:
+            self._times.pop(0)
+        if len(self._times) >= 8 and dt > self.threshold * med:
+            self.flagged.append(step)
+            if self.on_straggler:
+                self.on_straggler(step, dt, med)
+        return dt
+
+    @property
+    def median(self) -> float:
+        return statistics.median(self._times) if self._times else 0.0

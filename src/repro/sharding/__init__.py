@@ -1,0 +1,2 @@
+from .planner import (PlanNote, batch_sharding, decode_state_sharding,  # noqa: F401
+                      param_sharding, plan_summary)

@@ -1,0 +1,66 @@
+"""Mesh context for in-model sharding hints.
+
+Model code stays mesh-agnostic; the launcher installs the active mesh here
+and layers call ``shard_hint(x, "model", None, ...)`` at GSPMD-propagation
+choke points (fresh scatter buffers in the MoE dispatch, notably, which
+otherwise replicate).  Hints are dropped when no mesh is installed (unit
+tests) or when the dim isn't divisible by the named axis.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: Optional[Mesh] = None
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    global _MESH
+    prev = _MESH
+    _MESH = mesh
+    try:
+        yield
+    finally:
+        _MESH = prev
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def shard_hint(x: jax.Array, *spec: Any) -> jax.Array:
+    """with_sharding_constraint(x, P(*spec)) if a mesh is installed and every
+    named dim divides; silently drops undivisible/unknown axes."""
+    mesh = _MESH
+    if mesh is None:
+        return x
+    cleaned = []
+    for i, a in enumerate(spec):
+        if a is None:
+            cleaned.append(None)
+            continue
+        names = tuple(n for n in (a if isinstance(a, tuple) else (a,))
+                      if n in mesh.axis_names)
+        if not names:
+            cleaned.append(None)
+            continue
+        a = names if len(names) > 1 else names[0]
+        if i < x.ndim and x.shape[i] % _axis_size(mesh, a) == 0 \
+                and x.shape[i] >= _axis_size(mesh, a):
+            cleaned.append(a)
+        else:
+            cleaned.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*cleaned)))

@@ -1,0 +1,140 @@
+"""input_specs conformance + extra property coverage across substrates."""
+
+import dataclasses
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.cells import input_specs, skip_reason
+from repro.models.common import SHAPES, pad_vocab
+
+
+@pytest.mark.parametrize("aid", ARCH_IDS)
+@pytest.mark.parametrize("shape", list(SHAPES))
+def test_input_specs_every_cell(aid, shape):
+    """Every non-skipped cell has well-formed, allocation-free input specs."""
+    if skip_reason(aid, shape):
+        return
+    specs = input_specs(aid, shape)
+    assert specs, (aid, shape)
+    cfg = get_config(aid)
+    sh = SHAPES[shape]
+    for k, v in specs.items():
+        assert isinstance(v, jax.ShapeDtypeStruct), k
+    if sh.kind == "train":
+        assert specs["tokens"].shape[0] == sh.global_batch
+        assert "labels" in specs
+        front = cfg.frontend_len if cfg.family == "vlm" else 0
+        assert specs["tokens"].shape[1] == sh.seq_len - front
+    elif sh.kind == "prefill":
+        assert "labels" not in specs
+    else:
+        assert specs["tokens"].shape == (sh.global_batch, 1)
+
+
+def test_vocab_padding_property():
+    for v in (92553, 32000, 151936, 256206, 65024, 49152):
+        p = pad_vocab(v)
+        assert p >= v and p % 256 == 0 and p - v < 256
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 6), st.floats(1e-4, 1e-2))
+def test_adamw_descends_any_seed(seed, lr):
+    from repro.optim import adamw
+    rng = np.random.default_rng(seed)
+    params = {"w": jnp.asarray(rng.standard_normal(8), jnp.float32)}
+    opt = adamw(weight_decay=0.0)
+    state = opt.init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    l0 = float(loss(params))
+    for _ in range(30):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params, jnp.asarray(lr))
+    assert float(loss(params)) < l0
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 4))
+def test_compression_roundtrip_bounded_error(seed):
+    from repro.compression import compress_decompress
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal(256), jnp.float32)
+    ef = jnp.zeros_like(g)
+    q, scale, new_ef = compress_decompress(g, ef)
+    # single-shot quantization error bounded by half a quantization step
+    assert float(jnp.max(jnp.abs(new_ef))) <= float(scale) * 0.5 + 1e-7
+    # and error feedback preserves the total signal exactly
+    deq = q.astype(jnp.float32) * scale
+    np.testing.assert_allclose(np.asarray(deq + new_ef), np.asarray(g),
+                               rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 3), st.sampled_from([3, 7, 27]))
+def test_synth_counts_scale_with_jam(ui, uj, points):
+    """Property: loads grow with the frame, FPU ops with the outputs."""
+    from repro.core.synth import StencilConfig, synth_stencil
+    if points == 27:
+        kernel = "mm"
+    elif points == 3:
+        kernel = "lc"
+    else:
+        kernel = "mm"
+    k = synth_stencil(StencilConfig(points, kernel, ui, uj))
+    c = k.counts
+    outs = ui * uj
+    assert c.stores == outs
+    per_stencil = {3: 3, 7: 7, 27: 27}[points]
+    expect_fpu = per_stencil * outs + (outs if kernel == "lc" else 0)
+    assert c.fpu == expect_fpu
+    # effective arithmetic intensity never degrades with more jam
+    k11 = synth_stencil(StencilConfig(points, kernel, 1, 1))
+    bps = (c.read_bytes + c.write_bytes) / (2 * outs)
+    bps11 = (k11.counts.read_bytes + k11.counts.write_bytes) / 2
+    assert bps <= bps11 + 1e-9
+
+
+def test_planner_specs_all_valid_divisible():
+    """Property: every spec the planner emits divides the mesh axes."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    repo = __import__("os").path.dirname(
+        __import__("os").path.dirname(__import__("os").path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    code = textwrap.dedent("""
+        import jax
+        import numpy as np
+        from repro.configs import ARCH_IDS, get_config
+        from repro.models import build_model
+        from repro.sharding import param_sharding
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        for aid in ARCH_IDS:
+            cfg = get_config(aid)
+            model = build_model(cfg)
+            shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+            shard, _ = param_sharding(cfg, shapes, mesh, fsdp=True)
+            flat_sh = jax.tree.leaves(shard)
+            flat_shape = [s.shape for s in jax.tree.leaves(shapes)]
+            for s, shp in zip(flat_sh, flat_shape):
+                for i, ax in enumerate(s.spec):
+                    if ax is None:
+                        continue
+                    size = int(np.prod([mesh.shape[a] for a in
+                                        (ax if isinstance(ax, tuple)
+                                         else (ax,))]))
+                    assert shp[i] % size == 0, (aid, shp, s.spec)
+        print("all specs divisible")
+    """)
+    out = subprocess.run([sys.executable, "-c", code], env=env, cwd=repo,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]

@@ -1,0 +1,75 @@
+"""The analytic model reproduces paper Table 3; scheduler quality is bounded."""
+
+import pytest
+
+from repro.core.perfmodel import PAPER_TABLE3, analyze
+from repro.core.synth import PAPER_CONFIGS
+
+ESTIMATES = {}
+
+
+def _est(cfg):
+    if cfg.name not in ESTIMATES:
+        ESTIMATES[cfg.name] = analyze(cfg)
+    return ESTIMATES[cfg.name]
+
+
+@pytest.mark.parametrize("cfg", PAPER_CONFIGS, ids=lambda c: c.name)
+def test_analytic_columns_exact(cfg):
+    """Naive instruction limit + L1/streaming bandwidth limits match exactly."""
+    e = _est(cfg)
+    naive, _, l1, stream, *_ = PAPER_TABLE3[cfg.name]
+    assert abs(e.naive_mstencil - naive) < 0.02
+    assert abs(e.l1_bw_mstencil - l1) < 0.02
+    assert abs(e.streaming_bw_mstencil - stream) < 0.02
+
+
+@pytest.mark.parametrize("cfg", PAPER_CONFIGS, ids=lambda c: c.name)
+def test_simulated_close_or_better(cfg):
+    """OOO-mode makespan within 10% of the paper's simulated value, or better
+    (our greedy scheduler finds tighter schedules for several configs)."""
+    e = _est(cfg)
+    paper_sim = PAPER_TABLE3[cfg.name][1]
+    assert e.simulated_mstencil >= 0.90 * paper_sim
+
+
+@pytest.mark.parametrize("cfg", [c for c in PAPER_CONFIGS
+                                 if c.name.startswith("27")],
+                         ids=lambda c: c.name)
+def test_27pt_simulated_within_6pct(cfg):
+    e = _est(cfg)
+    paper_sim = PAPER_TABLE3[cfg.name][1]
+    assert abs(e.simulated_mstencil - paper_sim) / paper_sim < 0.06
+
+
+@pytest.mark.parametrize("cfg", PAPER_CONFIGS, ids=lambda c: c.name)
+def test_limit_ordering(cfg):
+    """Structural sanity: simulated <= naive; streaming <= L3 <= L1 bw."""
+    e = _est(cfg)
+    assert e.simulated_mstencil <= e.naive_mstencil + 0.01
+    assert e.streaming_bw_mstencil <= e.l3_bw_mstencil <= e.l1_bw_mstencil
+    assert e.predicted_l1 <= e.simulated_mstencil + 0.01
+    assert e.schedule_lower_bound > 0
+
+
+def test_27pt_reaches_85pct_of_peak():
+    """Paper headline: 27-pt 2x3 reaches 85% of arithmetic peak in-L1.
+
+    Peak = 62.96 Mstencil/s (27 FMAs/stencil at 1 SIMD FMA/cycle).
+    """
+    from repro.core.synth import StencilConfig
+    e = _est(StencilConfig(27, "mm", 2, 3))
+    assert e.predicted_l1 / 62.96 > 0.85
+
+
+def test_mm_vs_lc_tradeoff():
+    """Table 1 spectrum: mm pressures the LSU, lc pressures the FPU."""
+    from repro.core.synth import StencilConfig
+    mm = _est(StencilConfig(7, "mm", 2, 3))
+    lc = _est(StencilConfig(7, "lc", 2, 3))
+    assert mm.counts.lsu_cycles > mm.counts.fpu      # mm LSU-bound
+    assert lc.counts.fpu > lc.counts.lsu_cycles      # lc FPU-bound
+    # lc's naive instruction limit is higher because load/store cycles are
+    # the 7-pt bottleneck (paper sect. 5.2).  (Our *schedules* close the gap:
+    # both land within 2% of their structural limits, see EXPERIMENTS.md.)
+    assert lc.naive_mstencil > mm.naive_mstencil

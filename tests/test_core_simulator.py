@@ -1,0 +1,97 @@
+"""Functional + timing semantics of the PPC450 simulator."""
+
+import numpy as np
+import pytest
+
+from repro.core.isa import (fxcpmadd, fxcpmul, fxcpxmadd, fxcsmadd, fxcsmul,
+                            fxcsxmadd, fsmr_p, fsmr_s, lfdx, lfpdx, lfsdx,
+                            stfpdx)
+from repro.core.simulator import Machine, MemoryModel, simulate_inorder
+
+
+@pytest.fixture
+def m():
+    mach = Machine(mem_words=256)
+    mach.gpr["g_a"] = 0
+    mach.gpr["g_r"] = 512
+    mach.mem[:8] = np.arange(1.0, 9.0)
+    mach.fpr["f_w"] = (2.0, 3.0)
+    return mach
+
+
+def test_quad_load_and_mutates(m):
+    m.execute([lfpdx("f_x", "g_a", 16)])
+    assert m.fpr["f_x"] == (3.0, 4.0)
+    m.execute([lfdx("f_x", "g_a", 32)])
+    assert m.fpr["f_x"] == (5.0, 4.0)
+    m.execute([lfsdx("f_x", "g_a", 40)])
+    assert m.fpr["f_x"] == (5.0, 6.0)
+
+
+def test_misaligned_quad_raises(m):
+    with pytest.raises(ValueError):
+        m.execute([lfpdx("f_x", "g_a", 8)])
+
+
+def test_fpu_semantics(m):
+    m.fpr["f_c"] = (10.0, 100.0)
+    cases = {
+        "fxcpmul": (20.0, 200.0),        # w.p * c
+        "fxcsmul": (30.0, 300.0),        # w.s * c
+        "fxcpxmadd": (2.0 * 100 + 1, 2.0 * 10 + 1),
+        "fxcsxmadd": (3.0 * 100 + 1, 3.0 * 10 + 1),
+        "fxcpmadd": (2.0 * 10 + 1, 2.0 * 100 + 1),
+        "fxcsmadd": (3.0 * 10 + 1, 3.0 * 100 + 1),
+    }
+    builders = {"fxcpmul": fxcpmul, "fxcsmul": fxcsmul,
+                "fxcpxmadd": fxcpxmadd, "fxcsxmadd": fxcsxmadd,
+                "fxcpmadd": fxcpmadd, "fxcsmadd": fxcsmadd}
+    for mn, expect in cases.items():
+        m.fpr["f_t"] = (1.0, 1.0)
+        m.execute([builders[mn]("f_t", "f_w", "f_c")])
+        assert m.fpr["f_t"] == expect, mn
+
+
+def test_half_copies(m):
+    m.fpr["f_a"] = (7.0, 8.0)
+    m.fpr["f_t"] = (1.0, 2.0)
+    m.execute([fsmr_p("f_t", "f_a")])
+    assert m.fpr["f_t"] == (7.0, 2.0)
+    m.execute([fsmr_s("f_t", "f_a")])
+    assert m.fpr["f_t"] == (7.0, 8.0)
+
+
+def test_store_roundtrip(m):
+    m.fpr["f_v"] = (41.0, 42.0)
+    m.execute([stfpdx("f_v", "g_r", 16)])
+    assert m.mem[66] == 41.0 and m.mem[67] == 42.0
+
+
+def test_inorder_chain_latency():
+    """A chain of dependent FMAs must run at 5 cycles/op."""
+    body = [fxcpmadd("f_t", "f_w", "f_t") for _ in range(10)]
+    t = simulate_inorder(body, n_iters=1)
+    assert t.total_cycles >= 5 * 10
+
+
+def test_inorder_independent_fpu_throughput():
+    """Independent FPU ops issue one per cycle."""
+    body = [fxcpmul(f"f_t{i}", "f_w", "f_c") for i in range(10)]
+    t = simulate_inorder(body, n_iters=6)
+    assert t.per_iter_cycles <= 11
+
+
+def test_lsu_every_other_cycle():
+    body = [lfpdx(f"f_x{i}", "g_a", 16 * i) for i in range(8)]
+    t = simulate_inorder(body, n_iters=6)
+    assert 15 <= t.per_iter_cycles <= 17
+
+
+def test_memory_model_stream_latencies():
+    mm = MemoryModel(level="L3", max_streams=2)
+    # first touch of a line: miss; sequential next lines: prefetched
+    lat0 = mm.load_latency(0)
+    lat_seq = mm.load_latency(32)
+    assert lat0 > lat_seq
+    # same line again: L1 hit
+    assert mm.load_latency(0) == 4

@@ -1,0 +1,70 @@
+"""Synthesized kernels reproduce the paper's Table 1/2 resource counts."""
+
+import pytest
+
+from repro.core.perfmodel import PAPER_TABLE2
+from repro.core.synth import PAPER_CONFIGS, StencilConfig, synth_stencil
+
+
+@pytest.mark.parametrize("cfg", PAPER_CONFIGS, ids=lambda c: c.name)
+def test_table2_counts(cfg):
+    k = synth_stencil(cfg)
+    c = k.counts
+    rows, st, in_regs, res_regs, w_regs, loads, stores, fpu, bps = \
+        PAPER_TABLE2[cfg.name]
+    assert len(k.rows) == rows
+    assert cfg.stencils_per_iter == st
+    assert c.result_regs == res_regs
+    assert c.weight_regs == w_regs
+    assert c.loads == loads
+    assert c.stores == stores
+    assert c.fpu == fpu
+    assert abs((c.read_bytes + c.write_bytes) / st - bps) < 0.01
+    if cfg.name == "7-lc-2x3":
+        # Documented deviation (DESIGN.md sect. 8): our aligned-result lc
+        # rotation uses 3 registers per centre stream (28 total) where the
+        # paper's table lists 22; all cycle-determining counts match above.
+        assert c.input_regs == 28
+    else:
+        assert c.input_regs == in_regs
+
+
+def test_table1_subkernel_resources():
+    """Paper Table 1: per-SIMD-iteration resources of mm and lc 3-pt kernels."""
+    mm = synth_stencil(StencilConfig(3, "mm", 1, 1))
+    assert mm.counts.mutate_loads == 2 and mm.counts.stores == 1
+    assert mm.counts.fpu == 3 and mm.counts.input_regs == 1
+    assert mm.counts.lsu_cycles == 6
+    lc = synth_stencil(StencilConfig(3, "lc", 1, 1))
+    assert lc.counts.quad_loads == 1 and lc.counts.stores == 1
+    assert lc.counts.fpu == 4 and lc.counts.input_regs == 2
+    assert lc.counts.lsu_cycles == 4
+
+
+@pytest.mark.parametrize("cfg", [
+    StencilConfig(3, "mm", 2, 2),
+    StencilConfig(7, "mm", 1, 1),
+    StencilConfig(7, "lc", 1, 2),
+    StencilConfig(27, "mm", 3, 1),
+], ids=lambda c: c.name)
+def test_nonpaper_configs_synthesize(cfg):
+    k = synth_stencil(cfg)
+    assert len(k.body) > 0
+    assert k.counts.stores == cfg.ui * cfg.uj
+    # effective arithmetic intensity improves (or holds) with jamming
+    assert k.counts.read_bytes / cfg.stencils_per_iter <= 9 * 8 + 1
+
+
+def test_27pt_rejects_lc():
+    with pytest.raises(ValueError):
+        synth_stencil(StencilConfig(27, "lc", 1, 1))
+
+
+def test_unroll_and_jam_raises_arithmetic_intensity():
+    """Paper sect. 4.3: 27-pt 2x3 jam cuts bytes/stencil 80 -> 34.7."""
+    b11 = synth_stencil(StencilConfig(27, "mm", 1, 1))
+    b23 = synth_stencil(StencilConfig(27, "mm", 2, 3))
+    bps = lambda k: ((k.counts.read_bytes + k.counts.write_bytes)
+                     / k.config.stencils_per_iter)
+    assert bps(b11) == 80.0
+    assert abs(bps(b23) - 104 / 3) < 1e-9

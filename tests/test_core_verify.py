@@ -1,0 +1,65 @@
+"""End-to-end: synthesized + scheduled kernels compute correct stencils."""
+
+import pytest
+
+from repro.core.codegen import allocate_registers, render_c
+from repro.core.scheduler import greedy_schedule
+from repro.core.synth import PAPER_CONFIGS, StencilConfig, synth_stencil
+from repro.core.verify import run_kernel
+
+EXTRA = [StencilConfig(3, "mm", 1, 1), StencilConfig(3, "mm", 2, 2),
+         StencilConfig(7, "mm", 1, 1), StencilConfig(7, "lc", 1, 1),
+         StencilConfig(27, "mm", 2, 1), StencilConfig(27, "mm", 3, 1)]
+
+
+@pytest.mark.parametrize("cfg", PAPER_CONFIGS + EXTRA, ids=lambda c: c.name)
+def test_scheduled_kernel_matches_oracle(cfg):
+    r = run_kernel(cfg, t_iters=5)
+    assert r.ok, f"max err {r.max_abs_err}"
+
+
+@pytest.mark.parametrize("cfg", PAPER_CONFIGS, ids=lambda c: c.name)
+def test_unscheduled_kernel_matches_oracle(cfg):
+    r = run_kernel(cfg, t_iters=4, schedule=False)
+    assert r.ok
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_kernel_matches_oracle_random_seeds(seed):
+    r = run_kernel(StencilConfig(27, "mm", 2, 3), t_iters=4, seed=seed)
+    assert r.ok
+
+
+@pytest.mark.parametrize("cfg", PAPER_CONFIGS, ids=lambda c: c.name)
+def test_register_budget(cfg):
+    """Paper constraint (ILP eqs. 12-13): kernels fit 32 FPRs / 32 GPRs.
+
+    Documented deviation (DESIGN.md sect. 8): our aligned-result 7-lc
+    reconstruction needs 3 registers per centre stream, so at 2x3 it exceeds
+    the FPR file (36) where the paper's (unreconstructible) 2-register scheme
+    fits at 30.  All cycle-determining counts still match Table 2.
+    """
+    k = synth_stencil(cfg)
+    if cfg.name == "7-lc-2x3":
+        with pytest.raises(RuntimeError):
+            allocate_registers(k.body)
+        return
+    _, fprs, gprs = allocate_registers(k.body)
+    assert fprs <= 32
+    assert gprs <= 32
+
+
+def test_codegen_renders_scheduled_asm():
+    k = synth_stencil(StencilConfig(3, "lc", 1, 1))
+    s = greedy_schedule(k.body)
+    src = render_c([k.body[i] for i in s.order], name="stencil3_lc")
+    assert "__asm__ volatile" in src
+    assert "lfpdx" in src and "stfpdx" in src and "fxcxma" in src
+    assert "void stencil3_lc" in src
+
+
+def test_register_pressure_detected():
+    """Over-aggressive jams exceed the FPR file and are rejected."""
+    k = synth_stencil(StencilConfig(27, "mm", 3, 3))   # 25 rows + 9 acc + 4 W
+    with pytest.raises(RuntimeError):
+        allocate_registers(k.body)

@@ -1,0 +1,181 @@
+"""Distribution layer: planner specs, shard_map MoE parity, compressed DP,
+elastic restore, and a miniature dry-run -- all on host-platform placeholder
+devices in subprocesses (tests in this process must see ONE device)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.launch.cells import skip_reason
+from repro.models.common import SHAPES
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str, n_dev: int = 8, timeout: int = 600) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env, cwd=REPO)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_main_process_sees_one_device():
+    assert jax.device_count() == 1
+
+
+def test_planner_specs_on_mesh():
+    print(_run("""
+        import jax, jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.models import build_model
+        from repro.sharding import param_sharding, plan_summary
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        cfg = get_config("qwen1.5-0.5b")
+        model = build_model(cfg)
+        shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        shard, notes = param_sharding(cfg, shapes, mesh, fsdp=True)
+        leaves = jax.tree.leaves(shard)
+        assert all(hasattr(s, "spec") for s in leaves)
+        n_model = sum("model" in str(n.spec) for n in notes)
+        assert n_model > len(notes) // 2, plan_summary(notes)
+        print("planner ok", len(notes), "leaves")
+    """))
+
+
+def test_moe_shard_map_matches_local():
+    """The shard_map MoE (EP and TP modes) equals the single-device path."""
+    print(_run("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_reduced_config
+        from repro.models.moe import init_moe, moe_ffn
+        from repro.sharding.ctx import use_mesh
+
+        for tp, name in ((4, "EP"), (8, "TP-fallback")):
+            cfg = dataclasses.replace(get_reduced_config("mixtral-8x7b"),
+                                      dtype=jnp.float32, n_experts=4,
+                                      top_k=2, capacity_factor=8.0)
+            mesh = jax.make_mesh((8 // tp, tp), ("data", "model"))
+            p = init_moe(jax.random.PRNGKey(0), cfg)
+            x = jnp.asarray(np.random.default_rng(0).standard_normal(
+                (8, 16, cfg.d_model)), jnp.float32)
+            ref, _ = moe_ffn(p, x, cfg)                 # local path
+            with use_mesh(mesh):
+                got = jax.jit(lambda p_, x_: moe_ffn(p_, x_, cfg)[0])(p, x)
+            err = float(jnp.max(jnp.abs(got - ref)))
+            # local capacity differs from global capacity only under
+            # pressure; with capacity_factor=8 nothing drops
+            assert err < 2e-4, (name, err)
+            print(name, "ok", err)
+    """))
+
+
+def test_compressed_dp_training_descends():
+    print(_run("""
+        import dataclasses
+        import jax, jax.numpy as jnp
+        from repro.configs import get_reduced_config
+        from repro.data import SyntheticDataset
+        from repro.models import build_model
+        from repro.models.common import ShapeConfig
+        from repro.optim import adamw, warmup_cosine
+        from repro.runtime import TrainConfig, Trainer
+        cfg = dataclasses.replace(get_reduced_config("qwen1.5-0.5b"),
+                                  dtype=jnp.float32)
+        model = build_model(cfg)
+        mesh = jax.make_mesh((8,), ("data",))
+        ds = SyntheticDataset(cfg, ShapeConfig("t", 32, 8, "train"), seed=0)
+        tc = TrainConfig(steps=8, compress_grads=True, log_every=1)
+        tr = Trainer(model, adamw(), warmup_cosine(1e-3, 2, 8), tc, ds,
+                     mesh=mesh)
+        tr.run(jax.random.PRNGKey(0))
+        losses = [m["loss"] for m in tr.metrics_log]
+        assert losses[-1] < losses[0], losses
+        print("compressed-DP ok", losses[0], "->", losses[-1])
+    """))
+
+
+def test_elastic_checkpoint_restore_across_meshes(tmp_path):
+    """Save sharded on a (2,4) mesh; restore onto (4,2) -- elastic restart."""
+    print(_run(f"""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.checkpoint import CheckpointManager
+        tree = {{"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}}
+        m1 = jax.make_mesh((2, 4), ("data", "model"))
+        sh1 = {{"w": NamedSharding(m1, P("data", "model"))}}
+        placed = jax.tree.map(jax.device_put, tree, sh1)
+        mgr = CheckpointManager({str(tmp_path)!r}, keep=2)
+        mgr.save(1, placed)
+        m2 = jax.make_mesh((4, 2), ("data", "model"))
+        sh2 = {{"w": NamedSharding(m2, P("model", "data"))}}
+        restored, _ = mgr.restore(tree, shardings=sh2)
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.asarray(tree["w"]))
+        assert restored["w"].sharding == sh2["w"]
+        print("elastic restore ok")
+    """))
+
+
+def test_mini_dryrun_cell():
+    """A reduced-config train cell lowers + compiles on an 8-device mesh."""
+    print(_run("""
+        import dataclasses
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import get_reduced_config
+        from repro.data import make_batch_specs
+        from repro.models import build_model
+        from repro.models.common import ShapeConfig
+        from repro.optim import build_optimizer
+        from repro.runtime import TrainConfig, make_train_step
+        from repro.sharding import batch_sharding, param_sharding
+        from repro.sharding.ctx import use_mesh
+        from repro.launch.hlo_analysis import analyze_hlo
+
+        cfg = dataclasses.replace(get_reduced_config("mixtral-8x7b"),
+                                  n_experts=4)
+        model = build_model(cfg)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        shape = ShapeConfig("t", 64, 8, "train")
+        opt = build_optimizer("adamw")
+        params_s = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        opt_s = jax.eval_shape(opt.init, params_s)
+        state_s = {"params": params_s, "opt": opt_s,
+                   "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        p_sh, _ = param_sharding(cfg, state_s, mesh)
+        b_specs = make_batch_specs(cfg, shape)
+        b_sh = batch_sharding(shape, b_specs, mesh)
+        step = make_train_step(model, opt, lambda s: 1e-3, TrainConfig())
+        with mesh, use_mesh(mesh):
+            compiled = jax.jit(step, in_shardings=(p_sh, b_sh)).lower(
+                state_s, b_specs).compile()
+        d = analyze_hlo(compiled.as_text())
+        assert d["flops"] > 0 and d["collective_bytes"] > 0
+        print("mini dryrun ok", d["flops"], d["collective_bytes"])
+    """))
+
+
+def test_skip_matrix_documented():
+    """Exactly the six full-attention archs skip long_500k; nothing else."""
+    skipped = [a for a in
+               ("internvl2-2b", "arctic-480b", "nemotron-4-15b",
+                "qwen2-0.5b", "qwen1.5-0.5b", "seamless-m4t-large-v2")]
+    runs = ["mixtral-8x7b", "zamba2-7b", "falcon-mamba-7b", "starcoder2-7b"]
+    for a in skipped:
+        assert skip_reason(a, "long_500k") is not None, a
+        for s in SHAPES:
+            if s != "long_500k":
+                assert skip_reason(a, s) is None
+    for a in runs:
+        assert skip_reason(a, "long_500k") is None, a

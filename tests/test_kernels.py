@@ -1,0 +1,196 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + properties."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.kernels import (attention_ref, flash_attention, mamba_scan,
+                           mamba_scan_ref, stencil3, stencil3_ref, stencil7,
+                           stencil7_ref, stencil27, stencil27_ref)
+
+RNG = np.random.default_rng(42)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("shape,bi", [((8, 16, 32), 4), ((16, 8, 128), 8),
+                                      ((12, 12, 64), 3), ((8, 24, 32), 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_stencil27_sweep(shape, bi, dtype):
+    a = jnp.asarray(RNG.standard_normal(shape), dtype)
+    w = jnp.asarray(RNG.uniform(0.1, 1.0, (2, 2, 2)), jnp.float32)
+    got = stencil27(a, w, block_i=bi)
+    ref = stencil27_ref(a.astype(jnp.float32), w).astype(dtype)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("shape,bi", [((8, 16, 32), 4), ((16, 8, 128), 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_stencil7_sweep(shape, bi, dtype):
+    a = jnp.asarray(RNG.standard_normal(shape), dtype)
+    w = jnp.asarray(RNG.uniform(0.1, 1.0, 4), jnp.float32)
+    got = stencil7(a, w, block_i=bi)
+    ref = stencil7_ref(a.astype(jnp.float32), w).astype(dtype)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("rows,p,br", [(8, 64, 4), (16, 128, 8), (4, 256, 4)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_stencil3_sweep(rows, p, br, dtype):
+    a = jnp.asarray(RNG.standard_normal((rows, p)), dtype)
+    w = jnp.asarray(RNG.uniform(0.1, 1.0, 2), jnp.float32)
+    got = stencil3(a, w, block_rows=br)
+    ref = stencil3_ref(a.astype(jnp.float32), w).astype(dtype)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_stencil27_matches_ppc450_oracle():
+    """Cross-layer: the Pallas kernel and the PPC450 virtual-machine kernel
+    implement the same operator."""
+    from repro.core.synth import StencilConfig
+    from repro.core.verify import run_kernel
+    r = run_kernel(StencilConfig(27, "mm", 2, 3), t_iters=4, seed=7)
+    assert r.ok  # both verified against the same mathematical stencil
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 4), st.integers(4, 8), st.integers(1, 3))
+def test_stencil27_linearity(b, n, seed):
+    """Property: the stencil is a linear operator."""
+    rng = np.random.default_rng(seed)
+    shape = (2 * b, n, 16)
+    x = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    y = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.1, 1.0, (2, 2, 2)), jnp.float32)
+    lhs = stencil27(x + 2.0 * y, w, block_i=b)
+    rhs = stencil27(x, w, block_i=b) + 2.0 * stencil27(y, w, block_i=b)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_stencil27_superposition_of_3pt():
+    """Paper sect. 3.1: 27-pt == sum of nine 3-pt row kernels when the
+    transverse weights factor accordingly (w constant across planes)."""
+    a = jnp.asarray(RNG.standard_normal((8, 8, 32)), jnp.float32)
+    w = jnp.asarray(RNG.uniform(0.1, 1.0, 2), jnp.float32)  # (edge, center)
+    wk = w[::-1]                                  # w27[.,.,dk]: (center, edge)
+    w27 = jnp.stack([jnp.stack([wk, wk]), jnp.stack([wk, wk])])  # (2,2,2)
+    got = stencil27(a, w27, block_i=4)
+    acc = jnp.zeros_like(a)
+    for di in (-1, 0, 1):
+        for dj in (-1, 0, 1):
+            acc = acc.at[1:-1, 1:-1].add(
+                stencil3_ref(a, w)[1 + di:a.shape[0] - 1 + di,
+                                   1 + dj:a.shape[1] - 1 + dj])
+    acc = acc.at[:, :, 0].set(0).at[:, :, -1].set(0)
+    acc = acc.at[0].set(0).at[-1].set(0)
+    acc = acc.at[:, 0].set(0).at[:, -1].set(0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(acc),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("b,l,d,n,chunk", [(2, 64, 8, 4, 16), (1, 32, 16, 8, 32),
+                                           (3, 48, 4, 4, 12)])
+def test_mamba_scan_sweep(b, l, d, n, chunk):
+    x = jnp.asarray(RNG.standard_normal((b, l, d)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (b, l, d)), jnp.float32)
+    a = -jnp.asarray(RNG.uniform(0.1, 2.0, (d, n)), jnp.float32)
+    bm = jnp.asarray(RNG.standard_normal((b, l, n)), jnp.float32)
+    c = jnp.asarray(RNG.standard_normal((b, l, n)), jnp.float32)
+    dd = jnp.asarray(RNG.standard_normal((d,)), jnp.float32)
+    got = mamba_scan(x, dt, a, bm, c, dd, chunk=chunk)
+    ref = mamba_scan_ref(x, dt, a, bm, c, dd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mamba_scan_chunk_invariance():
+    """Property: chunk size is an implementation detail."""
+    b, l, d, n = 1, 64, 4, 4
+    x = jnp.asarray(RNG.standard_normal((b, l, d)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (b, l, d)), jnp.float32)
+    a = -jnp.asarray(RNG.uniform(0.1, 2.0, (d, n)), jnp.float32)
+    bm = jnp.asarray(RNG.standard_normal((b, l, n)), jnp.float32)
+    c = jnp.asarray(RNG.standard_normal((b, l, n)), jnp.float32)
+    dd = jnp.zeros((d,), jnp.float32)
+    outs = [mamba_scan(x, dt, a, bm, c, dd, chunk=cs) for cs in (8, 16, 64)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,h,hkv,lq,lk,dh,bq,bk", [
+    (2, 4, 2, 32, 32, 16, 16, 16),
+    (1, 8, 2, 16, 64, 32, 8, 16),
+    (1, 6, 6, 24, 24, 64, 8, 8),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(b, h, hkv, lq, lk, dh, bq, bk, causal):
+    q = jnp.asarray(RNG.standard_normal((b, h, lq, dh)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, hkv, lk, dh)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, hkv, lk, dh)), jnp.float32)
+    off = lk - lq if causal else 0
+    got = flash_attention(q, k, v, causal=causal, q_offset=off,
+                          block_q=bq, block_k=bk)
+    ref = attention_ref(q, k, v, causal=causal, q_offset=off)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [4, 8, 16])
+def test_flash_attention_sliding_window(window):
+    q = jnp.asarray(RNG.standard_normal((1, 4, 32, 16)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((1, 2, 32, 16)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((1, 2, 32, 16)), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=8, block_k=8)
+    ref = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_decode_step():
+    """Lq=1 with a long KV cache (the serve_step shape)."""
+    q = jnp.asarray(RNG.standard_normal((2, 4, 1, 32)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((2, 2, 128, 32)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((2, 2, 128, 32)), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, q_offset=127,
+                          block_q=1, block_k=32)
+    ref = attention_ref(q, k, v, causal=True, q_offset=127)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    q = jnp.asarray(RNG.standard_normal((1, 4, 32, 32)), jnp.bfloat16)
+    k = jnp.asarray(RNG.standard_normal((1, 4, 32, 32)), jnp.bfloat16)
+    v = jnp.asarray(RNG.standard_normal((1, 4, 32, 32)), jnp.bfloat16)
+    got = flash_attention(q, k, v, causal=True, block_q=16, block_k=16)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+@pytest.mark.parametrize("shape,bi", [((8, 16, 32), 4), ((16, 8, 128), 8)])
+def test_stencil27_mxu_matches_vpu_form(shape, bi):
+    """Beyond-paper MXU banded-matmul form == the VPU stencil == the oracle."""
+    from repro.kernels import stencil27_mxu
+    a = jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+    w = jnp.asarray(RNG.uniform(0.1, 1.0, (2, 2, 2)), jnp.float32)
+    got = stencil27_mxu(a, w, block_i=bi)
+    ref = stencil27_ref(a, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    vpu = stencil27(a, w, block_i=bi)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(vpu),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,187 @@
+"""Model zoo: per-arch smoke tests + cross-path consistency properties."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_reduced_config
+from repro.models import build_model, param_count
+from repro.models.common import SHAPES
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=32):
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s))),
+             "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)))}
+    if cfg.family == "vlm":
+        batch["frontend"] = jnp.asarray(
+            rng.standard_normal((b, cfg.frontend_len, cfg.frontend_dim)),
+            jnp.float32)
+    elif cfg.family == "encdec":
+        batch["frontend"] = jnp.asarray(
+            rng.standard_normal((b, s, cfg.frontend_dim)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("aid", ARCH_IDS)
+def test_smoke_forward_and_train_step(aid):
+    """Reduced config: one forward + one gradient step, shapes + no NaNs."""
+    cfg = get_reduced_config(aid)
+    m = build_model(cfg)
+    params = m.init(KEY)
+    batch = _batch(cfg)
+    loss, grads = jax.value_and_grad(m.loss_fn)(params, batch)
+    assert jnp.isfinite(loss), aid
+    flat = jax.tree.leaves(grads)
+    assert all(jnp.isfinite(g).all() for g in flat), aid
+    logits = m.apply_fn(params, batch)
+    assert logits.shape[0] == batch["tokens"].shape[0]
+    assert jnp.isfinite(logits.astype(jnp.float32)).all()
+
+
+@pytest.mark.parametrize("aid", ARCH_IDS)
+def test_smoke_decode_step(aid):
+    cfg = get_reduced_config(aid)
+    m = build_model(cfg)
+    params = m.init(KEY)
+    b, ms = 2, 64
+    frontend = (jnp.ones((b, 16, cfg.frontend_dim), jnp.float32)
+                if cfg.family == "encdec" else None)
+    st = m.init_decode_state(params, b, ms, frontend=frontend)
+    logits, st2 = m.decode_step(params, st, jnp.zeros((b, 1), jnp.int32),
+                                jnp.int32(0))
+    assert jnp.isfinite(logits.astype(jnp.float32)).all(), aid
+    assert jax.tree.structure(st) == jax.tree.structure(st2)
+
+
+@pytest.mark.parametrize("aid", ["qwen1.5-0.5b", "falcon-mamba-7b",
+                                 "zamba2-7b", "mixtral-8x7b"])
+def test_decode_matches_prefill(aid):
+    """Stepwise decode must reproduce the full-sequence forward."""
+    cfg = dataclasses.replace(get_reduced_config(aid), dtype=jnp.float32)
+    m = build_model(cfg)
+    params = m.init(KEY)
+    b, t = 2, 8
+    rng = np.random.default_rng(1)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, t)))
+    full = m.apply_fn(params, {"tokens": tokens})
+
+    st = m.init_decode_state(params, b, t)
+    outs = []
+    for i in range(t):
+        lg, st = m.decode_step(params, st, tokens[:, i:i + 1], jnp.int32(i))
+        outs.append(lg[:, 0])
+    step = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(step), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_moe_identical_experts_equal_dense():
+    """Property: with identical experts and ample capacity, routed output ==
+    the single expert applied densely (top-k weights are normalized)."""
+    from repro.models.moe import init_moe, moe_ffn
+    cfg = dataclasses.replace(get_reduced_config("mixtral-8x7b"),
+                              dtype=jnp.float32, capacity_factor=8.0)
+    p = init_moe(KEY, cfg)
+    p["wi"] = jnp.broadcast_to(p["wi"][:1], p["wi"].shape)
+    p["wg"] = jnp.broadcast_to(p["wg"][:1], p["wg"].shape)
+    p["wo"] = jnp.broadcast_to(p["wo"][:1], p["wo"].shape)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((2, 16, 64)),
+                    jnp.float32)
+    out, aux = moe_ffn(p, x, cfg)
+    dense = jax.nn.silu(x @ p["wg"][0]) * (x @ p["wi"][0]) @ p["wo"][0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(dense),
+                               rtol=1e-4, atol=1e-4)
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_tokens():
+    from repro.models.moe import moe_ffn, init_moe
+    cfg = dataclasses.replace(get_reduced_config("mixtral-8x7b"),
+                              dtype=jnp.float32, capacity_factor=0.01)
+    p = init_moe(KEY, cfg)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((2, 256, 64)),
+                    jnp.float32)
+    out, _ = moe_ffn(p, x, cfg)
+    assert jnp.isfinite(out).all()
+
+
+@pytest.mark.parametrize("kind", ["mamba1", "mamba2"])
+def test_mamba_chunked_matches_stepwise(kind):
+    """The chunked scan equals running the block one token at a time."""
+    aid = "falcon-mamba-7b" if kind == "mamba1" else "zamba2-7b"
+    cfg = dataclasses.replace(get_reduced_config(aid), dtype=jnp.float32)
+    from repro.models.ssm import init_mamba, init_ssm_state, mamba_block
+    p = init_mamba(KEY, cfg)
+    b, l = 2, 12
+    x = jnp.asarray(np.random.default_rng(2).standard_normal(
+        (b, l, cfg.d_model)), jnp.float32)
+    full, _ = mamba_block(p, x, cfg)
+    st = init_ssm_state(cfg, b)
+    outs = []
+    for i in range(l):
+        o, st = mamba_block(p, x[:, i:i + 1], cfg, state=st)
+        outs.append(o[:, 0])
+    step = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(step), np.asarray(full),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_swa_limits_receptive_field():
+    """Sliding-window attention must ignore keys beyond the window."""
+    cfg = dataclasses.replace(get_reduced_config("starcoder2-7b"),
+                              dtype=jnp.float32, window=4, n_layers=1)
+    m = build_model(cfg)
+    params = m.init(KEY)
+    rng = np.random.default_rng(3)
+    t1 = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 16)))
+    t2 = t1.at[0, 0:8].set((t1[0, 0:8] + 1) % cfg.vocab_size)
+    l1 = m.apply_fn(params, {"tokens": t1})
+    l2 = m.apply_fn(params, {"tokens": t2})
+    # last position attends only to the final window=4 tokens (plus itself
+    # through the residual stream); identical suffix => identical logits
+    np.testing.assert_allclose(np.asarray(l1[:, -1]), np.asarray(l2[:, -1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_param_counts_match_published_scale():
+    """Analytic parameter counts land on the published model scales."""
+    expected = {"mixtral-8x7b": 46.7e9, "arctic-480b": 480e9,
+                "falcon-mamba-7b": 7.3e9, "starcoder2-7b": 7.2e9,
+                "nemotron-4-15b": 15.1e9, "qwen2-0.5b": 0.49e9,
+                "zamba2-7b": 7.0e9}
+    for aid, exp in expected.items():
+        got = param_count(get_config(aid))
+        assert abs(got - exp) / exp < 0.12, f"{aid}: {got/1e9:.1f}B vs {exp/1e9:.1f}B"
+
+
+def test_full_configs_match_assignment():
+    """Exact dims from the assignment table."""
+    spec = {
+        "internvl2-2b": (24, 2048, 16, 8, 8192, 92553),
+        "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+        "falcon-mamba-7b": (64, 4096, None, None, 0, 65024),
+        "starcoder2-7b": (32, 4608, 36, 4, 18432, 49152),
+        "nemotron-4-15b": (32, 6144, 48, 8, 24576, 256000),
+        "qwen2-0.5b": (24, 896, 14, 2, 4864, 151936),
+        "qwen1.5-0.5b": (24, 1024, 16, 16, 2816, 151936),
+        "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+    }
+    for aid, (nl, d, h, kv, ff, v) in spec.items():
+        cfg = get_config(aid)
+        layers = cfg.enc_layers if cfg.family == "encdec" else cfg.n_layers
+        assert layers == nl, aid
+        assert cfg.d_model == d, aid
+        if h is not None:
+            assert cfg.n_heads == h and cfg.n_kv_heads == kv, aid
+        assert cfg.d_ff == ff, aid
+        assert cfg.vocab_size == v, aid
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["long_500k"].seq_len == 524288

@@ -1,0 +1,162 @@
+"""Optimizers, data pipeline, checkpointing, compression, train loop."""
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.compression import compress_decompress, init_error_feedback
+from repro.configs import get_reduced_config
+from repro.data import SyntheticDataset
+from repro.models import build_model
+from repro.models.common import SHAPES, ShapeConfig
+from repro.optim import adafactor, adamw, clip_by_global_norm, warmup_cosine
+from repro.runtime import StepTimer, TrainConfig, Trainer, make_train_step
+from repro.runtime.loop import init_train_state
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _quadratic_params():
+    return {"w": jnp.asarray([3.0, -2.0]), "b": jnp.asarray([[1.0, 2.0],
+                                                             [3.0, 4.0]])}
+
+
+@pytest.mark.parametrize("make_opt", [adamw, adafactor])
+def test_optimizers_descend(make_opt):
+    opt = make_opt()
+    params = _quadratic_params()
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+
+    l0 = loss(params)
+    for _ in range(50):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params, jnp.asarray(0.05))
+    assert loss(params) < 0.5 * l0
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - 20.0) < 1e-4
+    got = float(jnp.linalg.norm(clipped["a"]))
+    assert abs(got - 1.0) < 1e-4
+
+
+def test_warmup_cosine_shape():
+    lr = warmup_cosine(1e-3, 10, 100)
+    assert float(lr(0)) == 0.0
+    assert abs(float(lr(10)) - 1e-3) < 1e-9
+    assert float(lr(100)) < float(lr(50)) < float(lr(10)) + 1e-9
+    assert abs(float(lr(100)) - 1e-4) < 1e-6
+
+
+def test_dataset_deterministic_and_sharded():
+    cfg = get_reduced_config("qwen1.5-0.5b")
+    shp = ShapeConfig("t", 64, 8, "train")
+    ds = SyntheticDataset(cfg, shp, seed=1)
+    b1 = ds.global_batch(3)
+    b2 = ds.global_batch(3)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # next-token labels
+    np.testing.assert_array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+    h0 = ds.host_batch(3, 0, 2)
+    assert h0["tokens"].shape[0] == 4
+    b5 = ds.global_batch(5)
+    assert not np.array_equal(b1["tokens"], b5["tokens"])
+
+
+def test_checkpoint_roundtrip_and_keep(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16)}}
+    for s in (10, 20, 30):
+        mgr.save(s, jax.tree.map(lambda t: t * s, tree), meta={"step": s})
+    assert mgr.latest_step() == 30
+    restored, manifest = mgr.restore(tree)
+    assert manifest["step"] == 30
+    np.testing.assert_allclose(np.asarray(restored["a"], np.float32),
+                               np.asarray(tree["a"]) * 30)
+    assert restored["nested"]["b"].dtype == jnp.bfloat16
+    # keep=2 garbage-collected step 10
+    assert not os.path.exists(os.path.join(str(tmp_path), "step_00000010"))
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"a": jnp.ones((2, 2))})
+    with pytest.raises(ValueError):
+        mgr.restore({"a": jnp.ones((3, 3))})
+
+
+def test_compression_error_feedback_unbiased():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal(512), jnp.float32) * 1e-3
+    ef = jnp.zeros_like(g)
+    total_deq = jnp.zeros_like(g)
+    for _ in range(64):
+        q, scale, ef = compress_decompress(g, ef)
+        total_deq = total_deq + q.astype(jnp.float32) * scale
+    # time-averaged dequantized signal converges to the true gradient
+    np.testing.assert_allclose(np.asarray(total_deq / 64), np.asarray(g),
+                               atol=5e-5)
+
+
+def test_trainer_end_to_end_with_restart(tmp_path):
+    cfg = dataclasses.replace(get_reduced_config("qwen1.5-0.5b"),
+                              dtype=jnp.float32)
+    model = build_model(cfg)
+    ds = SyntheticDataset(cfg, ShapeConfig("t", 32, 4, "train"), seed=0)
+    tc = TrainConfig(steps=6, ckpt_every=3, ckpt_dir=str(tmp_path), keep=2,
+                     log_every=1)
+    tr = Trainer(model, adamw(), warmup_cosine(1e-3, 2, 6), tc, ds)
+    state = tr.run(KEY)
+    assert int(state["step"]) == 6
+    losses = [m["loss"] for m in tr.metrics_log]
+    assert losses[-1] < losses[0]          # it learns the synthetic stream
+    # simulate failure + restart: a fresh Trainer resumes from step 3 or 6
+    tr2 = Trainer(model, adamw(), warmup_cosine(1e-3, 2, 6), tc, ds)
+    state2 = tr2.run(KEY)
+    assert int(state2["step"]) == 6
+
+
+def test_gradient_accumulation_matches_full_batch():
+    cfg = dataclasses.replace(get_reduced_config("qwen1.5-0.5b"),
+                              dtype=jnp.float32)
+    model = build_model(cfg)
+    from repro.optim import adamw as mk
+    state = init_train_state(model, mk(), KEY)
+    ds = SyntheticDataset(cfg, ShapeConfig("t", 32, 4, "train"), seed=0)
+    batch = jax.tree.map(jnp.asarray, ds.global_batch(0))
+    lr = lambda s: jnp.asarray(1e-3)
+    s1 = make_train_step(model, mk(), lr, TrainConfig(accum=1))
+    s2 = make_train_step(model, mk(), lr, TrainConfig(accum=2))
+    st1, m1 = jax.jit(s1)(state, batch)
+    st2, m2 = jax.jit(s2)(state, batch)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-4
+    p1 = jax.tree.leaves(st1["params"])[0]
+    p2 = jax.tree.leaves(st2["params"])[0]
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_straggler_detector():
+    import time
+    hits = []
+    t = StepTimer(window=16, threshold=1.5,
+                  on_straggler=lambda s, dt, med: hits.append(s))
+    for i in range(10):
+        t.start()
+        time.sleep(0.002)
+        t.stop(i)
+    t.start()
+    time.sleep(0.05)
+    t.stop(99)
+    assert 99 in t.flagged and hits == [99]
