@@ -5,10 +5,19 @@ wall-clock Mstencil/s across the cache hierarchy, the same experiment shape
 as the paper's Figures 8-10 -- and verify the Pallas kernel (interpret mode)
 against it at each size.  TPU numbers come from running the same harness on
 real hardware.
+
+The tail rows exercise the unified stencil engine: batched execution, fused
+multi-sweep Jacobi (``s`` operator applications per HBM round-trip), and a
+2-device halo-exchange ``shard_map`` run (forced host-platform devices, in a
+subprocess so this process keeps its single-device view).
 """
 
 from __future__ import annotations
 
+import os
+import subprocess
+import sys
+import textwrap
 import time
 from typing import List
 
@@ -16,8 +25,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import (stencil3_ref, stencil7_ref, stencil27,
-                           stencil27_ref)
+from repro.kernels import (stencil_apply, stencil_ref, stencil3_ref,
+                           stencil7_ref, stencil27, stencil27_ref)
 
 SIZES = (14, 30, 62, 126)
 
@@ -71,7 +80,79 @@ def run() -> List[str]:
     rows.append(f"stencil27.mxu_vs_ref,0.0,max_err={err_mxu:.2e} "
                 f"ok={err_mxu < 1e-4} napkin_speedup_v5e={vpu_t/mxu_t:.1f}x "
                 f"(P={p})")
+    rows.extend(_engine_rows(rng))
     return rows
+
+
+def _engine_rows(rng) -> List[str]:
+    """Engine-backed scenarios: batched, fused-sweep, 2-device sharded."""
+    rows: List[str] = []
+    b, m, n, p = 4, 16, 24, 128
+    w = jnp.asarray(rng.uniform(0.1, 1, (2, 2, 2)), jnp.float32)
+    a4 = jnp.asarray(rng.standard_normal((b, m, n, p)), jnp.float32)
+    st = b * (m - 2) * (n - 2) * (p - 2)
+
+    t = _time(lambda x: stencil_apply(x, w, "stencil27", block_i=4), a4)
+    err = float(jnp.max(jnp.abs(stencil_apply(a4, w, "stencil27", block_i=4)
+                                - stencil_ref(a4, w, "stencil27"))))
+    rows.append(f"engine27.batched.{b}x{m}x{n}x{p},{t*1e6:.1f},"
+                f"{st/t/1e6:.2f} Mstencil/s max_err={err:.2e} "
+                f"ok={err < 1e-4}")
+
+    a3 = a4[0]
+    st1 = (m - 2) * (n - 2) * (p - 2)
+    for s in (1, 2, 3):
+        t = _time(lambda x, s=s: stencil_apply(x, w, "stencil27", block_i=4,
+                                               sweeps=s), a3)
+        err = float(jnp.max(jnp.abs(
+            stencil_apply(a3, w, "stencil27", block_i=4, sweeps=s)
+            - stencil_ref(a3, w, "stencil27", sweeps=s))))
+        rows.append(f"engine27.fused_s{s}.{m}^3-ish,{t*1e6:.1f},"
+                    f"{s*st1/t/1e6:.2f} Mstencil/s (sweeps x points / time) "
+                    f"max_err={err:.2e} ok={err < 1e-4}")
+
+    rows.append(_sharded_row())
+    return rows
+
+
+def _sharded_row() -> str:
+    """Time the 2-device halo-exchange path on forced host devices."""
+    code = """
+        import time
+        import jax, numpy as np, jax.numpy as jnp
+        from repro.kernels import stencil_apply, stencil_sharded
+        rng = np.random.default_rng(0)
+        a = jnp.asarray(rng.standard_normal((16, 24, 128)), jnp.float32)
+        w = jnp.asarray(rng.uniform(0.1, 1, (2, 2, 2)), jnp.float32)
+        mesh = jax.make_mesh((2,), ("data",))
+        run = lambda: stencil_sharded(a, w, "stencil27", mesh=mesh,
+                                      sweeps=2).block_until_ready()
+        run()                                   # compile + warm
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter(); run()
+            best = min(best, time.perf_counter() - t0)
+        one = stencil_apply(a, w, "stencil27", block_i=4, sweeps=2)
+        err = float(jnp.max(jnp.abs(stencil_sharded(
+            a, w, "stencil27", mesh=mesh, sweeps=2) - one)))
+        st = 2 * 14 * 22 * 126
+        print(f"engine27.sharded_2dev_s2.16x24x128,{best*1e6:.1f},"
+              f"{st/best/1e6:.2f} Mstencil/s n_dev={jax.device_count()} "
+              f"max_err_vs_single={err:.2e} ok={err < 1e-4}")
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = (os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+        + os.pathsep + env.get("PYTHONPATH", ""))
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=600, env=env)
+    if out.returncode != 0:
+        err_lines = out.stderr.strip().splitlines() or ["(no stderr)"]
+        return ("engine27.sharded_2dev_s2.16x24x128,nan,"
+                f"FAILED: {err_lines[-1][:120]}")
+    out_lines = out.stdout.strip().splitlines() or ["(no stdout)"]
+    return out_lines[-1]
 
 
 if __name__ == "__main__":

@@ -61,7 +61,6 @@ def greedy_schedule(instrs: List[Instr], g: Optional[nx.DiGraph] = None) -> Sche
         ready.sort(key=lambda n: (-prio[n], n))
         fpu_used = iu_used = False
         lsu_used = lsu_free_at > cycle
-        progressed = False
         for n in ready:
             u = instrs[n].unit
             if u is Unit.FPU and not fpu_used:
@@ -76,7 +75,6 @@ def greedy_schedule(instrs: List[Instr], g: Optional[nx.DiGraph] = None) -> Sche
             issue[n] = cycle
             order.append(n)
             unscheduled.discard(n)
-            progressed = True
         cycle += 1
     makespan = max(issue[n] + instrs[n].issue_cycles for n in issue) if issue else 0
     return Schedule(order, issue, makespan, lower_bound(instrs, g))
@@ -84,11 +82,14 @@ def greedy_schedule(instrs: List[Instr], g: Optional[nx.DiGraph] = None) -> Sche
 
 def bb_schedule(instrs: List[Instr], max_nodes: int = 16,
                 node_budget: int = 200_000) -> Optional[Schedule]:
-    """Exact minimum-makespan schedule by branch & bound (small blocks only).
+    """Minimum-makespan schedule by branch & bound (small blocks only).
 
     Returns None if the block exceeds ``max_nodes``.  Implements the resource
     constraints of the paper's ILP (eqs. 2-5) exactly; register-count
     constraints (eqs. 6-13) are checked post-hoc by the allocator instead.
+    Branching is beam-limited to the top-3 candidates per unit by
+    path-to-sink priority, so the result is certified optimal only when
+    ``Schedule.optimal`` (makespan == eq.-1 lower bound) holds.
     """
     n = len(instrs)
     if n > max_nodes:
@@ -114,12 +115,18 @@ def bb_schedule(instrs: List[Instr], max_nodes: int = 16,
             if span < best_span:
                 best_span, best_state = span, (list(order), dict(issue))
             return
-        # bound: remaining critical path from any unscheduled node
+        # bound: completion of what's already issued, and for every
+        # unscheduled node its earliest issue (no earlier than ``cycle`` nor
+        # its data-ready time from scheduled producers) plus its longest
+        # path to a sink.  Prune whenever even this optimistic completion
+        # can't beat the incumbent.
+        span_so_far = max((issue[i] + instrs[i].issue_cycles for i in issue),
+                          default=0)
         rem = [i for i in range(n) if i not in issue]
-        bound = cycle + max(0, max(prio[i] for i in rem) - max(
-            (g[p][i]["weight"] for i in rem for p in g.predecessors(i)
-             if p in issue), default=0) * 0)
-        if cycle >= best_span:
+        bound = max(span_so_far,
+                    max(max(cycle, _ready_time(g, issue, i)) + prio[i]
+                        for i in rem))
+        if bound >= best_span:
             return
         ready = [i for i in rem
                  if all(p in issue for p in g.predecessors(i))
@@ -136,8 +143,6 @@ def bb_schedule(instrs: List[Instr], max_nodes: int = 16,
                     choices.append((f, l, u))
         for f, l, u in choices:
             picked = [x for x in (f, l, u) if x is not None]
-            if not picked and not ready:
-                pass  # idle cycle
             for x in picked:
                 issue[x] = cycle
                 order.append(x)

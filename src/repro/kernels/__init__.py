@@ -2,7 +2,9 @@
 
 from .flash_attention import attention_ref, flash_attention  # noqa: F401
 from .mamba_scan import mamba_scan, mamba_scan_ref  # noqa: F401
-from .stencil3 import stencil3, stencil3_ref  # noqa: F401
-from .stencil7 import stencil7, stencil7_ref  # noqa: F401
-from .stencil27 import stencil27, stencil27_ref  # noqa: F401
+from .stencil_engine import (StencilSpec, autotune_block_i,  # noqa: F401
+                             get_stencil, list_stencils, register_stencil,
+                             spec_from_mask, stencil_apply, stencil_ref,
+                             stencil_sharded, stencil3, stencil3_ref,
+                             stencil7, stencil7_ref, stencil27, stencil27_ref)
 from .stencil_mxu import stencil27_mxu, stencil27_mxu_ref  # noqa: F401

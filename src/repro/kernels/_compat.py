@@ -1,0 +1,16 @@
+"""JAX-version compatibility aliases.
+
+``pltpu.TPUCompilerParams`` was renamed ``pltpu.CompilerParams``, and
+``jax.experimental.shard_map`` graduated to ``jax.shard_map``, in newer JAX;
+kernels import the aliases from here so they run on both.
+"""
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
+shard_map = getattr(jax, "shard_map", None)
+if shard_map is None:
+    from jax.experimental.shard_map import shard_map  # noqa: F401

@@ -1,96 +1,7 @@
-"""Shared machinery for Pallas 3-D stencil kernels (TPU adaptation layer).
+"""Back-compat shim: the shared stencil machinery moved to
+``repro.kernels.stencil_engine`` (``common`` for the Pallas plumbing,
+``autotune`` for block selection)."""
 
-The paper's unroll-and-jam becomes VMEM block tiling: one grid step computes a
-(BI, N, P) output tile; the i-direction halo is realized by passing the input
-array three times with i-shifted BlockSpec index maps (clamped at the array
-ends -- the affected rows are Dirichlet boundary and masked to zero).  The
-k (fastest) dimension lies on the 128-wide lane axis, the paper's two-way
-SIMD packing scaled to the VPU's vector width; unaligned k +- 1 neighbours are
-in-VMEM lane shifts (the load-copy strategy -- TPUs have no partial-register
-mutate).  Grid iteration along i is the pipelined steady-state stream: Pallas
-double-buffers the HBM->VMEM DMAs against VPU compute exactly where the
-PPC450 kernels interleaved LSU and FPU slots.
-"""
-
-from __future__ import annotations
-
-import functools
-from typing import Callable
-
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-
-
-def shifted_planes(prev_blk: jax.Array, cur: jax.Array, nxt_blk: jax.Array):
-    """Rows (i-1, i, i+1) for every row i of the current block."""
-    up = jnp.concatenate([prev_blk[-1:], cur[:-1]], axis=0)
-    down = jnp.concatenate([cur[1:], nxt_blk[:1]], axis=0)
-    return up, cur, down
-
-
-def sym_neighbor_sums(plane: jax.Array):
-    """(centre, j-edge sum, k-edge sum, jk-corner sum) with zero boundaries.
-
-    All four share the plane's shape; j/k boundary entries are garbage that
-    the caller masks (Dirichlet).
-    """
-    jm = jnp.roll(plane, 1, axis=-2)
-    jp = jnp.roll(plane, -1, axis=-2)
-    km = jnp.roll(plane, 1, axis=-1)
-    kp = jnp.roll(plane, -1, axis=-1)
-    cj = jm + jp
-    ck = km + kp
-    cjk = (jnp.roll(jm, 1, axis=-1) + jnp.roll(jm, -1, axis=-1)
-           + jnp.roll(jp, 1, axis=-1) + jnp.roll(jp, -1, axis=-1))
-    return plane, cj, ck, cjk
-
-
-def interior_mask(bi: int, n: int, p: int, i_blk, m_total: int) -> jax.Array:
-    """True on interior points of the global (M, N, P) grid for this block."""
-    gi = i_blk * bi + jax.lax.broadcasted_iota(jnp.int32, (bi, n, p), 0)
-    jj = jax.lax.broadcasted_iota(jnp.int32, (bi, n, p), 1)
-    kk = jax.lax.broadcasted_iota(jnp.int32, (bi, n, p), 2)
-    return ((gi > 0) & (gi < m_total - 1)
-            & (jj > 0) & (jj < n - 1)
-            & (kk > 0) & (kk < p - 1))
-
-
-def stencil_pallas_call(kernel_body: Callable, a: jax.Array, weights: jax.Array,
-                        bi: int, interpret: bool) -> jax.Array:
-    """Common pallas_call wiring: 3 shifted views of ``a`` + weights in SMEM."""
-    m, n, p = a.shape
-    if m % bi != 0:
-        raise ValueError(f"block size {bi} must divide M={m}")
-    nblk = m // bi
-    block = (bi, n, p)
-    grid = (nblk,)
-    in_specs = [
-        pl.BlockSpec(block, lambda i: (jnp.maximum(i - 1, 0), 0, 0)),
-        pl.BlockSpec(block, lambda i: (i, 0, 0)),
-        pl.BlockSpec(block, functools.partial(
-            lambda i, top: (jnp.minimum(i + 1, top), 0, 0), top=nblk - 1)),
-        pl.BlockSpec(weights.shape, lambda i: tuple(0 for _ in weights.shape)),
-    ]
-    return pl.pallas_call(
-        functools.partial(kernel_body, bi=bi, m_total=m),
-        grid=grid,
-        in_specs=in_specs,
-        out_specs=pl.BlockSpec(block, lambda i: (i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
-        interpret=interpret,
-    )(a, a, a, weights)
-
-
-def pick_block_i(m: int, n: int, p: int, itemsize: int,
-                 vmem_budget: int = 8 * 1024 * 1024) -> int:
-    """Model-driven jam-factor selection (the paper's Table-2 reasoning on
-    TPU terms): the largest i-block whose 4 resident tiles + output fit the
-    VMEM budget, preferring multiples of 8 (sublane count)."""
-    per_row = n * p * itemsize
-    max_bi = max(1, vmem_budget // (5 * per_row))
-    bi = min(m, max_bi)
-    for cand in range(bi, 0, -1):
-        if m % cand == 0 and (cand % 8 == 0 or cand < 8):
-            return cand
-    return 1
+from .stencil_engine.autotune import pick_block_i  # noqa: F401
+from .stencil_engine.common import (interior_mask, shifted_planes,  # noqa: F401
+                                    stencil_pallas_call)

@@ -1,2 +1,4 @@
-from .ops import stencil27  # noqa: F401
-from .ref import stencil27_ref  # noqa: F401
+"""Thin shim: the 27-point stencil lives in ``repro.kernels.stencil_engine``
+(registry name ``"stencil27"``)."""
+
+from ..stencil_engine.compat import stencil27, stencil27_ref  # noqa: F401

@@ -1,2 +1,4 @@
-from .ops import stencil3  # noqa: F401
-from .ref import stencil3_ref  # noqa: F401
+"""Thin shim: the 3-point stencil lives in ``repro.kernels.stencil_engine``
+(registry name ``"stencil3"``)."""
+
+from ..stencil_engine.compat import stencil3, stencil3_ref  # noqa: F401

@@ -1,2 +1,4 @@
-from .ops import stencil7  # noqa: F401
-from .ref import stencil7_ref  # noqa: F401
+"""Thin shim: the 7-point stencil lives in ``repro.kernels.stencil_engine``
+(registry name ``"stencil7"``)."""
+
+from ..stencil_engine.compat import stencil7, stencil7_ref  # noqa: F401

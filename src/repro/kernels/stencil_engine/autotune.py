@@ -1,0 +1,80 @@
+"""Cost-model block selection (replaces the old ``pick_block_i`` heuristic).
+
+Same shape of reasoning as ``repro.core.perfmodel``: performance is
+``min(compute limit, bandwidth limit)``, so the modeled time of one grid step
+is ``max(DMA time, VPU time)`` and we pick the feasible block minimizing the
+modeled time per output point:
+
+* DMA bytes/step: three input blocks (centre + the two i-neighbours that
+  carry the halo) plus one output block -- ``4 * bi * N * P * itemsize``;
+  fused sweeps amortize this over ``s`` operator applications.
+* VPU flops/step: ``2 * taps`` per point of the *extended* ``(bi + 2s)``-row
+  working block, per sweep -- the halo-recompute tax, which shrinks as ``bi``
+  grows.
+* VMEM residency: 3 input tiles + output tile (input dtype) + the extended
+  working block and its tap accumulator (accumulation dtype) must fit the
+  budget -- the paper's Table-2 "registers required vs registers available"
+  constraint in VMEM terms.
+
+Feasible blocks divide M (Pallas grid constraint) and satisfy ``bi >= s``
+(the +-1-block halo must cover the fused-sweep depth).  Ties prefer sublane
+multiples (8), as the old heuristic did.
+"""
+
+from __future__ import annotations
+
+# TPU-v5e-flavoured roofline constants (per core), only ever used as a ratio.
+HBM_BW = 819e9          # bytes/s
+VPU_FLOPS = 3e12        # f32 elementwise flop/s
+
+
+def _step_time(bi: int, n: int, p: int, itemsize: int, sweeps: int,
+               taps: int) -> float:
+    dma = 4.0 * bi * n * p * itemsize / HBM_BW
+    vpu = 2.0 * taps * sweeps * (bi + 2 * sweeps) * n * p / VPU_FLOPS
+    return max(dma, vpu) / (bi * n * p * sweeps)   # per output point-sweep
+
+
+def _fits(bi: int, n: int, p: int, itemsize: int, sweeps: int,
+          acc_itemsize: int, vmem_budget: int) -> bool:
+    io_tiles = 4 * bi * n * p * itemsize
+    working = 2 * (bi + 2 * sweeps) * n * p * acc_itemsize
+    return io_tiles + working <= vmem_budget
+
+
+def autotune_block_i(m: int, n: int, p: int, itemsize: int,
+                     sweeps: int = 1, taps: int = 27,
+                     acc_itemsize: int = 4,
+                     vmem_budget: int = 8 * 1024 * 1024) -> int:
+    """Smallest modeled time per output point over feasible divisors of M."""
+    cands = [bi for bi in range(max(1, sweeps), m + 1) if m % bi == 0]
+    if not cands:
+        return m
+    feasible = [bi for bi in cands
+                if _fits(bi, n, p, itemsize, sweeps, acc_itemsize,
+                         vmem_budget)]
+    if not feasible:           # nothing fits: take the smallest legal block
+        return cands[0]
+    # min cost; tie-break to sublane multiples (or tiny blocks), then larger.
+    def key(bi: int):
+        return (_step_time(bi, n, p, itemsize, sweeps, taps),
+                0 if (bi % 8 == 0 or bi < 8) else 1,
+                -bi)
+    return min(feasible, key=key)
+
+
+def pick_block_i(m: int, n: int, p: int, itemsize: int,
+                 vmem_budget: int = 8 * 1024 * 1024) -> int:
+    """Legacy entry point (kept for the MXU kernel and old callers)."""
+    return autotune_block_i(m, n, p, itemsize, sweeps=1, taps=27,
+                            vmem_budget=vmem_budget)
+
+
+def pick_block_rows(rows: int, p: int, itemsize: int,
+                    vmem_budget: int = 4 << 20) -> int:
+    """Row-block choice for the k-only (1-D) path: the largest power-of-two
+    row count whose tile fits the budget, falling back to all rows."""
+    for cand in (256, 128, 64, 32, 16, 8):
+        if rows % cand == 0 and cand * p * itemsize <= vmem_budget:
+            return cand
+    return rows

@@ -1,0 +1,59 @@
+"""Shared Pallas plumbing kept for non-engine stencil kernels (stencil_mxu).
+
+The engine's own kernels live in :mod:`.kernel`/:mod:`.ops`; these are the
+original halo/tiling utilities the MXU banded-matmul kernel still imports
+(``shifted_planes``, ``interior_mask``, ``stencil_pallas_call``), re-exported
+by ``repro.kernels._stencil_common`` for backward compatibility.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def shifted_planes(prev_blk: jax.Array, cur: jax.Array, nxt_blk: jax.Array):
+    """Rows (i-1, i, i+1) for every row i of the current block."""
+    up = jnp.concatenate([prev_blk[-1:], cur[:-1]], axis=0)
+    down = jnp.concatenate([cur[1:], nxt_blk[:1]], axis=0)
+    return up, cur, down
+
+
+def interior_mask(bi: int, n: int, p: int, i_blk, m_total: int) -> jax.Array:
+    """True on interior points of the global (M, N, P) grid for this block."""
+    gi = i_blk * bi + jax.lax.broadcasted_iota(jnp.int32, (bi, n, p), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (bi, n, p), 1)
+    kk = jax.lax.broadcasted_iota(jnp.int32, (bi, n, p), 2)
+    return ((gi > 0) & (gi < m_total - 1)
+            & (jj > 0) & (jj < n - 1)
+            & (kk > 0) & (kk < p - 1))
+
+
+def stencil_pallas_call(kernel_body: Callable, a: jax.Array, weights: jax.Array,
+                        bi: int, interpret: bool) -> jax.Array:
+    """Common pallas_call wiring: 3 shifted views of ``a`` + weights in SMEM."""
+    m, n, p = a.shape
+    if m % bi != 0:
+        raise ValueError(f"block size {bi} must divide M={m}")
+    nblk = m // bi
+    block = (bi, n, p)
+    grid = (nblk,)
+    in_specs = [
+        pl.BlockSpec(block, lambda i: (jnp.maximum(i - 1, 0), 0, 0)),
+        pl.BlockSpec(block, lambda i: (i, 0, 0)),
+        pl.BlockSpec(block, functools.partial(
+            lambda i, top: (jnp.minimum(i + 1, top), 0, 0), top=nblk - 1)),
+        pl.BlockSpec(weights.shape, lambda i: tuple(0 for _ in weights.shape)),
+    ]
+    return pl.pallas_call(
+        functools.partial(kernel_body, bi=bi, m_total=m),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(block, lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        interpret=interpret,
+    )(a, a, a, weights)

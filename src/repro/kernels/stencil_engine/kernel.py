@@ -1,0 +1,93 @@
+"""The single Pallas kernel body behind every engine stencil.
+
+One body serves 3-, 7-, 27-point and arbitrary radius-1 masks: the spec's tap
+list is unrolled at trace time into an FMA chain (the paper's synthesis step,
+retargeted from PPC450 SIMOMD slots to VPU lane shifts).  The same body also
+fuses ``s`` Jacobi sweeps per grid step: each block is widened by ``s`` halo
+rows on either side (read from the +-1 neighbour blocks), the sweep loop runs
+register/VMEM-resident, and only the central ``bi`` rows are written back --
+one HBM round-trip for ``s`` applications of the operator, the Pallas
+analogue of the paper's register-resident steady-state stream.  Global
+geometry (row offset, global M) arrives as a small int32 operand so the same
+kernel runs unsharded (offset 0) and as the per-shard body of the halo-
+exchange ``shard_map`` path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .spec import StencilSpec
+
+
+def acc_dtype_for(dtype) -> jnp.dtype:
+    """bf16/f32 accumulate in f32; the f64 reference path stays f64."""
+    return jnp.float64 if dtype == jnp.float64 else jnp.float32
+
+
+def accumulate_taps(u: jax.Array, w: jax.Array, spec: StencilSpec,
+                    acc_dtype) -> jax.Array:
+    """Expand the spec's tap list: ``acc[x] = sum_t w[t] * u[x + offset_t]``.
+
+    Neighbour access is by ``jnp.roll`` on the trailing axes (the TPU
+    load-copy strategy -- lane/sublane shifts of the resident block).  Rolled
+    wrap-around values only ever land on rows the caller masks out.  Tap
+    order is the spec's lexicographic order, which keeps the f64 path
+    bit-identical to the jnp reference.
+    """
+    acc = jnp.zeros(u.shape, acc_dtype)
+    for (di, dj, dk), wi in zip(spec.offsets, spec.w_index):
+        t = u
+        if di:
+            t = jnp.roll(t, -di, axis=-3)
+        if dj:
+            t = jnp.roll(t, -dj, axis=-2)
+        if dk:
+            t = jnp.roll(t, -dk, axis=-1)
+        acc = acc + w[wi] * t
+    return acc
+
+
+def stencil3d_kernel(a_prev, a_cur, a_next, geom_ref, w_ref, o_ref, *,
+                     spec: StencilSpec, bi: int, sweeps: int, acc_dtype):
+    """Fused-sweep volumetric kernel; blocks are ``(1, bi, N, P)``.
+
+    ``geom_ref`` = (global row of this array's row 0, global M) -- both 0 and
+    the local M for the single-device path; shard-dependent under shard_map.
+    """
+    i_blk = pl.program_id(1)
+    s = sweeps
+    prev, cur, nxt = a_prev[0], a_cur[0], a_next[0]        # (bi, N, P)
+    # Extended working block: s halo rows each side, accumulation dtype.
+    u = jnp.concatenate([prev[-s:], cur, nxt[:s]], axis=0).astype(acc_dtype)
+    w = w_ref[...]
+    n, p = cur.shape[-2], cur.shape[-1]
+    ext = bi + 2 * s
+    gi = (geom_ref[0] + i_blk * bi - s
+          + jax.lax.broadcasted_iota(jnp.int32, (ext, n, p), 0))
+    jj = jax.lax.broadcasted_iota(jnp.int32, (ext, n, p), 1)
+    kk = jax.lax.broadcasted_iota(jnp.int32, (ext, n, p), 2)
+    interior = ((gi > 0) & (gi < geom_ref[1] - 1)
+                & (jj > 0) & (jj < n - 1) & (kk > 0) & (kk < p - 1))
+    # Jacobi sweeps, Dirichlet boundary re-zeroed after each; the valid
+    # region shrinks one row per sweep from the extended edges, so the
+    # central bi rows are exact after s sweeps (requires s <= bi).
+    for _ in range(s):
+        u = jnp.where(interior, accumulate_taps(u, w, spec, acc_dtype), 0)
+    o_ref[0] = u[s:s + bi].astype(o_ref.dtype)
+
+
+def stencil1d_kernel(a_ref, w_ref, o_ref, *, spec: StencilSpec, sweeps: int,
+                     acc_dtype):
+    """k-only kernel over ``(block_rows, P)`` blocks; rows are independent,
+    so fused sweeps need no halo at all."""
+    u = a_ref[...].astype(acc_dtype)
+    w = w_ref[...]
+    p = u.shape[-1]
+    kk = jax.lax.broadcasted_iota(jnp.int32, u.shape, u.ndim - 1)
+    interior = (kk > 0) & (kk < p - 1)
+    for _ in range(sweeps):
+        u = jnp.where(interior, accumulate_taps(u, w, spec, acc_dtype), 0)
+    o_ref[...] = u.astype(o_ref.dtype)

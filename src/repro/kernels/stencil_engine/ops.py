@@ -1,0 +1,111 @@
+"""Jitted public entry point: one configurable stencil executor.
+
+``stencil_apply`` runs any registered (or ad-hoc) radius-1 spec over batched,
+multi-dtype inputs, with optional fused Jacobi sweeps, via the single kernel
+body in :mod:`.kernel`.  See the package docstring for the full tour.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .autotune import autotune_block_i, pick_block_rows
+from .kernel import acc_dtype_for, stencil1d_kernel, stencil3d_kernel
+from .spec import StencilSpec, get_stencil
+
+
+def call_3d(a4: jax.Array, wf: jax.Array, geom: jax.Array, spec: StencilSpec,
+            bi: int, sweeps: int, interpret: bool) -> jax.Array:
+    """Wire the fused volumetric kernel: ``a4`` is ``(B, M, N, P)``; the
+    i-halo comes from passing ``a4`` three times under +-1-shifted (clamped)
+    block index maps.  ``geom`` = (global row offset, global M) int32."""
+    b, m, n, p = a4.shape
+    if m % bi != 0:
+        raise ValueError(f"block size {bi} must divide M={m}")
+    if sweeps > bi:
+        raise ValueError(f"fused sweeps={sweeps} exceed the +-1-block halo; "
+                         f"need block_i >= sweeps (block_i={bi})")
+    nblk = m // bi
+    block = (1, bi, n, p)
+    acc = acc_dtype_for(a4.dtype)
+    in_specs = [
+        pl.BlockSpec(block, lambda bb, i: (bb, jnp.maximum(i - 1, 0), 0, 0)),
+        pl.BlockSpec(block, lambda bb, i: (bb, i, 0, 0)),
+        pl.BlockSpec(block, functools.partial(
+            lambda bb, i, top: (bb, jnp.minimum(i + 1, top), 0, 0),
+            top=nblk - 1)),
+        pl.BlockSpec(geom.shape, lambda bb, i: (0,)),
+        pl.BlockSpec(wf.shape, lambda bb, i: (0,)),
+    ]
+    return pl.pallas_call(
+        functools.partial(stencil3d_kernel, spec=spec, bi=bi, sweeps=sweeps,
+                          acc_dtype=acc),
+        grid=(b, nblk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(block, lambda bb, i: (bb, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(a4.shape, a4.dtype),
+        interpret=interpret,
+    )(a4, a4, a4, geom, wf)
+
+
+def _call_1d(a2: jax.Array, wf: jax.Array, spec: StencilSpec, block_rows: int,
+             sweeps: int, interpret: bool) -> jax.Array:
+    rows, p = a2.shape
+    if rows % block_rows != 0:
+        raise ValueError(f"block_rows {block_rows} must divide rows={rows}")
+    return pl.pallas_call(
+        functools.partial(stencil1d_kernel, spec=spec, sweeps=sweeps,
+                          acc_dtype=acc_dtype_for(a2.dtype)),
+        grid=(rows // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, p), lambda i: (i, 0)),
+                  pl.BlockSpec(wf.shape, lambda i: (0,))],
+        out_specs=pl.BlockSpec((block_rows, p), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(a2.shape, a2.dtype),
+        interpret=interpret,
+    )(a2, wf)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("stencil", "block_i", "sweeps",
+                                    "interpret"))
+def stencil_apply(a: jax.Array, w: jax.Array,
+                  stencil: Union[str, int, StencilSpec] = "stencil27",
+                  block_i: Optional[int] = None, sweeps: int = 1,
+                  interpret: bool = True) -> jax.Array:
+    """Apply a registered stencil: ``sweeps`` fused Jacobi applications.
+
+    * volumetric specs: ``a`` is ``(..., M, N, P)`` -- leading dims batch;
+    * k-only specs: ``a`` is ``(..., P)`` -- leading dims are rows;
+    * bf16/f32 inputs accumulate in f32, f64 stays f64 (reference path);
+    * ``block_i`` (i-block / row-block size) defaults to the cost model.
+    """
+    if sweeps < 1:
+        raise ValueError(f"sweeps must be >= 1, got {sweeps}")
+    spec = get_stencil(stencil)
+    acc = acc_dtype_for(a.dtype)
+    wf = spec.canon_weights(w).astype(acc)
+
+    if spec.ndim == 1:
+        if a.ndim < 2:
+            raise ValueError(f"{spec.name}: need (..., rows, P), got {a.shape}")
+        rows = int(np.prod(a.shape[:-1]))
+        a2 = a.reshape(rows, a.shape[-1])
+        br = block_i or pick_block_rows(rows, a.shape[-1], a.dtype.itemsize)
+        return _call_1d(a2, wf, spec, br, sweeps, interpret).reshape(a.shape)
+
+    if a.ndim < 3:
+        raise ValueError(f"{spec.name}: need (..., M, N, P), got {a.shape}")
+    m, n, p = a.shape[-3:]
+    batch = int(np.prod(a.shape[:-3])) if a.ndim > 3 else 1
+    a4 = a.reshape(batch, m, n, p)
+    bi = block_i or autotune_block_i(m, n, p, a.dtype.itemsize,
+                                     sweeps=sweeps, taps=spec.taps)
+    geom = jnp.array([0, m], jnp.int32)
+    out = call_3d(a4, wf, geom, spec, bi, sweeps, interpret)
+    return out.reshape(a.shape)

@@ -1,0 +1,51 @@
+"""jnp oracle for every engine stencil (f64-capable reference path).
+
+Expands the same tap list as the Pallas kernel, in the same order, with the
+same accumulation dtype rules -- so in f64 the kernel and this reference are
+bit-identical, and in f32/bf16 they differ only by block-boundary-free
+rounding noise.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import acc_dtype_for, accumulate_taps
+from .spec import StencilSpec, get_stencil
+
+
+def _interior_mask(shape, ndim: int) -> jax.Array:
+    mask = jnp.ones(shape, bool)
+    axes = range(-ndim, 0)
+    for ax in axes:
+        idx = jax.lax.broadcasted_iota(jnp.int32, shape, len(shape) + ax)
+        mask = mask & (idx > 0) & (idx < shape[ax] - 1)
+    return mask
+
+
+def apply_spec_once(u: jax.Array, w: jax.Array, spec: StencilSpec) -> jax.Array:
+    """One Dirichlet-masked application of the operator, in ``u.dtype``."""
+    mask = _interior_mask(u.shape, spec.ndim)
+    return jnp.where(mask, accumulate_taps(u, w, spec, u.dtype), 0)
+
+
+@functools.partial(jax.jit, static_argnames=("stencil", "sweeps"))
+def stencil_ref(a: jax.Array, w: jax.Array, stencil="stencil27",
+                sweeps: int = 1) -> jax.Array:
+    """Reference for ``stencil_apply``: ``sweeps`` Jacobi applications of the
+    named (or ad-hoc) spec, Dirichlet boundary zeroed each sweep.
+
+    Jitted so eager callers see the same XLA rounding (FMA contraction) as
+    the Pallas kernel -- that's what makes the f64 parity bit-exact."""
+    spec = get_stencil(stencil)
+    if a.ndim < spec.ndim:
+        raise ValueError(f"{spec.name}: input rank {a.ndim} < {spec.ndim}")
+    acc = acc_dtype_for(a.dtype)
+    u = a.astype(acc)
+    wf = spec.canon_weights(w).astype(acc)
+    for _ in range(sweeps):
+        u = apply_spec_once(u, wf, spec)
+    return u.astype(a.dtype)

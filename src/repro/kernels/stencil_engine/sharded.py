@@ -1,0 +1,105 @@
+"""Multi-device stencil execution: shard_map over the i-axis + halo exchange.
+
+The partition plan comes from ``repro.sharding.planner.stencil_halo_sharding``
+(divisibility and halo-depth checks, PlanNote audit trail).  Each shard owns a
+contiguous slab of i-rows, trades ``sweeps`` halo rows with its neighbours
+via ``lax.ppermute`` (edge shards receive zeros -- the Dirichlet boundary),
+and then runs the *same* fused Pallas kernel as the single-device path; the
+kernel's geometry operand (global row offset, global M) keeps the
+interior/boundary masking correct across shard seams.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .._compat import shard_map
+
+from ...sharding.planner import StencilShardPlan, stencil_halo_sharding
+from .autotune import autotune_block_i
+from .kernel import acc_dtype_for
+from .ops import call_3d, stencil_apply
+from .spec import StencilSpec, get_stencil
+
+
+@functools.lru_cache(maxsize=64)
+def _sharded_fn(spec: StencilSpec, mesh: Mesh, axis: str, bi: int,
+                sweeps: int, interpret: bool, h: int, m_loc: int, n_sh: int,
+                m: int, part):
+    """Build (and cache) the jitted shard_map program for one geometry, so
+    repeated calls don't retrace the inner pallas_call."""
+
+    def local_fn(a_loc: jax.Array, wf_: jax.Array) -> jax.Array:
+        idx = jax.lax.axis_index(axis)
+        # halo rows from the i-1 / i+1 shards; edge shards get zeros, which
+        # the kernel masks as out-of-domain (Dirichlet).
+        lo = jax.lax.ppermute(a_loc[:, -h:], axis,
+                              [(i, i + 1) for i in range(n_sh - 1)])
+        hi = jax.lax.ppermute(a_loc[:, :h], axis,
+                              [(i + 1, i) for i in range(n_sh - 1)])
+        ext = jnp.concatenate([lo, a_loc, hi], axis=1)
+        geom = jnp.stack([idx * m_loc - h,
+                          jnp.int32(m)]).astype(jnp.int32)
+        out = call_3d(ext, wf_, geom, spec, bi, sweeps, interpret)
+        return out[:, h:h + m_loc]
+
+    return jax.jit(shard_map(local_fn, mesh=mesh, in_specs=(part, P(None)),
+                             out_specs=part, check_rep=False))
+
+
+def stencil_sharded(a: jax.Array, w: jax.Array,
+                    stencil: Union[str, int, StencilSpec] = "stencil27",
+                    mesh: Optional[Mesh] = None, axis: str = "data",
+                    block_i: Optional[int] = None, sweeps: int = 1,
+                    interpret: bool = True,
+                    plan: Optional[StencilShardPlan] = None) -> jax.Array:
+    """Halo-exchange execution of ``stencil_apply`` over a mesh axis.
+
+    ``a`` is ``(..., M, N, P)`` (volumetric specs only); ``mesh`` defaults to
+    a 1-D mesh over every visible device.  Returns the same value as the
+    single-device path; falls back to it when the planner declines to shard.
+
+    Note: the kernel runs per shard on the halo-extended local slab, so an
+    explicit ``block_i`` must divide ``M / n_shards + 2 * sweeps`` (not M);
+    it is ignored when the planner falls back to the unsharded path.  Omit
+    it to let the cost model choose in every configuration.
+    """
+    spec = get_stencil(stencil)
+    if spec.ndim != 3:
+        raise ValueError(f"{spec.name}: sharded execution needs a volumetric "
+                         f"(ndim=3) spec")
+    if a.ndim < 3:
+        raise ValueError(f"{spec.name}: need (..., M, N, P), got {a.shape}")
+    if mesh is None:
+        mesh = jax.make_mesh((jax.device_count(),), (axis,))
+    m, n, p = a.shape[-3:]
+    if plan is None:
+        plan = stencil_halo_sharding(m, mesh, axis=axis, sweeps=sweeps)
+    if plan.n_shards <= 1:
+        # An explicit block_i is sized for the halo-extended local slab; it
+        # generally doesn't divide M, so let the cost model choose here --
+        # the same call must work whatever the device count.
+        return stencil_apply(a, w, spec, sweeps=sweeps, interpret=interpret)
+
+    batch = int(np.prod(a.shape[:-3])) if a.ndim > 3 else 1
+    a4 = a.reshape(batch, m, n, p)
+    acc = acc_dtype_for(a.dtype)
+    wf = spec.canon_weights(w).astype(acc)
+    h, m_loc, n_sh = plan.halo, plan.local_rows, plan.n_shards
+    m_ext = m_loc + 2 * h
+    if block_i is not None and m_ext % block_i != 0:
+        raise ValueError(
+            f"sharded block_i={block_i} must divide the halo-extended local "
+            f"slab (M/n_shards + 2*sweeps = {m_loc} + {2 * h} = {m_ext}); "
+            f"omit block_i to let the cost model choose")
+    bi = block_i or autotune_block_i(m_ext, n, p, a.dtype.itemsize,
+                                     sweeps=sweeps, taps=spec.taps)
+    fn = _sharded_fn(spec, mesh, axis, bi, sweeps, interpret, h, m_loc, n_sh,
+                     m, plan.spec)
+    return fn(a4, wf).reshape(a.shape)

@@ -1,0 +1,156 @@
+"""Stencil specifications: radius-1 coefficient masks + the named registry.
+
+A :class:`StencilSpec` describes a radius-1 stencil as a list of taps --
+``(di, dj, dk)`` offsets in lexicographic order -- each tagged with an index
+into a flat vector of unique coefficients.  The paper's three streaming
+kernels (3-, 7-, 27-point, sect. 3.1) are three entries in the registry; any
+other radius-1 operator is one :func:`spec_from_mask` call away.  The spec is
+a frozen (hashable) dataclass so it can ride through ``jax.jit`` as a static
+argument, and both the Pallas kernel body and the jnp reference expand the
+same tap list, in the same order -- which is what makes the f64 paths agree
+bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Offset = Tuple[int, int, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilSpec:
+    """A radius-1 stencil: taps in lexicographic ``(di, dj, dk)`` order.
+
+    ``ndim == 3`` operates on ``(..., M, N, P)`` volumes with an i-direction
+    halo; ``ndim == 1`` has k-only taps and operates on ``(..., P)`` rows
+    (every leading dim is an independent row -- the paper's 3-point kernel).
+    """
+
+    name: str
+    ndim: int                        # 3 (volumetric) or 1 (k-only rows)
+    offsets: Tuple[Offset, ...]      # lexicographic tap order
+    w_index: Tuple[int, ...]         # per-tap index into the flat weights
+    n_weights: int                   # number of unique coefficients
+    w_shape: Tuple[int, ...]         # user-facing weight array shape
+
+    @property
+    def taps(self) -> int:
+        return len(self.offsets)
+
+    def canon_weights(self, w: jax.Array) -> jax.Array:
+        """Flatten a user weight array to the ``(n_weights,)`` canonical form."""
+        w = jnp.asarray(w)
+        if int(np.prod(w.shape)) != int(np.prod(self.w_shape)):
+            raise ValueError(
+                f"{self.name}: weights shape {w.shape} incompatible with "
+                f"expected {self.w_shape}")
+        return w.reshape(-1)
+
+    def __post_init__(self):
+        if self.ndim not in (1, 3):
+            raise ValueError(f"ndim must be 1 or 3, got {self.ndim}")
+        if len(self.offsets) != len(self.w_index):
+            raise ValueError("offsets and w_index must be parallel")
+        if self.ndim == 1 and any(di or dj for di, dj, _ in self.offsets):
+            raise ValueError("ndim=1 specs may only carry k-direction taps")
+        for o in self.offsets:
+            if any(abs(d) > 1 for d in o):
+                raise ValueError(f"radius-1 engine: offset {o} out of range")
+        if sorted(self.offsets) != list(self.offsets):
+            raise ValueError("offsets must be in lexicographic order")
+        if self.w_index and max(self.w_index) >= self.n_weights:
+            raise ValueError("w_index refers past n_weights")
+
+
+_REGISTRY: Dict[str, StencilSpec] = {}
+
+
+def register_stencil(spec: StencilSpec, aliases: Iterable[str] = ()) -> StencilSpec:
+    for key in (spec.name, *aliases):
+        _REGISTRY[str(key)] = spec
+    return spec
+
+
+def get_stencil(stencil: Union[str, int, StencilSpec]) -> StencilSpec:
+    if isinstance(stencil, StencilSpec):
+        return stencil
+    key = str(stencil)
+    if key not in _REGISTRY:
+        raise KeyError(f"unknown stencil {stencil!r}; registered: "
+                       f"{sorted(set(_REGISTRY))}")
+    return _REGISTRY[key]
+
+
+def list_stencils() -> Dict[str, StencilSpec]:
+    return dict(_REGISTRY)
+
+
+def spec_from_mask(name: str, mask, ndim: int = 3) -> StencilSpec:
+    """Build a spec from a ``(3, 3, 3)`` coefficient-index mask.
+
+    ``mask[di+1, dj+1, dk+1]`` is the weight index of the tap at offset
+    ``(di, dj, dk)``; negative entries mean "no tap".  A boolean mask assigns
+    every active tap its own weight in lexicographic order.
+    """
+    m = np.asarray(mask)
+    if m.shape != (3, 3, 3):
+        raise ValueError(f"mask must be (3, 3, 3), got {m.shape}")
+    offsets, w_index = [], []
+    next_w = 0
+    for di in (-1, 0, 1):
+        for dj in (-1, 0, 1):
+            for dk in (-1, 0, 1):
+                v = m[di + 1, dj + 1, dk + 1]
+                if m.dtype == bool:
+                    if not v:
+                        continue
+                    idx = next_w
+                    next_w += 1
+                else:
+                    if v < 0:
+                        continue
+                    idx = int(v)
+                offsets.append((di, dj, dk))
+                w_index.append(idx)
+    n_w = (next_w if m.dtype == bool
+           else (max(w_index) + 1 if w_index else 0))
+    return StencilSpec(name=name, ndim=ndim, offsets=tuple(offsets),
+                      w_index=tuple(w_index), n_weights=n_w, w_shape=(n_w,))
+
+
+def _builtin_specs() -> None:
+    # 3-point: w = (w_edge, w_center), k-only (paper's 1-D streaming kernel).
+    register_stencil(StencilSpec(
+        name="stencil3", ndim=1,
+        offsets=((0, 0, -1), (0, 0, 0), (0, 0, 1)),
+        w_index=(0, 1, 0), n_weights=2, w_shape=(2,)),
+        aliases=("3",))
+    # 7-point: w = (wc, wk, wj, wi), 4 unique coefficients (paper sect. 3.1).
+    register_stencil(StencilSpec(
+        name="stencil7", ndim=3,
+        offsets=((-1, 0, 0), (0, -1, 0), (0, 0, -1), (0, 0, 0),
+                 (0, 0, 1), (0, 1, 0), (1, 0, 0)),
+        w_index=(3, 2, 1, 0, 1, 2, 3), n_weights=4, w_shape=(4,)),
+        aliases=("7",))
+    # 27-point: w[|di|, |dj|, |dk|], 8 unique coefficients; the tap order is
+    # the legacy reference's nested (di, dj, dk) loop, so the f64 path is
+    # bit-identical to the seed oracle.
+    offs, widx = [], []
+    for di in (-1, 0, 1):
+        for dj in (-1, 0, 1):
+            for dk in (-1, 0, 1):
+                offs.append((di, dj, dk))
+                widx.append(4 * abs(di) + 2 * abs(dj) + abs(dk))
+    register_stencil(StencilSpec(
+        name="stencil27", ndim=3, offsets=tuple(offs), w_index=tuple(widx),
+        n_weights=8, w_shape=(2, 2, 2)),
+        aliases=("27",))
+
+
+_builtin_specs()

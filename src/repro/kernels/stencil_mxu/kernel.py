@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .._stencil_common import interior_mask, shifted_planes
+from ..stencil_engine.common import interior_mask, shifted_planes
 
 
 def band_matrices(w: jax.Array, p: int) -> jax.Array:

@@ -7,7 +7,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .._stencil_common import pick_block_i, stencil_pallas_call
+from ..stencil_engine.autotune import pick_block_i
+from ..stencil_engine.common import stencil_pallas_call
 from .kernel import band_matrices, stencil27_mxu_kernel
 
 

@@ -1,3 +1,3 @@
 """Oracle for the MXU-form 27-point stencil == the standard 27-point ref."""
 
-from ..stencil27.ref import stencil27_ref as stencil27_mxu_ref  # noqa: F401
+from ..stencil_engine.compat import stencil27_ref as stencil27_mxu_ref  # noqa: F401

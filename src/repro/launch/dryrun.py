@@ -33,7 +33,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 from repro.configs import ARCH_IDS, get_config  # noqa: E402
 from repro.data import make_batch_specs  # noqa: E402
 from repro.launch.cells import skip_reason  # noqa: E402
-from repro.launch.hlo_analysis import analyze_hlo  # noqa: E402
+from repro.launch.hlo_analysis import (analyze_hlo,  # noqa: E402
+                                       normalize_cost_analysis)
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.sharding.ctx import use_mesh  # noqa: E402
 from repro.models import build_model, model_flops, param_count  # noqa: E402
@@ -216,9 +217,7 @@ def run_cell(arch: str, shape_name: str, mesh_name: str,
             t_compile = time.time() - t0
 
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
-        if isinstance(cost, list):
-            cost = cost[0] if cost else {}
+        cost = normalize_cost_analysis(compiled.cost_analysis())
         hlo = compiled.as_text()
         # trip-count-aware per-device totals (cost_analysis counts loop
         # bodies once; analyze_hlo multiplies known_trip_count through)

@@ -46,6 +46,23 @@ COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")
 
 
+def normalize_cost_analysis(cost) -> Dict[str, float]:
+    """Normalize ``compiled.cost_analysis()`` across JAX versions.
+
+    Older JAX returns a single properties dict; newer JAX returns a list of
+    per-module dicts (the entry module first, and in practice the only one).
+    Either way, callers get one flat ``{property: value}`` dict (empty when
+    XLA reports nothing).
+    """
+    if isinstance(cost, dict):
+        return dict(cost)
+    if isinstance(cost, (list, tuple)):
+        for entry in cost:
+            if isinstance(entry, dict):
+                return dict(entry)
+    return {}
+
+
 def _type_bytes(type_str: str) -> int:
     total = 0
     for dt, dims in _SHAPE_RE.findall(type_str):

@@ -170,6 +170,51 @@ def decode_state_sharding(cfg: ArchConfig, state_shapes: Any, mesh: Mesh
     return jax.tree.unflatten(treedef, specs)
 
 
+@dataclasses.dataclass
+class StencilShardPlan:
+    """How to split a stencil grid's i-axis over a mesh axis.
+
+    ``n_shards == 1`` means "don't shard" (indivisible M or shards too thin
+    for the halo) -- callers fall back to single-device execution; the
+    reason is recorded as a PlanNote, Table-2 style."""
+    axis: str
+    n_shards: int
+    halo: int                 # rows exchanged per side == fused sweep depth
+    local_rows: int
+    spec: Any                 # PartitionSpec for a (B, M, N, P) operand
+    notes: List[PlanNote]
+
+
+def stencil_halo_sharding(m: int, mesh: Mesh, axis: str = "data",
+                          sweeps: int = 1) -> StencilShardPlan:
+    """Plan i-axis halo-exchange sharding for an (..., M, N, P) stencil grid.
+
+    Each shard owns ``M / n`` contiguous i-rows and exchanges ``sweeps`` halo
+    rows with each neighbour per fused call (radius-1 operator applied
+    ``sweeps`` times).  Falls back to an unsharded plan -- with the reason
+    noted -- when M doesn't divide or local rows couldn't cover the halo."""
+    n = _mesh_axis_size(mesh, axis)
+    notes: List[PlanNote] = []
+
+    def fallback(reason: str) -> StencilShardPlan:
+        notes.append(PlanNote("stencil/i-axis", (m,), None, reason))
+        return StencilShardPlan(axis, 1, sweeps, m, P(None, None, None, None),
+                                notes)
+
+    if n <= 1:
+        return fallback(f"axis {axis!r} has size {n}; running unsharded")
+    if m % n != 0:
+        return fallback(f"M={m} not divisible by {axis}={n}; replicating")
+    local = m // n
+    if local < sweeps:
+        return fallback(f"local rows {local} < halo {sweeps}; replicating")
+    notes.append(PlanNote(
+        "stencil/i-axis", (m,), P(None, axis, None, None),
+        f"i-axis split {n} ways x {local} rows, halo {sweeps}/side"))
+    return StencilShardPlan(axis, n, sweeps, local,
+                            P(None, axis, None, None), notes)
+
+
 def plan_summary(notes: List[PlanNote], max_rows: int = 12) -> str:
     n_rep = sum(1 for n in notes if n.spec is not None
                 and all(s is None for s in n.spec))

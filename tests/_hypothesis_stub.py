@@ -1,0 +1,34 @@
+"""Fallback for the optional ``hypothesis`` dev dependency.
+
+When hypothesis is installed (``pip install -r requirements-dev.txt``) the
+test modules use it directly; when it is missing, these stubs turn each
+``@given`` property test into a single skipped test instead of killing the
+whole module at collection time.
+"""
+
+import pytest
+
+_REASON = "hypothesis not installed (pip install -r requirements-dev.txt)"
+
+
+def given(*_args, **_kwargs):
+    def deco(fn):
+        @pytest.mark.skip(reason=_REASON)
+        def shim():
+            pass
+        shim.__name__ = fn.__name__
+        shim.__doc__ = fn.__doc__
+        return shim
+    return deco
+
+
+def settings(*_args, **_kwargs):
+    return lambda fn: fn
+
+
+class _Strategies:
+    def __getattr__(self, name):
+        return lambda *a, **k: None
+
+
+st = _Strategies()

@@ -1,8 +1,12 @@
 """Scheduler invariants: dependency/resource correctness, bounds, optimality."""
 
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:  # optional dev dep -- property tests skip, rest runs
+    from _hypothesis_stub import given, settings, st  # noqa: F401
 
 from repro.core.dag import build_dag, lower_bound
 from repro.core.isa import Unit, fxcpmadd, fxcpmul, lfpdx, stfpdx
@@ -80,6 +84,30 @@ def test_bb_never_worse_than_greedy(data):
     assert exact is not None
     assert exact.makespan <= greedy.makespan
     assert exact.makespan >= lower_bound(instrs, g)
+
+
+def test_bb_beats_greedy_and_certifies_lower_bound():
+    """Regression for the dead B&B bound (it multiplied its correction by 0
+    and was never consulted): on this block the greedy schedule is provably
+    suboptimal and the exact solver must both improve on it and certify the
+    eq.-1 lower bound."""
+    instrs = [lfpdx(f"f_r{i}", "g_a", 16 * i) for i in range(4)]
+    instrs += [
+        fxcpmul("f_r1", "f_r1", "f_r1"),
+        fxcpmul("f_r3", "f_r0", "f_r3"),
+        fxcpmadd("f_r1", "f_r0", "f_r0"),
+        fxcpmul("f_r1", "f_r2", "f_r2"),
+        stfpdx("f_r0", "g_r", 0),
+    ]
+    g = build_dag(instrs)
+    greedy = greedy_schedule(instrs, g)
+    exact = bb_schedule(instrs, max_nodes=16)
+    assert exact is not None
+    _check_schedule(instrs, exact, g)
+    assert exact.makespan <= greedy.makespan
+    assert greedy.makespan == 12          # greedy leaves a hole
+    assert exact.makespan == lower_bound(instrs, g) == 11
+    assert exact.optimal
 
 
 def test_greedy_optimal_on_simple_stream():

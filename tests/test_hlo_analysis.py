@@ -4,11 +4,20 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.launch.hlo_analysis import analyze_hlo, parse_hlo
+from repro.launch.hlo_analysis import (analyze_hlo, normalize_cost_analysis,
+                                       parse_hlo)
 
 
 def _compile(f, *specs):
     return jax.jit(f).lower(*specs).compile()
+
+
+def test_normalize_cost_analysis_both_api_shapes():
+    """Old JAX returns a dict, new JAX a list of per-module dicts."""
+    assert normalize_cost_analysis({"flops": 2.0}) == {"flops": 2.0}
+    assert normalize_cost_analysis([{"flops": 2.0}]) == {"flops": 2.0}
+    assert normalize_cost_analysis([]) == {}
+    assert normalize_cost_analysis(None) == {}
 
 
 def test_cost_analysis_counts_loops_once_but_we_dont():
@@ -21,7 +30,7 @@ def test_cost_analysis_counts_loops_once_but_we_dont():
 
     spec = jax.ShapeDtypeStruct((128, 128), jnp.float32)
     compiled = _compile(f, spec)
-    xla_flops = compiled.cost_analysis()["flops"]
+    xla_flops = normalize_cost_analysis(compiled.cost_analysis())["flops"]
     ours = analyze_hlo(compiled.as_text())["flops"]
     one_matmul = 2 * 128 ** 3
     assert abs(xla_flops - one_matmul) / one_matmul < 0.01      # loop once

@@ -1,0 +1,239 @@
+"""Unified stencil engine: registry, parity, batching, fused sweeps,
+autotuning, and 2-device halo-exchange sharding (subprocess)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (get_stencil, list_stencils, spec_from_mask,
+                           stencil_apply, stencil_ref, stencil3_ref,
+                           stencil7_ref, stencil27_ref)
+from repro.kernels.stencil_engine.autotune import (autotune_block_i,
+                                                   pick_block_i)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RNG = np.random.default_rng(7)
+
+
+def _naive27(a, w):
+    """Independent numpy oracle (not engine-backed)."""
+    a = np.asarray(a, np.float64)
+    w = np.asarray(w, np.float64)
+    out = np.zeros_like(a)
+    for i in range(1, a.shape[0] - 1):
+        for j in range(1, a.shape[1] - 1):
+            for k in range(1, a.shape[2] - 1):
+                s = 0.0
+                for di in (-1, 0, 1):
+                    for dj in (-1, 0, 1):
+                        for dk in (-1, 0, 1):
+                            s += (w[abs(di), abs(dj), abs(dk)]
+                                  * a[i + di, j + dj, k + dk])
+                out[i, j, k] = s
+    return out
+
+
+def test_registry_names_and_aliases():
+    assert get_stencil("stencil27") is get_stencil("27")
+    assert get_stencil(27).taps == 27
+    assert get_stencil("stencil7").taps == 7
+    assert get_stencil("stencil3").taps == 3
+    assert {"stencil3", "stencil7", "stencil27"} <= set(list_stencils())
+    with pytest.raises(KeyError):
+        get_stencil("stencil99")
+
+
+def test_engine_matches_independent_oracle():
+    """Non-circular check: the engine against a hand-rolled numpy loop."""
+    a = jnp.asarray(RNG.standard_normal((6, 7, 9)), jnp.float32)
+    w = jnp.asarray(RNG.uniform(0.1, 1.0, (2, 2, 2)), jnp.float32)
+    got = stencil_apply(a, w, "stencil27", block_i=3)
+    np.testing.assert_allclose(np.asarray(got, np.float64), _naive27(a, w),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("name,wshape", [("stencil7", (4,)),
+                                         ("stencil27", (2, 2, 2))])
+@pytest.mark.parametrize("shape,bi", [((8, 16, 32), 4),   # even everywhere
+                                      ((9, 11, 17), 3),   # odd everywhere
+                                      ((10, 8, 24), 5)])  # mixed
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_volumetric_parity_sizes_dtypes(name, wshape, shape, bi, dtype):
+    a = jnp.asarray(RNG.standard_normal(shape), dtype)
+    w = jnp.asarray(RNG.uniform(0.1, 1.0, wshape), jnp.float32)
+    got = stencil_apply(a, w, name, block_i=bi)
+    ref = stencil_ref(a.astype(jnp.float32), w, name).astype(dtype)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_f64_bit_for_bit_parity():
+    """In f64 the kernel and the refs agree exactly (same tap order, same
+    arithmetic) -- the engine's reference path."""
+    with jax.experimental.enable_x64():
+        a = jnp.asarray(RNG.standard_normal((8, 10, 16)), jnp.float64)
+        a2 = jnp.asarray(RNG.standard_normal((6, 32)), jnp.float64)
+        w27 = jnp.asarray(RNG.uniform(0.1, 1.0, (2, 2, 2)), jnp.float64)
+        w7 = jnp.asarray(RNG.uniform(0.1, 1.0, 4), jnp.float64)
+        w3 = jnp.asarray(RNG.uniform(0.1, 1.0, 2), jnp.float64)
+        np.testing.assert_array_equal(
+            np.asarray(stencil_apply(a, w27, "stencil27", block_i=4)),
+            np.asarray(stencil27_ref(a, w27)))
+        np.testing.assert_array_equal(
+            np.asarray(stencil_apply(a, w7, "stencil7", block_i=2)),
+            np.asarray(stencil7_ref(a, w7)))
+        np.testing.assert_array_equal(
+            np.asarray(stencil_apply(a2, w3, "stencil3", block_i=3)),
+            np.asarray(stencil3_ref(a2, w3)))
+        # fused sweeps stay bit-exact too
+        np.testing.assert_array_equal(
+            np.asarray(stencil_apply(a, w27, "stencil27", block_i=4,
+                                     sweeps=3)),
+            np.asarray(stencil_ref(a, w27, "stencil27", sweeps=3)))
+
+
+@pytest.mark.parametrize("batch", [(2,), (2, 3)])
+def test_batched_execution(batch):
+    shape = batch + (8, 10, 16)
+    a = jnp.asarray(RNG.standard_normal(shape), jnp.float32)
+    w = jnp.asarray(RNG.uniform(0.1, 1.0, (2, 2, 2)), jnp.float32)
+    got = stencil_apply(a, w, "stencil27", block_i=4)
+    ref = stencil_ref(a, w, "stencil27")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    # every batch element equals its own unbatched run
+    one = stencil_apply(a.reshape(-1, 8, 10, 16)[0], w, "stencil27",
+                        block_i=4)
+    np.testing.assert_array_equal(
+        np.asarray(got.reshape(-1, 8, 10, 16)[0]), np.asarray(one))
+
+
+@pytest.mark.parametrize("sweeps", [1, 2, 3])
+@pytest.mark.parametrize("name", ["stencil3", "stencil7", "stencil27"])
+def test_fused_sweeps_match_iterated(name, sweeps):
+    spec = get_stencil(name)
+    if spec.ndim == 1:
+        a = jnp.asarray(RNG.standard_normal((8, 32)), jnp.float32)
+        w = jnp.asarray(RNG.uniform(0.1, 1.0, 2), jnp.float32)
+        bi = 4
+    else:
+        a = jnp.asarray(RNG.standard_normal((8, 10, 16)), jnp.float32)
+        w = jnp.asarray(RNG.uniform(0.1, 1.0, spec.w_shape), jnp.float32)
+        bi = 4
+    fused = stencil_apply(a, w, name, block_i=bi, sweeps=sweeps)
+    it = a
+    for _ in range(sweeps):
+        it = stencil_apply(it, w, name, block_i=bi)
+    # f32: up to FMA-contraction noise between the two compiled programs
+    # (the f64 path is asserted bit-exact in test_f64_bit_for_bit_parity)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(it),
+                               rtol=1e-6, atol=1e-6)
+    ref = stencil_ref(a, w, name, sweeps=sweeps)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_sweeps_deeper_than_block_halo_raises():
+    a = jnp.zeros((8, 8, 16), jnp.float32)
+    w = jnp.zeros((2, 2, 2), jnp.float32)
+    with pytest.raises(ValueError, match="halo"):
+        stencil_apply(a, w, "stencil27", block_i=2, sweeps=3)
+
+
+def test_custom_mask_spec():
+    """An ad-hoc mask (i-axis-only 3-point) runs through the same engine."""
+    mask = -np.ones((3, 3, 3), np.int64)
+    mask[0, 1, 1] = 0          # (di=-1) -> w[0]
+    mask[1, 1, 1] = 1          # centre  -> w[1]
+    mask[2, 1, 1] = 0          # (di=+1) -> w[0]
+    spec = spec_from_mask("i3", mask)
+    assert spec.taps == 3 and spec.n_weights == 2
+    a = jnp.asarray(RNG.standard_normal((8, 6, 16)), jnp.float32)
+    w = jnp.asarray([0.25, 0.5], jnp.float32)
+    got = stencil_apply(a, w, spec, block_i=4)
+    ref = stencil_ref(a, w, spec)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    # hand-check one interior point
+    i, j, k = 3, 2, 5
+    expect = float(0.25 * a[i - 1, j, k] + 0.5 * a[i, j, k]
+                   + 0.25 * a[i + 1, j, k])
+    assert abs(float(got[i, j, k]) - expect) < 1e-5
+
+
+def test_boolean_mask_assigns_unique_weights():
+    mask = np.zeros((3, 3, 3), bool)
+    mask[1, 1, 0] = mask[1, 1, 1] = mask[1, 1, 2] = True
+    spec = spec_from_mask("k3-unsym", mask)
+    assert spec.n_weights == 3
+    a = jnp.asarray(RNG.standard_normal((4, 6, 16)), jnp.float32)
+    w = jnp.asarray([1.0, 2.0, 3.0], jnp.float32)
+    got = stencil_apply(a, w, spec, block_i=2)
+    i, j, k = 2, 3, 7
+    expect = float(1.0 * a[i, j, k - 1] + 2.0 * a[i, j, k]
+                   + 3.0 * a[i, j, k + 1])
+    assert abs(float(got[i, j, k]) - expect) < 1e-5
+
+
+def test_autotuner_properties():
+    for m, n, p, s in [(32, 48, 128, 1), (30, 30, 30, 2), (16, 8, 128, 3)]:
+        bi = autotune_block_i(m, n, p, 4, sweeps=s)
+        assert m % bi == 0 and bi >= s, (m, bi, s)
+    # legacy alias keeps its contract (divisor, fits the budget reasoning)
+    assert 32 % pick_block_i(32, 48, 128, 4) == 0
+    # huge planes fall back to small feasible blocks rather than exploding
+    bi = autotune_block_i(1024, 512, 512, 4)
+    assert 1024 % bi == 0
+
+
+def test_planner_fallbacks_and_plan():
+    from repro.sharding.planner import stencil_halo_sharding
+    mesh = jax.make_mesh((1,), ("data",))
+    plan = stencil_halo_sharding(16, mesh, sweeps=1)
+    assert plan.n_shards == 1                      # 1 device: unsharded
+    assert any("unsharded" in n.reason for n in plan.notes)
+
+
+def test_sharded_two_devices_subprocess():
+    """2-device shard_map halo-exchange == single-device engine, bit-exact,
+    for s in {1, 2} -- on forced host-platform devices."""
+    code = """
+        import jax, numpy as np, jax.numpy as jnp
+        assert jax.device_count() == 2, jax.devices()
+        from repro.kernels import stencil_apply, stencil_ref, stencil_sharded
+        from repro.sharding.planner import stencil_halo_sharding
+        rng = np.random.default_rng(3)
+        a = jnp.asarray(rng.standard_normal((16, 10, 16)), jnp.float32)
+        w = jnp.asarray(rng.uniform(0.1, 1.0, (2, 2, 2)), jnp.float32)
+        mesh = jax.make_mesh((2,), ("data",))
+        for s in (1, 2):
+            plan = stencil_halo_sharding(16, mesh, sweeps=s)
+            assert plan.n_shards == 2 and plan.halo == s
+            got = stencil_sharded(a, w, "stencil27", mesh=mesh, sweeps=s)
+            one = stencil_apply(a, w, "stencil27", block_i=4, sweeps=s)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(one))
+            ref = stencil_ref(a, w, "stencil27", sweeps=s)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                       rtol=2e-5, atol=2e-5)
+        # batched + sharded
+        ab = jnp.asarray(rng.standard_normal((2, 16, 8, 16)), jnp.float32)
+        got = stencil_sharded(ab, w, "stencil27", mesh=mesh, sweeps=2)
+        one = stencil_apply(ab, w, "stencil27", block_i=4, sweeps=2)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(one))
+        print("sharded ok")
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=600,
+                         env=env, cwd=REPO)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "sharded ok" in out.stdout
