@@ -7,28 +7,47 @@ against it at each size.  TPU numbers come from running the same harness on
 real hardware.
 
 The tail rows exercise the unified stencil engine: batched execution, fused
-multi-sweep Jacobi (``s`` operator applications per HBM round-trip), and a
-2-device halo-exchange ``shard_map`` run (forced host-platform devices, in a
-subprocess so this process keeps its single-device view).
+multi-sweep Jacobi (``s`` operator applications per HBM round-trip), a
+direct-vs-cse-vs-factored plan comparison (the paper's synthesized schedule
+vs the naive one, with each plan's static shift/flop counts), a j-tiled run
+at a size where the untiled N x P slab exceeds the VMEM budget (previously a
+hard wall), and a 2-device halo-exchange ``shard_map`` run (forced
+host-platform devices, in a subprocess so this process keeps its
+single-device view).
+
+Besides the ``name,us_per_call,derived`` text rows, every measurement is
+recorded as a dict and the whole run is dumped to ``BENCH_stencil.json``
+(path overridable via ``$BENCH_STENCIL_JSON``) -- rows plus the stencil27
+plan op counts -- which CI uploads as an artifact.
 """
 
 from __future__ import annotations
 
+import json
 import os
 import subprocess
 import sys
 import textwrap
 import time
-from typing import List
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import (stencil_apply, stencil_ref, stencil3_ref,
-                           stencil7_ref, stencil27, stencil27_ref)
+from repro.kernels import (autotune_blocks, compile_plan, stencil_apply,
+                           stencil_ref, stencil3_ref, stencil7_ref,
+                           stencil27, stencil27_ref)
 
 SIZES = (14, 30, 62, 126)
+
+_RECORDS: List[Dict] = []
+
+
+def _row(name: str, usec: float, derived: str, **fields) -> str:
+    """Format one text row and mirror it into the JSON record list."""
+    _RECORDS.append({"name": name, "us_per_call": round(usec, 1), **fields})
+    return f"{name},{usec:.1f},{derived}"
 
 
 def _time(fn, *args, reps: int = 5) -> float:
@@ -41,7 +60,23 @@ def _time(fn, *args, reps: int = 5) -> float:
     return best
 
 
+def write_json(path: Optional[str] = None) -> str:
+    """Dump the recorded rows + stencil27 plan op counts to ``path``."""
+    path = path or os.environ.get("BENCH_STENCIL_JSON", "BENCH_stencil.json")
+    doc = {
+        "schema": "bench_stencil/v1",
+        "plans": {kind: compile_plan("stencil27", kind).describe()
+                  for kind in ("direct", "cse", "factored")},
+        "rows": _RECORDS,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
+
+
 def run() -> List[str]:
+    _RECORDS.clear()
     rows = []
     rng = np.random.default_rng(0)
     j27 = jax.jit(stencil27_ref)
@@ -54,13 +89,19 @@ def run() -> List[str]:
         w3 = jnp.asarray(rng.uniform(0.1, 1, 2), jnp.float32)
         st = (n - 2) ** 3
         t = _time(j27, a, w27)
-        rows.append(f"stencil27.{n}^3,{t*1e6:.1f},{st/t/1e6:.1f} Mstencil/s")
+        rows.append(_row(f"stencil27.{n}^3", t * 1e6,
+                         f"{st/t/1e6:.1f} Mstencil/s",
+                         mstencil_per_s=st / t / 1e6))
         t = _time(j7, a, w7)
-        rows.append(f"stencil7.{n}^3,{t*1e6:.1f},{st/t/1e6:.1f} Mstencil/s")
+        rows.append(_row(f"stencil7.{n}^3", t * 1e6,
+                         f"{st/t/1e6:.1f} Mstencil/s",
+                         mstencil_per_s=st / t / 1e6))
         a2 = a.reshape(n * n, n)
         t = _time(j3, a2, w3)
         st3 = n * n * (n - 2)
-        rows.append(f"stencil3.{n}^3,{t*1e6:.1f},{st3/t/1e6:.1f} Mstencil/s")
+        rows.append(_row(f"stencil3.{n}^3", t * 1e6,
+                         f"{st3/t/1e6:.1f} Mstencil/s",
+                         mstencil_per_s=st3 / t / 1e6))
     # Pallas kernel correctness at a bench size (interpret mode)
     n = 30
     a = jnp.asarray(rng.standard_normal((n + 2, n + 2, 128)), jnp.float32)
@@ -68,8 +109,9 @@ def run() -> List[str]:
     got = stencil27(a, w27, block_i=4)
     ref = stencil27_ref(a, w27)
     err = float(jnp.max(jnp.abs(got - ref)))
-    rows.append(f"stencil27.pallas_vs_ref,0.0,max_err={err:.2e} "
-                f"ok={err < 1e-4}")
+    rows.append(_row("stencil27.pallas_vs_ref", 0.0,
+                     f"max_err={err:.2e} ok={err < 1e-4}",
+                     max_err=err, ok=bool(err < 1e-4)))
     # beyond-paper MXU form: correctness + napkin speedup on the TPU target
     from repro.kernels import stencil27_mxu
     got_mxu = stencil27_mxu(a, w27, block_i=4)
@@ -77,15 +119,21 @@ def run() -> List[str]:
     p = a.shape[-1]
     vpu_t = 54.0 / 3e12              # ~54 VPU flops/pt at ~3 TFLOP/s
     mxu_t = 8.0 * p / 197e12 + 5.0 / 3e12   # 8P MXU flops + 5 VPU adds
-    rows.append(f"stencil27.mxu_vs_ref,0.0,max_err={err_mxu:.2e} "
-                f"ok={err_mxu < 1e-4} napkin_speedup_v5e={vpu_t/mxu_t:.1f}x "
-                f"(P={p})")
+    rows.append(_row("stencil27.mxu_vs_ref", 0.0,
+                     f"max_err={err_mxu:.2e} ok={err_mxu < 1e-4} "
+                     f"napkin_speedup_v5e={vpu_t/mxu_t:.1f}x (P={p})",
+                     max_err=err_mxu, ok=bool(err_mxu < 1e-4),
+                     napkin_speedup_v5e=vpu_t / mxu_t))
     rows.extend(_engine_rows(rng))
+    rows.extend(_plan_rows(rng))
+    rows.append(_jtiled_row(rng))
+    rows.append(_sharded_row())
+    write_json()
     return rows
 
 
 def _engine_rows(rng) -> List[str]:
-    """Engine-backed scenarios: batched, fused-sweep, 2-device sharded."""
+    """Engine-backed scenarios: batched and fused-sweep."""
     rows: List[str] = []
     b, m, n, p = 4, 16, 24, 128
     w = jnp.asarray(rng.uniform(0.1, 1, (2, 2, 2)), jnp.float32)
@@ -95,9 +143,11 @@ def _engine_rows(rng) -> List[str]:
     t = _time(lambda x: stencil_apply(x, w, "stencil27", block_i=4), a4)
     err = float(jnp.max(jnp.abs(stencil_apply(a4, w, "stencil27", block_i=4)
                                 - stencil_ref(a4, w, "stencil27"))))
-    rows.append(f"engine27.batched.{b}x{m}x{n}x{p},{t*1e6:.1f},"
-                f"{st/t/1e6:.2f} Mstencil/s max_err={err:.2e} "
-                f"ok={err < 1e-4}")
+    rows.append(_row(f"engine27.batched.{b}x{m}x{n}x{p}", t * 1e6,
+                     f"{st/t/1e6:.2f} Mstencil/s max_err={err:.2e} "
+                     f"ok={err < 1e-4}",
+                     mstencil_per_s=st / t / 1e6, max_err=err,
+                     ok=bool(err < 1e-4)))
 
     a3 = a4[0]
     st1 = (m - 2) * (n - 2) * (p - 2)
@@ -107,12 +157,61 @@ def _engine_rows(rng) -> List[str]:
         err = float(jnp.max(jnp.abs(
             stencil_apply(a3, w, "stencil27", block_i=4, sweeps=s)
             - stencil_ref(a3, w, "stencil27", sweeps=s))))
-        rows.append(f"engine27.fused_s{s}.{m}^3-ish,{t*1e6:.1f},"
-                    f"{s*st1/t/1e6:.2f} Mstencil/s (sweeps x points / time) "
-                    f"max_err={err:.2e} ok={err < 1e-4}")
-
-    rows.append(_sharded_row())
+        rows.append(_row(f"engine27.fused_s{s}.{m}^3-ish", t * 1e6,
+                         f"{s*st1/t/1e6:.2f} Mstencil/s "
+                         f"(sweeps x points / time) "
+                         f"max_err={err:.2e} ok={err < 1e-4}",
+                         sweeps=s, mstencil_per_s=s * st1 / t / 1e6,
+                         max_err=err, ok=bool(err < 1e-4)))
     return rows
+
+
+def _plan_rows(rng) -> List[str]:
+    """Direct vs CSE vs factored schedules for stencil27 -- the paper's
+    synthesized-vs-naive comparison, with each plan's static op counts."""
+    rows: List[str] = []
+    m, n, p = 16, 24, 128
+    w = jnp.asarray(rng.uniform(0.1, 1, (2, 2, 2)), jnp.float32)
+    a = jnp.asarray(rng.standard_normal((m, n, p)), jnp.float32)
+    st = (m - 2) * (n - 2) * (p - 2)
+    t_direct = None
+    for kind in ("direct", "cse", "factored"):
+        cplan = compile_plan("stencil27", kind)
+        t = _time(lambda x, k=kind: stencil_apply(x, w, "stencil27",
+                                                  block_i=4, plan=k), a)
+        err = float(jnp.max(jnp.abs(
+            stencil_apply(a, w, "stencil27", block_i=4, plan=kind)
+            - stencil_ref(a, w, "stencil27", plan=kind))))
+        t_direct = t_direct if t_direct is not None else t
+        rows.append(_row(f"engine27.plan_{kind}.{m}x{n}x{p}", t * 1e6,
+                         f"{st/t/1e6:.2f} Mstencil/s shifts={cplan.shifts} "
+                         f"flops={cplan.flops} vs_direct={t_direct/t:.2f}x "
+                         f"max_err={err:.2e} ok={err < 1e-4}",
+                         plan=cplan.describe(), plan_kind=kind,
+                         mstencil_per_s=st / t / 1e6,
+                         speedup_vs_direct=t_direct / t, max_err=err,
+                         ok=bool(err < 1e-4)))
+    return rows
+
+
+def _jtiled_row(rng) -> str:
+    """A size whose full N x P slab exceeds the VMEM budget: the cost model
+    must pick a j-tiled blocking (previously a hard wall) and the result
+    must still match the reference."""
+    m, n, p = 4, 2048, 128
+    cplan = compile_plan("stencil27")
+    bi, bj = autotune_blocks(m, n, p, 4, sweeps=1, plan=cplan)
+    w = jnp.asarray(rng.uniform(0.1, 1, (2, 2, 2)), jnp.float32)
+    a = jnp.asarray(rng.standard_normal((m, n, p)), jnp.float32)
+    st = (m - 2) * (n - 2) * (p - 2)
+    t = _time(lambda x: stencil_apply(x, w, "stencil27"), a, reps=3)
+    err = float(jnp.max(jnp.abs(stencil_apply(a, w, "stencil27")
+                                - stencil_ref(a, w, "stencil27"))))
+    return _row(f"engine27.jtiled.{m}x{n}x{p}", t * 1e6,
+                f"{st/t/1e6:.2f} Mstencil/s blocks=({bi},{bj}) "
+                f"max_err={err:.2e} ok={bj is not None and err < 1e-4}",
+                block_i=bi, block_j=bj, mstencil_per_s=st / t / 1e6,
+                max_err=err, ok=bool(bj is not None and err < 1e-4))
 
 
 def _sharded_row() -> str:
@@ -149,10 +248,22 @@ def _sharded_row() -> str:
                          capture_output=True, text=True, timeout=600, env=env)
     if out.returncode != 0:
         err_lines = out.stderr.strip().splitlines() or ["(no stderr)"]
+        _RECORDS.append({"name": "engine27.sharded_2dev_s2.16x24x128",
+                         "us_per_call": None, "ok": False,
+                         "error": err_lines[-1][:200]})
         return ("engine27.sharded_2dev_s2.16x24x128,nan,"
                 f"FAILED: {err_lines[-1][:120]}")
-    out_lines = out.stdout.strip().splitlines() or ["(no stdout)"]
-    return out_lines[-1]
+    line = (out.stdout.strip().splitlines() or ["(no stdout)"])[-1]
+    parts = line.split(",", 2)
+    if len(parts) == 3:
+        name, usec, derived = parts
+        _RECORDS.append({"name": name, "us_per_call": float(usec),
+                         "ok": "ok=True" in derived, "derived": derived})
+    else:
+        _RECORDS.append({"name": "engine27.sharded_2dev_s2.16x24x128",
+                         "us_per_call": None, "ok": False,
+                         "error": f"unparseable row: {line[:200]}"})
+    return line
 
 
 if __name__ == "__main__":

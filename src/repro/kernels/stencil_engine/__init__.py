@@ -4,8 +4,8 @@ The paper's central artifact is a synthesis framework that emits many stencil
 variants (3/7/27-point, mm/lc register strategies, any jam factor) from one
 kernel description.  This package is that idea applied to the repo's Pallas
 layer: the former ``stencil3``/``stencil7``/``stencil27`` kernel/ops/ref
-triples are now *one* tap-list-parameterized kernel body plus a spec
-registry.
+triples are now *one* spec registry, compiled to an explicit execution plan
+(the paper's synthesis step) and run by one kernel body.
 
 Mask registry
     :func:`get_stencil` / :func:`register_stencil` /
@@ -15,36 +15,64 @@ Mask registry
     ``(2,2,2)``).  ``spec_from_mask`` turns any ``(3,3,3)``
     coefficient-index mask into a runnable spec.
 
+Plan IR -- :func:`compile_plan` (paper sect. 4, synthesis -> plan)
+    A spec compiles to a :class:`StencilPlan` -- a tiny SSA schedule of
+    shift/scale/add/fma ops interpreted at trace time by both the kernel
+    and the reference.  ``factored`` (mirror-symmetric specs) shares
+    k-pair partial sums across j then i: stencil27 drops from 54 shifts +
+    53 flop-ops (``direct``, the naive escape hatch) to 8 shifts + 19
+    flop-ops.  ``cse`` (arbitrary masks) builds each ``(dj, dk)`` plane
+    shift once and reuses it across ``di``.  Shifts are static slices with
+    zero fill on the halo-extended block -- no wrap-around values are ever
+    computed then masked.  The plan's static op counts drive the cost
+    model.
+
 Execution -- :func:`stencil_apply`
     Batched (arbitrary leading dims) and multi-dtype: bf16/f32 inputs
     accumulate in f32; f64 inputs stay f64 and are bit-identical to
-    :func:`stencil_ref` (same tap order, same arithmetic).  ``block_i``
-    defaults to a roofline cost model (:func:`autotune_block_i`) instead of
-    the old fits-in-VMEM heuristic.
+    :func:`stencil_ref` under the same ``plan`` on the reference
+    configurations (same op walk, same arithmetic; blocking-invariance is
+    exact on integer-valued data -- see :mod:`.plan` on fma contraction).
+    ``block_i``/``block_j`` default to the plan-aware roofline cost model
+    (:func:`autotune_blocks`), which charges the plan's actual
+    ``shifts + flops`` instead of ``2 * taps``.
+
+j-tiled blocking -- ``stencil_apply(..., block_j=bj)``
+    Blocks become ``(1, bi, bj, P)`` with a j-halo assembled from the 3x3
+    neighbour tiles, so grids whose full N x P slab exceeds the VMEM budget
+    -- previously a hard wall -- run at all; the autotuner engages it only
+    when no full-N block fits.
 
 Fused sweeps -- ``stencil_apply(..., sweeps=s)``
     Runs ``s`` Jacobi applications inside one ``pallas_call``: blocks are
-    widened by ``s`` halo rows from the +-1 neighbour blocks and only the
-    central rows are written back, cutting HBM round-trips from ``s`` to 1 --
-    the Pallas analogue of the paper's register-resident steady-state
-    stream.  Equivalent to ``s`` separate applications (requires
-    ``block_i >= sweeps``).
+    widened by ``s`` halo rows (and columns, when j-tiled) from the
+    neighbour blocks and only the central rows are written back, cutting
+    HBM round-trips from ``s`` to 1 -- the Pallas analogue of the paper's
+    register-resident steady-state stream.  Equivalent to ``s`` separate
+    applications (requires ``block_i >= sweeps`` and, when j-tiled,
+    ``block_j >= sweeps``).
 
 Sharded execution -- :func:`stencil_sharded`
     ``shard_map`` over the i-axis: the partition plan (divisibility, halo
     depth, PlanNotes) comes from
     ``repro.sharding.planner.stencil_halo_sharding``; shards exchange
     ``sweeps`` halo rows via ``lax.ppermute`` and run the same fused kernel,
-    with global-geometry masking keeping shard seams exact.
+    with global-geometry masking keeping shard seams exact.  Compiled
+    shard_map programs are memoized keyed on device ids + axis names (not
+    ``Mesh`` objects) in a bounded cache.
 
 Tier-1 verify: ``PYTHONPATH=src python -m pytest -x -q``
-(engine parity lives in ``tests/test_stencil_engine.py``).
+(engine parity lives in ``tests/test_stencil_engine.py``; plan-correctness
+property tests in ``tests/test_stencil_plan.py``).
 """
 
-from .autotune import autotune_block_i, pick_block_i, pick_block_rows  # noqa: F401
+from .autotune import (autotune_block_i, autotune_blocks,  # noqa: F401
+                       pick_block_i, pick_block_rows)
 from .compat import (stencil3, stencil3_ref, stencil7, stencil7_ref,  # noqa: F401
                      stencil27, stencil27_ref)
 from .ops import stencil_apply  # noqa: F401
+from .plan import (PLAN_KINDS, PlanOp, StencilPlan, compile_plan,  # noqa: F401
+                   execute_plan, mirror_symmetric, shift_slice)
 from .ref import stencil_ref  # noqa: F401
 from .sharded import stencil_sharded  # noqa: F401
 from .spec import (StencilSpec, get_stencil, list_stencils,  # noqa: F401

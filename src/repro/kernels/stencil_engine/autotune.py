@@ -1,66 +1,135 @@
-"""Cost-model block selection (replaces the old ``pick_block_i`` heuristic).
+"""Plan-aware cost-model block selection (replaces ``pick_block_i``).
 
 Same shape of reasoning as ``repro.core.perfmodel``: performance is
 ``min(compute limit, bandwidth limit)``, so the modeled time of one grid step
 is ``max(DMA time, VPU time)`` and we pick the feasible block minimizing the
 modeled time per output point:
 
-* DMA bytes/step: three input blocks (centre + the two i-neighbours that
-  carry the halo) plus one output block -- ``4 * bi * N * P * itemsize``;
-  fused sweeps amortize this over ``s`` operator applications.
-* VPU flops/step: ``2 * taps`` per point of the *extended* ``(bi + 2s)``-row
-  working block, per sweep -- the halo-recompute tax, which shrinks as ``bi``
-  grows.
-* VMEM residency: 3 input tiles + output tile (input dtype) + the extended
-  working block and its tap accumulator (accumulation dtype) must fit the
-  budget -- the paper's Table-2 "registers required vs registers available"
+* DMA bytes/step: every staged input view (3 i-neighbours untiled, 3x3
+  i/j-neighbours when j-tiled) plus one output block; fused sweeps amortize
+  this over ``s`` operator applications.
+* VPU ops/step: the *plan's* static op counts -- ``flops + shifts`` per
+  point of the extended working block per sweep (a lane shift occupies the
+  VPU like a flop), not the old blind ``2 * taps``.  A factored stencil27
+  plan (8 shifts + 19 flops) therefore models ~4x cheaper than the naive
+  schedule (54 + 53), which shifts the DMA/VPU crossover -- the paper's
+  Table-4 point that the synthesized schedule changes which resource binds.
+* VMEM residency: the staged tiles (input dtype) + the extended working
+  block and its tap accumulator (accumulation dtype) must fit the budget --
+  the paper's Table-2 "registers required vs registers available"
   constraint in VMEM terms.
 
-Feasible blocks divide M (Pallas grid constraint) and satisfy ``bi >= s``
-(the +-1-block halo must cover the fused-sweep depth).  Ties prefer sublane
-multiples (8), as the old heuristic did.
+Feasible blocks divide M (and N when j-tiled -- Pallas grid constraint) and
+satisfy ``bi, bj >= s`` (the +-1-block halo must cover the fused-sweep
+depth).  j-tiling engages only when no full-N block fits the budget --
+previously a hard wall where ``autotune_block_i`` returned an infeasible
+block.  Ties prefer sublane multiples (8), as the old heuristic did.
 """
 
 from __future__ import annotations
+
+from typing import List, Optional, Tuple
 
 # TPU-v5e-flavoured roofline constants (per core), only ever used as a ratio.
 HBM_BW = 819e9          # bytes/s
 VPU_FLOPS = 3e12        # f32 elementwise flop/s
 
 
-def _step_time(bi: int, n: int, p: int, itemsize: int, sweeps: int,
-               taps: int) -> float:
-    dma = 4.0 * bi * n * p * itemsize / HBM_BW
-    vpu = 2.0 * taps * sweeps * (bi + 2 * sweeps) * n * p / VPU_FLOPS
-    return max(dma, vpu) / (bi * n * p * sweeps)   # per output point-sweep
+def _divisors(x: int) -> List[int]:
+    small, large = [], []
+    d = 1
+    while d * d <= x:
+        if x % d == 0:
+            small.append(d)
+            if d != x // d:
+                large.append(x // d)
+        d += 1
+    return small + large[::-1]
 
 
-def _fits(bi: int, n: int, p: int, itemsize: int, sweeps: int,
-          acc_itemsize: int, vmem_budget: int) -> bool:
-    io_tiles = 4 * bi * n * p * itemsize
-    working = 2 * (bi + 2 * sweeps) * n * p * acc_itemsize
+def _plan_ops(plan, taps: int) -> Tuple[int, int]:
+    """(shifts, flops) per extended point per sweep; ``plan=None`` keeps the
+    legacy ``2 * taps`` pure-flop accounting for old callers."""
+    if plan is not None:
+        return plan.shifts, plan.flops
+    return 0, 2 * taps
+
+
+def _geometry(bi: int, bj: Optional[int], n: int, sweeps: int):
+    """(output columns, extended columns, staged input views) per step."""
+    if bj is None:
+        return n, n, 3
+    return bj, bj + 2 * sweeps, 9
+
+
+def _step_time(bi: int, bj: Optional[int], n: int, p: int, itemsize: int,
+               sweeps: int, shifts: int, flops: int) -> float:
+    wj, ej, views = _geometry(bi, bj, n, sweeps)
+    dma = (views + 1.0) * bi * wj * p * itemsize / HBM_BW
+    vpu = ((flops + shifts) * sweeps * (bi + 2 * sweeps) * ej * p
+           / VPU_FLOPS)
+    return max(dma, vpu) / (bi * wj * p * sweeps)  # per output point-sweep
+
+
+def _fits(bi: int, bj: Optional[int], n: int, p: int, itemsize: int,
+          sweeps: int, acc_itemsize: int, vmem_budget: int) -> bool:
+    wj, ej, views = _geometry(bi, bj, n, sweeps)
+    io_tiles = (views + 1) * bi * wj * p * itemsize
+    working = 2 * (bi + 2 * sweeps) * ej * p * acc_itemsize
     return io_tiles + working <= vmem_budget
 
 
+def autotune_blocks(m: int, n: int, p: int, itemsize: int,
+                    sweeps: int = 1, plan=None, taps: int = 27,
+                    acc_itemsize: int = 4,
+                    vmem_budget: int = 8 * 1024 * 1024,
+                    block_j: Optional[int] = None,
+                    allow_j_tiling: bool = True
+                    ) -> Tuple[int, Optional[int]]:
+    """Smallest modeled time per output point over feasible blockings.
+
+    Returns ``(block_i, block_j)`` with ``block_j=None`` meaning untiled
+    (full-N) blocks.  j-tiling is considered only when no untiled block fits
+    ``vmem_budget`` (or when ``block_j`` pins a tile width).  ``plan`` (a
+    :class:`~.plan.StencilPlan`) supplies the actual shift/flop counts;
+    without it the legacy ``2 * taps`` estimate applies.
+    """
+    shifts, flops = _plan_ops(plan, taps)
+    cands_i = [bi for bi in _divisors(m) if bi >= sweeps] or [m]
+
+    def key(bi: int, bj: Optional[int]):
+        return (_step_time(bi, bj, n, p, itemsize, sweeps, shifts, flops),
+                0 if (bi % 8 == 0 or bi < 8) else 1,
+                -bi * (bj if bj is not None else n))
+
+    if block_j is None:
+        feasible = [bi for bi in cands_i
+                    if _fits(bi, None, n, p, itemsize, sweeps, acc_itemsize,
+                             vmem_budget)]
+        if feasible:
+            return min(feasible, key=lambda bi: key(bi, None)), None
+        if not allow_j_tiling:      # nothing fits: smallest legal block
+            return cands_i[0], None
+        cands_j = [bj for bj in _divisors(n) if sweeps <= bj < n] or [n]
+    else:
+        cands_j = [block_j]
+    pairs = [(bi, bj) for bi in cands_i for bj in cands_j
+             if _fits(bi, bj, n, p, itemsize, sweeps, acc_itemsize,
+                      vmem_budget)]
+    if pairs:
+        return min(pairs, key=lambda bb: key(*bb))
+    return cands_i[0], cands_j[0]   # nothing fits: smallest legal tile
+
+
 def autotune_block_i(m: int, n: int, p: int, itemsize: int,
-                     sweeps: int = 1, taps: int = 27,
+                     sweeps: int = 1, taps: int = 27, plan=None,
                      acc_itemsize: int = 4,
                      vmem_budget: int = 8 * 1024 * 1024) -> int:
-    """Smallest modeled time per output point over feasible divisors of M."""
-    cands = [bi for bi in range(max(1, sweeps), m + 1) if m % bi == 0]
-    if not cands:
-        return m
-    feasible = [bi for bi in cands
-                if _fits(bi, n, p, itemsize, sweeps, acc_itemsize,
-                         vmem_budget)]
-    if not feasible:           # nothing fits: take the smallest legal block
-        return cands[0]
-    # min cost; tie-break to sublane multiples (or tiny blocks), then larger.
-    def key(bi: int):
-        return (_step_time(bi, n, p, itemsize, sweeps, taps),
-                0 if (bi % 8 == 0 or bi < 8) else 1,
-                -bi)
-    return min(feasible, key=key)
+    """Untiled (full-N) i-block choice -- the pre-j-tiling entry point."""
+    bi, _ = autotune_blocks(m, n, p, itemsize, sweeps=sweeps, plan=plan,
+                            taps=taps, acc_itemsize=acc_itemsize,
+                            vmem_budget=vmem_budget, allow_j_tiling=False)
+    return bi
 
 
 def pick_block_i(m: int, n: int, p: int, itemsize: int,
@@ -73,8 +142,13 @@ def pick_block_i(m: int, n: int, p: int, itemsize: int,
 def pick_block_rows(rows: int, p: int, itemsize: int,
                     vmem_budget: int = 4 << 20) -> int:
     """Row-block choice for the k-only (1-D) path: the largest power-of-two
-    row count whose tile fits the budget, falling back to all rows."""
+    row count whose tile fits the budget; when no power of two divides
+    ``rows``, the largest *fitting divisor* (never an over-budget full-rows
+    block, which the old fallback could return)."""
     for cand in (256, 128, 64, 32, 16, 8):
         if rows % cand == 0 and cand * p * itemsize <= vmem_budget:
             return cand
-    return rows
+    for cand in sorted(_divisors(rows), reverse=True):
+        if cand * p * itemsize <= vmem_budget:
+            return cand
+    return 1

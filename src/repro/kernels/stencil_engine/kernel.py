@@ -1,25 +1,35 @@
 """The single Pallas kernel body behind every engine stencil.
 
-One body serves 3-, 7-, 27-point and arbitrary radius-1 masks: the spec's tap
-list is unrolled at trace time into an FMA chain (the paper's synthesis step,
-retargeted from PPC450 SIMOMD slots to VPU lane shifts).  The same body also
-fuses ``s`` Jacobi sweeps per grid step: each block is widened by ``s`` halo
-rows on either side (read from the +-1 neighbour blocks), the sweep loop runs
-register/VMEM-resident, and only the central ``bi`` rows are written back --
-one HBM round-trip for ``s`` applications of the operator, the Pallas
-analogue of the paper's register-resident steady-state stream.  Global
-geometry (row offset, global M) arrives as a small int32 operand so the same
-kernel runs unsharded (offset 0) and as the per-shard body of the halo-
-exchange ``shard_map`` path.
+One body serves 3-, 7-, 27-point and arbitrary radius-1 masks: the spec is
+first compiled to a :class:`~.plan.StencilPlan` (the paper's synthesis step
+-- a factored partial-sum schedule for symmetric specs, a CSE'd shift
+schedule for arbitrary masks, a naive ``direct`` escape hatch) and the plan
+is unrolled at trace time.  Neighbour access is by static slice + zero pad
+on the resident block (:func:`~.plan.shift_slice`), never a wrap-around
+roll, so no out-of-domain values are computed then masked.
+
+The same body fuses ``s`` Jacobi sweeps per grid step: the working block is
+widened by ``s`` halo rows (and, when j-tiled, ``s`` halo columns) read from
+the neighbour blocks, the sweep loop runs register/VMEM-resident, and only
+the central rows are written back -- one HBM round-trip for ``s``
+applications of the operator, the Pallas analogue of the paper's
+register-resident steady-state stream.  Global geometry (row offset, global
+M) arrives as a small int32 operand so the same kernel runs unsharded
+(offset 0) and as the per-shard body of the halo-exchange ``shard_map``
+path.  When ``bj`` is set the grid gains a j dimension and each step sees a
+``(bi + 2s, bj + 2s, P)`` working block assembled from the 3x3 neighbour
+tiles -- grids whose full N x P slab exceeds the VMEM budget run anyway.
 """
 
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .spec import StencilSpec
+from .plan import StencilPlan, execute_plan
 
 
 def acc_dtype_for(dtype) -> jnp.dtype:
@@ -27,59 +37,58 @@ def acc_dtype_for(dtype) -> jnp.dtype:
     return jnp.float64 if dtype == jnp.float64 else jnp.float32
 
 
-def accumulate_taps(u: jax.Array, w: jax.Array, spec: StencilSpec,
-                    acc_dtype) -> jax.Array:
-    """Expand the spec's tap list: ``acc[x] = sum_t w[t] * u[x + offset_t]``.
+def stencil3d_kernel(*refs, plan: StencilPlan, bi: int, bj: Optional[int],
+                     n_global: int, sweeps: int, acc_dtype):
+    """Fused-sweep volumetric kernel.
 
-    Neighbour access is by ``jnp.roll`` on the trailing axes (the TPU
-    load-copy strategy -- lane/sublane shifts of the resident block).  Rolled
-    wrap-around values only ever land on rows the caller masks out.  Tap
-    order is the spec's lexicographic order, which keeps the f64 path
-    bit-identical to the jnp reference.
+    ``refs`` is ``(*blocks, geom_ref, w_ref, o_ref)`` where ``blocks`` holds
+    the 3 i-neighbour views (untiled, blocks ``(1, bi, N, P)``) or the 3x3
+    i/j-neighbour views in row-major ``(di, dj)`` order (j-tiled, blocks
+    ``(1, bi, bj, P)``).  ``geom_ref`` = (global row of this array's row 0,
+    global M) -- both 0 and the local M for the single-device path;
+    shard-dependent under shard_map.
     """
-    acc = jnp.zeros(u.shape, acc_dtype)
-    for (di, dj, dk), wi in zip(spec.offsets, spec.w_index):
-        t = u
-        if di:
-            t = jnp.roll(t, -di, axis=-3)
-        if dj:
-            t = jnp.roll(t, -dj, axis=-2)
-        if dk:
-            t = jnp.roll(t, -dk, axis=-1)
-        acc = acc + w[wi] * t
-    return acc
-
-
-def stencil3d_kernel(a_prev, a_cur, a_next, geom_ref, w_ref, o_ref, *,
-                     spec: StencilSpec, bi: int, sweeps: int, acc_dtype):
-    """Fused-sweep volumetric kernel; blocks are ``(1, bi, N, P)``.
-
-    ``geom_ref`` = (global row of this array's row 0, global M) -- both 0 and
-    the local M for the single-device path; shard-dependent under shard_map.
-    """
+    o_ref = refs[-1]
+    geom_ref, w_ref = refs[-3], refs[-2]
+    blocks = refs[:-3]
     i_blk = pl.program_id(1)
     s = sweeps
-    prev, cur, nxt = a_prev[0], a_cur[0], a_next[0]        # (bi, N, P)
-    # Extended working block: s halo rows each side, accumulation dtype.
-    u = jnp.concatenate([prev[-s:], cur, nxt[:s]], axis=0).astype(acc_dtype)
     w = w_ref[...]
-    n, p = cur.shape[-2], cur.shape[-1]
-    ext = bi + 2 * s
+    if bj is None:
+        prev, cur, nxt = (r[0] for r in blocks)            # (bi, N, P)
+        u = jnp.concatenate([prev[-s:], cur, nxt[:s]],
+                            axis=0).astype(acc_dtype)
+    else:
+        j_blk = pl.program_id(2)
+        strips = []
+        for ii in range(3):
+            row = [blocks[3 * ii + 0][0][:, -s:],
+                   blocks[3 * ii + 1][0],
+                   blocks[3 * ii + 2][0][:, :s]]
+            strip = jnp.concatenate(row, axis=1)           # (bi, bj + 2s, P)
+            strips.append(strip[-s:] if ii == 0
+                          else (strip if ii == 1 else strip[:s]))
+        u = jnp.concatenate(strips, axis=0).astype(acc_dtype)
+    ext = u.shape
+    n, p = ext[-2], ext[-1]
     gi = (geom_ref[0] + i_blk * bi - s
-          + jax.lax.broadcasted_iota(jnp.int32, (ext, n, p), 0))
-    jj = jax.lax.broadcasted_iota(jnp.int32, (ext, n, p), 1)
-    kk = jax.lax.broadcasted_iota(jnp.int32, (ext, n, p), 2)
+          + jax.lax.broadcasted_iota(jnp.int32, ext, 0))
+    jj = jax.lax.broadcasted_iota(jnp.int32, ext, 1)
+    if bj is not None:
+        jj = j_blk * bj - s + jj                            # global j index
+    kk = jax.lax.broadcasted_iota(jnp.int32, ext, 2)
     interior = ((gi > 0) & (gi < geom_ref[1] - 1)
-                & (jj > 0) & (jj < n - 1) & (kk > 0) & (kk < p - 1))
+                & (jj > 0) & (jj < n_global - 1) & (kk > 0) & (kk < p - 1))
     # Jacobi sweeps, Dirichlet boundary re-zeroed after each; the valid
-    # region shrinks one row per sweep from the extended edges, so the
-    # central bi rows are exact after s sweeps (requires s <= bi).
+    # region shrinks one row/column per sweep from the extended edges, so
+    # the central block is exact after s sweeps (requires s <= bi, bj).
     for _ in range(s):
-        u = jnp.where(interior, accumulate_taps(u, w, spec, acc_dtype), 0)
-    o_ref[0] = u[s:s + bi].astype(o_ref.dtype)
+        u = jnp.where(interior, execute_plan(plan, u, w), 0)
+    out = u[s:s + bi] if bj is None else u[s:s + bi, s:s + bj]
+    o_ref[0] = out.astype(o_ref.dtype)
 
 
-def stencil1d_kernel(a_ref, w_ref, o_ref, *, spec: StencilSpec, sweeps: int,
+def stencil1d_kernel(a_ref, w_ref, o_ref, *, plan: StencilPlan, sweeps: int,
                      acc_dtype):
     """k-only kernel over ``(block_rows, P)`` blocks; rows are independent,
     so fused sweeps need no halo at all."""
@@ -89,5 +98,5 @@ def stencil1d_kernel(a_ref, w_ref, o_ref, *, spec: StencilSpec, sweeps: int,
     kk = jax.lax.broadcasted_iota(jnp.int32, u.shape, u.ndim - 1)
     interior = (kk > 0) & (kk < p - 1)
     for _ in range(sweeps):
-        u = jnp.where(interior, accumulate_taps(u, w, spec, acc_dtype), 0)
+        u = jnp.where(interior, execute_plan(plan, u, w), 0)
     o_ref[...] = u.astype(o_ref.dtype)

@@ -2,7 +2,10 @@
 
 ``stencil_apply`` runs any registered (or ad-hoc) radius-1 spec over batched,
 multi-dtype inputs, with optional fused Jacobi sweeps, via the single kernel
-body in :mod:`.kernel`.  See the package docstring for the full tour.
+body in :mod:`.kernel`.  The spec is compiled to an execution plan
+(:mod:`.plan` -- ``auto``/``factored``/``cse``/``direct``) before tracing,
+and blocks may be tiled along j as well as i when the full N x P slab would
+not fit VMEM.  See the package docstring for the full tour.
 """
 
 from __future__ import annotations
@@ -15,52 +18,96 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from .autotune import autotune_block_i, pick_block_rows
+from .autotune import autotune_blocks, pick_block_rows
 from .kernel import acc_dtype_for, stencil1d_kernel, stencil3d_kernel
+from .plan import StencilPlan, compile_plan
 from .spec import StencilSpec, get_stencil
 
 
-def call_3d(a4: jax.Array, wf: jax.Array, geom: jax.Array, spec: StencilSpec,
-            bi: int, sweeps: int, interpret: bool) -> jax.Array:
-    """Wire the fused volumetric kernel: ``a4`` is ``(B, M, N, P)``; the
-    i-halo comes from passing ``a4`` three times under +-1-shifted (clamped)
-    block index maps.  ``geom`` = (global row offset, global M) int32."""
+def _clamped_imap(di: int, dj: int, top_i: int, top_j: int):
+    """Index map for the (di, dj) neighbour view of a (1, bi, bj, P) block
+    grid, clamped at the domain edges (the clamped duplicate data only ever
+    lands on rows/columns the global interior mask zeroes)."""
+    def f(bb, i, j):
+        ii = i if di == 0 else (jnp.maximum(i - 1, 0) if di < 0
+                                else jnp.minimum(i + 1, top_i))
+        jj = j if dj == 0 else (jnp.maximum(j - 1, 0) if dj < 0
+                                else jnp.minimum(j + 1, top_j))
+        return (bb, ii, jj, 0)
+    return f
+
+
+def call_3d(a4: jax.Array, wf: jax.Array, geom: jax.Array, plan: StencilPlan,
+            bi: int, bj: Optional[int], sweeps: int,
+            interpret: bool) -> jax.Array:
+    """Wire the fused volumetric kernel: ``a4`` is ``(B, M, N, P)``.
+
+    Untiled (``bj is None``): blocks are ``(1, bi, N, P)`` and the i-halo
+    comes from passing ``a4`` three times under +-1-shifted (clamped) block
+    index maps.  j-tiled: blocks are ``(1, bi, bj, P)`` and the kernel sees
+    all 3x3 neighbour views, so the working slab never exceeds
+    ``(bi + 2s)(bj + 2s)P`` whatever N is.  ``geom`` = (global row offset,
+    global M) int32.
+    """
     b, m, n, p = a4.shape
     if m % bi != 0:
         raise ValueError(f"block size {bi} must divide M={m}")
     if sweeps > bi:
         raise ValueError(f"fused sweeps={sweeps} exceed the +-1-block halo; "
                          f"need block_i >= sweeps (block_i={bi})")
-    nblk = m // bi
-    block = (1, bi, n, p)
-    acc = acc_dtype_for(a4.dtype)
-    in_specs = [
-        pl.BlockSpec(block, lambda bb, i: (bb, jnp.maximum(i - 1, 0), 0, 0)),
-        pl.BlockSpec(block, lambda bb, i: (bb, i, 0, 0)),
-        pl.BlockSpec(block, functools.partial(
-            lambda bb, i, top: (bb, jnp.minimum(i + 1, top), 0, 0),
-            top=nblk - 1)),
-        pl.BlockSpec(geom.shape, lambda bb, i: (0,)),
-        pl.BlockSpec(wf.shape, lambda bb, i: (0,)),
-    ]
+    nbi = m // bi
+    kern = functools.partial(stencil3d_kernel, plan=plan, bi=bi, bj=bj,
+                             n_global=n, sweeps=sweeps,
+                             acc_dtype=acc_dtype_for(a4.dtype))
+    if bj is None:
+        block = (1, bi, n, p)
+        in_specs = [
+            pl.BlockSpec(block,
+                         lambda bb, i: (bb, jnp.maximum(i - 1, 0), 0, 0)),
+            pl.BlockSpec(block, lambda bb, i: (bb, i, 0, 0)),
+            pl.BlockSpec(block, functools.partial(
+                lambda bb, i, top: (bb, jnp.minimum(i + 1, top), 0, 0),
+                top=nbi - 1)),
+            pl.BlockSpec(geom.shape, lambda bb, i: (0,)),
+            pl.BlockSpec(wf.shape, lambda bb, i: (0,)),
+        ]
+        return pl.pallas_call(
+            kern,
+            grid=(b, nbi),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec(block, lambda bb, i: (bb, i, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct(a4.shape, a4.dtype),
+            interpret=interpret,
+        )(a4, a4, a4, geom, wf)
+
+    if n % bj != 0:
+        raise ValueError(f"block size {bj} must divide N={n}")
+    if sweeps > bj:
+        raise ValueError(f"fused sweeps={sweeps} exceed the +-1-block halo; "
+                         f"need block_j >= sweeps (block_j={bj})")
+    nbj = n // bj
+    block = (1, bi, bj, p)
+    in_specs = [pl.BlockSpec(block, _clamped_imap(di, dj, nbi - 1, nbj - 1))
+                for di in (-1, 0, 1) for dj in (-1, 0, 1)]
+    in_specs += [pl.BlockSpec(geom.shape, lambda bb, i, j: (0,)),
+                 pl.BlockSpec(wf.shape, lambda bb, i, j: (0,))]
     return pl.pallas_call(
-        functools.partial(stencil3d_kernel, spec=spec, bi=bi, sweeps=sweeps,
-                          acc_dtype=acc),
-        grid=(b, nblk),
+        kern,
+        grid=(b, nbi, nbj),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec(block, lambda bb, i: (bb, i, 0, 0)),
+        out_specs=pl.BlockSpec(block, lambda bb, i, j: (bb, i, j, 0)),
         out_shape=jax.ShapeDtypeStruct(a4.shape, a4.dtype),
         interpret=interpret,
-    )(a4, a4, a4, geom, wf)
+    )(*([a4] * 9), geom, wf)
 
 
-def _call_1d(a2: jax.Array, wf: jax.Array, spec: StencilSpec, block_rows: int,
+def _call_1d(a2: jax.Array, wf: jax.Array, plan: StencilPlan, block_rows: int,
              sweeps: int, interpret: bool) -> jax.Array:
     rows, p = a2.shape
     if rows % block_rows != 0:
         raise ValueError(f"block_rows {block_rows} must divide rows={rows}")
     return pl.pallas_call(
-        functools.partial(stencil1d_kernel, spec=spec, sweeps=sweeps,
+        functools.partial(stencil1d_kernel, plan=plan, sweeps=sweeps,
                           acc_dtype=acc_dtype_for(a2.dtype)),
         grid=(rows // block_rows,),
         in_specs=[pl.BlockSpec((block_rows, p), lambda i: (i, 0)),
@@ -72,22 +119,32 @@ def _call_1d(a2: jax.Array, wf: jax.Array, spec: StencilSpec, block_rows: int,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("stencil", "block_i", "sweeps",
-                                    "interpret"))
+                   static_argnames=("stencil", "block_i", "block_j", "plan",
+                                    "sweeps", "interpret"))
 def stencil_apply(a: jax.Array, w: jax.Array,
                   stencil: Union[str, int, StencilSpec] = "stencil27",
-                  block_i: Optional[int] = None, sweeps: int = 1,
-                  interpret: bool = True) -> jax.Array:
+                  block_i: Optional[int] = None,
+                  block_j: Optional[int] = None, plan: str = "auto",
+                  sweeps: int = 1, interpret: bool = True) -> jax.Array:
     """Apply a registered stencil: ``sweeps`` fused Jacobi applications.
 
     * volumetric specs: ``a`` is ``(..., M, N, P)`` -- leading dims batch;
     * k-only specs: ``a`` is ``(..., P)`` -- leading dims are rows;
     * bf16/f32 inputs accumulate in f32, f64 stays f64 (reference path);
-    * ``block_i`` (i-block / row-block size) defaults to the cost model.
+    * ``plan`` picks the execution schedule (``auto`` -> ``factored`` for
+      mirror-symmetric specs, ``cse`` otherwise; ``direct`` is the naive
+      parity escape hatch) -- same-plan runs execute the identical op walk
+      as :func:`stencil_ref` (f64 bit-parity on the reference
+      configurations; exact blocking-invariance on integer-valued data --
+      see :mod:`.plan` on fma contraction);
+    * ``block_i``/``block_j`` (i-block rows / j-tile columns) default to the
+      plan-aware cost model, which engages j-tiling only when the full
+      N x P slab would blow the VMEM budget.
     """
     if sweeps < 1:
         raise ValueError(f"sweeps must be >= 1, got {sweeps}")
     spec = get_stencil(stencil)
+    cplan = compile_plan(spec, plan)
     acc = acc_dtype_for(a.dtype)
     wf = spec.canon_weights(w).astype(acc)
 
@@ -97,15 +154,18 @@ def stencil_apply(a: jax.Array, w: jax.Array,
         rows = int(np.prod(a.shape[:-1]))
         a2 = a.reshape(rows, a.shape[-1])
         br = block_i or pick_block_rows(rows, a.shape[-1], a.dtype.itemsize)
-        return _call_1d(a2, wf, spec, br, sweeps, interpret).reshape(a.shape)
+        return _call_1d(a2, wf, cplan, br, sweeps, interpret).reshape(a.shape)
 
     if a.ndim < 3:
         raise ValueError(f"{spec.name}: need (..., M, N, P), got {a.shape}")
     m, n, p = a.shape[-3:]
     batch = int(np.prod(a.shape[:-3])) if a.ndim > 3 else 1
     a4 = a.reshape(batch, m, n, p)
-    bi = block_i or autotune_block_i(m, n, p, a.dtype.itemsize,
-                                     sweeps=sweeps, taps=spec.taps)
+    bi, bj = block_i, block_j
+    if bi is None:
+        bi, bj_auto = autotune_blocks(m, n, p, a.dtype.itemsize,
+                                      sweeps=sweeps, plan=cplan, block_j=bj)
+        bj = bj if bj is not None else bj_auto
     geom = jnp.array([0, m], jnp.int32)
-    out = call_3d(a4, wf, geom, spec, bi, sweeps, interpret)
+    out = call_3d(a4, wf, geom, cplan, bi, bj, sweeps, interpret)
     return out.reshape(a.shape)

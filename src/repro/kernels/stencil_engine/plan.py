@@ -1,0 +1,306 @@
+"""Plan IR: compile a :class:`StencilSpec` into an explicit tap schedule.
+
+This is the paper's synthesis step (sect. 4: emit the kernel as a factored
+instruction schedule, not 27 independent multiply-adds) made explicit as a
+tiny SSA program that is *compiled before tracing* and then interpreted at
+trace time by both the Pallas kernel and the jnp reference.  Because the two
+executors walk the identical op list, the f64 paths stay bit-for-bit equal,
+and the plan's static ``shifts``/``flops`` counts feed the block-size cost
+model instead of the old blind ``2 * taps`` estimate.
+
+Three plan kinds:
+
+``direct``
+    The naive schedule -- one shift per nonzero offset component per tap,
+    one multiply-add per tap (54 shifts + 53 flop-ops for stencil27).  Kept
+    as an escape hatch for parity testing.
+
+``cse``
+    Common-subexpression-eliminated direct schedule for *arbitrary* masks:
+    taps are grouped by ``(dj, dk)`` so each trailing-plane shift is built
+    once (j-shifts of ``u`` are themselves shared across ``dk``) and reused
+    across ``di in {-1, 0, 1}``; per-``di`` partial sums are shifted once
+    along i at the end (10 shifts + 53 flop-ops for stencil27).
+
+``factored``
+    The paper's partial-sum factorization for mirror-symmetric specs
+    (stencil7, stencil27, any ``spec_from_mask`` mask closed under per-axis
+    sign flips with weights depending only on ``(|di|, |dj|, |dk|)``):
+    k-neighbour pair sums are built once, reused across j, then across i --
+    8 shifts + 19 flop-ops for stencil27, i.e. <= 1/3 of the direct shift
+    count and <= 40% of its flop count.
+
+Shifts are single-axis, single-step ops with zero fill (static slices on the
+halo-extended block -- no wrap-around values are ever computed then masked;
+the vacated positions only ever land on rows the Dirichlet mask zeroes).
+
+Determinism, precisely: a plan fixes the *mathematical* op sequence, so on
+exact arithmetic (integer-valued data and weights within the mantissa) every
+plan kind, blocking, and tiling is bit-identical -- the property tests
+assert this.  In floating point, XLA/LLVM may contract a ``w * x + y`` into
+an fma in one compiled program and not another (the choice follows fusion
+shape, survives ``optimization_barrier`` and bitcast fences, and is *not*
+controllable from JAX), so cross-*program* bit-equality -- e.g. j-tiled vs
+untiled -- is only a per-op <= 1-ulp agreement in general.  Same-plan
+kernel-vs-reference f64 parity for the blessed configurations (the engine's
+reference path, asserted in tier-1) has been bit-exact in practice; the
+builders keep products feeding their adds directly (scales are hoisted past
+shifts: ``shift(w * x) -> w * shift(x)``, identical op counts) to keep the
+contraction pattern as uniform as possible across programs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from .spec import StencilSpec, get_stencil
+
+Offset = Tuple[int, int, int]
+
+PLAN_KINDS = ("auto", "direct", "cse", "factored")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanOp:
+    """One SSA op.  Value ids: 0 is the input ``u``; op ``k`` defines id
+    ``k + 1``.  ``shift``: value ``a`` moved by ``off`` (exactly one nonzero
+    +-1 component, ``out[x] = in[x + off]``, zero fill).  ``scale``:
+    ``w[w_idx] * a``.  ``add``: ``a + b``.  ``fma``: ``b + w[w_idx] * a``."""
+
+    kind: str                     # "shift" | "scale" | "add" | "fma"
+    a: int
+    b: int = -1
+    off: Offset = (0, 0, 0)
+    w_idx: int = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilPlan:
+    """A compiled execution schedule for one spec.
+
+    ``out`` is the id of the final value (-1 for an empty tap list, which
+    executes as zeros).  ``shifts``/``flops`` are the static op counts the
+    cost model consumes: each shift is one full-block lane/sublane move, and
+    flops count multiplies and adds (an fma is two).
+    """
+
+    spec: StencilSpec
+    kind: str                     # "direct" | "cse" | "factored"
+    ops: Tuple[PlanOp, ...]
+    out: int
+
+    @property
+    def shifts(self) -> int:
+        return sum(1 for op in self.ops if op.kind == "shift")
+
+    @property
+    def flops(self) -> int:
+        return sum({"scale": 1, "add": 1, "fma": 2}.get(op.kind, 0)
+                   for op in self.ops)
+
+    def describe(self) -> Dict[str, int]:
+        """Machine-readable op counts (benchmark / JSON artifact form)."""
+        return {"taps": self.spec.taps, "shifts": self.shifts,
+                "flops": self.flops, "ops": len(self.ops)}
+
+
+class _Builder:
+    """Emit helper: returns the SSA id of each new value."""
+
+    def __init__(self):
+        self.ops: List[PlanOp] = []
+
+    def _emit(self, op: PlanOp) -> int:
+        self.ops.append(op)
+        return len(self.ops)          # u is id 0; op k defines id k + 1
+
+    def shift(self, a: int, axis: int, d: int) -> int:
+        off = [0, 0, 0]
+        off[axis] = d
+        return self._emit(PlanOp("shift", a, off=tuple(off)))
+
+    def scale(self, w_idx: int, a: int) -> int:
+        return self._emit(PlanOp("scale", a, w_idx=w_idx))
+
+    def add(self, a: int, b: int) -> int:
+        return self._emit(PlanOp("add", a, b))
+
+    def fma(self, w_idx: int, a: int, acc: int) -> int:
+        return self._emit(PlanOp("fma", a, acc, w_idx=w_idx))
+
+    def acc(self, w_idx: int, a: int, acc: Optional[int]) -> int:
+        return self.scale(w_idx, a) if acc is None else self.fma(w_idx, a, acc)
+
+
+def mirror_symmetric(spec: StencilSpec) -> bool:
+    """True when the tap set is closed under per-axis sign flips and the
+    weight index depends only on ``(|di|, |dj|, |dk|)`` -- the condition for
+    the factored partial-sum schedule to be exact."""
+    wmap = dict(zip(spec.offsets, spec.w_index))
+    for (di, dj, dk), wi in wmap.items():
+        for si in ((1, -1) if di else (1,)):
+            for sj in ((1, -1) if dj else (1,)):
+                for sk in ((1, -1) if dk else (1,)):
+                    if wmap.get((di * si, dj * sj, dk * sk)) != wi:
+                        return False
+    return True
+
+
+def _direct_ops(spec: StencilSpec, b: _Builder) -> Optional[int]:
+    """Naive schedule: shift per nonzero offset component, fma per tap, in
+    the spec's lexicographic order (the seed engine's arithmetic)."""
+    acc = None
+    for off, wi in zip(spec.offsets, spec.w_index):
+        t = 0
+        for axis, d in enumerate(off):
+            if d:
+                t = b.shift(t, axis, d)
+        acc = b.acc(wi, t, acc)
+    return acc
+
+
+def _cse_ops(spec: StencilSpec, b: _Builder) -> Optional[int]:
+    """Grouped schedule: one shift per distinct ``(dj, dk)`` plane (j-shifts
+    of ``u`` shared across dk), reused across ``di``; per-``di`` partial sums
+    are shifted along i once at the end.  A single-tap ``di`` group would
+    shift a bare product, so its scale is hoisted past the i-shift (same op
+    counts -- see the module determinism invariant)."""
+    if not spec.offsets:
+        return None
+    by_di: Dict[int, List[Tuple[int, int, int]]] = {}
+    for (di, dj, dk), wi in zip(spec.offsets, spec.w_index):
+        by_di.setdefault(di, []).append((dj, dk, wi))
+    jshift: Dict[int, int] = {0: 0}
+    plane: Dict[Tuple[int, int], int] = {}
+    for dj, dk in sorted({(dj, dk) for g in by_di.values()
+                          for dj, dk, _ in g}):
+        if dj not in jshift:
+            jshift[dj] = b.shift(0, 1, dj)
+        plane[(dj, dk)] = (b.shift(jshift[dj], 2, dk) if dk
+                           else jshift[dj])
+    out = None
+    for di in sorted(by_di):
+        group = sorted(by_di[di])
+        if di and len(group) == 1:
+            dj, dk, wi = group[0]
+            out = b.acc(wi, b.shift(plane[(dj, dk)], 0, di), out)
+            continue
+        acc = None
+        for dj, dk, wi in group:
+            acc = b.acc(wi, plane[(dj, dk)], acc)
+        term = b.shift(acc, 0, di) if di else acc
+        out = term if out is None else b.add(out, term)
+    return out
+
+
+def _factored_ops(spec: StencilSpec, b: _Builder) -> Optional[int]:
+    """Partial-sum schedule for mirror-symmetric specs: k-pair sums swept
+    once, reused across j (j-pair sums), combined per ``|di|``, then reused
+    across i -- the paper's factored 27-point kernel as a plan."""
+    if not spec.offsets:
+        return None
+    classes: Dict[Tuple[int, int, int], int] = {}
+    for off, wi in zip(spec.offsets, spec.w_index):
+        classes[(abs(off[0]), abs(off[1]), abs(off[2]))] = wi
+    k_sum: Dict[int, int] = {}
+    for c in sorted({c for _, _, c in classes}):
+        k_sum[c] = 0 if c == 0 else b.add(b.shift(0, 2, -1),
+                                          b.shift(0, 2, 1))
+    j_sum: Dict[Tuple[int, int], int] = {}
+    for bb, c in sorted({(bb, c) for _, bb, c in classes}):
+        j_sum[(bb, c)] = (k_sum[c] if bb == 0
+                          else b.add(b.shift(k_sum[c], 1, -1),
+                                     b.shift(k_sum[c], 1, 1)))
+    out = None
+    if any(a == 0 for a, _, _ in classes):
+        acc = None
+        for bb, c in sorted((bb, c) for aa, bb, c in classes if aa == 0):
+            acc = b.acc(classes[(0, bb, c)], j_sum[(bb, c)], acc)
+        out = acc
+    pairs_1 = sorted((bb, c) for aa, bb, c in classes if aa == 1)
+    if len(pairs_1) == 1:
+        # a single |di|=1 class would shift a bare product; hoist the scale
+        # past the i-pair sum (same op counts -- determinism invariant)
+        bb, c = pairs_1[0]
+        pair = b.add(b.shift(j_sum[(bb, c)], 0, -1),
+                     b.shift(j_sum[(bb, c)], 0, 1))
+        out = b.acc(classes[(1, bb, c)], pair, out)
+    elif pairs_1:
+        acc = None
+        for bb, c in pairs_1:
+            acc = b.acc(classes[(1, bb, c)], j_sum[(bb, c)], acc)
+        pair = b.add(b.shift(acc, 0, -1), b.shift(acc, 0, 1))
+        out = pair if out is None else b.add(out, pair)
+    return out
+
+
+@functools.lru_cache(maxsize=256)
+def compile_plan(spec: Union[str, int, StencilSpec],
+                 plan: str = "auto") -> StencilPlan:
+    """Compile ``spec`` into a :class:`StencilPlan`.
+
+    ``plan="auto"`` picks ``factored`` for mirror-symmetric specs (stencil3,
+    stencil7, stencil27, symmetric masks) and ``cse`` otherwise;
+    ``plan="direct"`` is the naive parity escape hatch.
+    """
+    spec = get_stencil(spec)
+    if plan not in PLAN_KINDS:
+        raise ValueError(f"unknown plan {plan!r}; expected one of {PLAN_KINDS}")
+    kind = plan
+    if kind == "auto":
+        kind = "factored" if mirror_symmetric(spec) else "cse"
+    if kind == "factored" and not mirror_symmetric(spec):
+        raise ValueError(
+            f"{spec.name}: factored plan needs a mirror-symmetric tap set "
+            f"(closed under per-axis sign flips, weights on |offsets|); "
+            f"use plan='cse' or 'auto'")
+    b = _Builder()
+    build = {"direct": _direct_ops, "cse": _cse_ops,
+             "factored": _factored_ops}[kind]
+    out = build(spec, b)
+    return StencilPlan(spec=spec, kind=kind, ops=tuple(b.ops),
+                       out=-1 if out is None else out)
+
+
+def shift_slice(t: jax.Array, off: Offset) -> jax.Array:
+    """``out[x] = t[x + off]`` along one trailing axis, zero fill -- a static
+    slice plus an edge pad, never a wrap-around roll.  ``off`` indexes the
+    (i, j, k) axes as the trailing three dims (k-only specs use only the
+    last)."""
+    (idx, d), = [(i, o) for i, o in enumerate(off) if o]
+    axis = t.ndim - 3 + idx
+    src = [slice(None)] * t.ndim
+    src[axis] = slice(1, None) if d > 0 else slice(0, -1)
+    pad_shape = list(t.shape)
+    pad_shape[axis] = 1
+    pad = jnp.zeros(pad_shape, t.dtype)
+    body = t[tuple(src)]
+    return jnp.concatenate([body, pad] if d > 0 else [pad, body], axis=axis)
+
+
+def execute_plan(cplan: StencilPlan, u: jax.Array, w: jax.Array,
+                 shift=shift_slice) -> jax.Array:
+    """Interpret the plan at trace time.  ``u`` must already carry the
+    accumulation dtype; ``w`` is the canonical flat weight vector in the same
+    dtype.  Both the Pallas kernel and the jnp reference call this -- one op
+    walk, identical arithmetic (see the module docstring for what that
+    guarantees bitwise)."""
+    if cplan.out < 0:
+        return jnp.zeros_like(u)
+    vals = [u]
+    for op in cplan.ops:
+        if op.kind == "shift":
+            v = shift(vals[op.a], op.off)
+        elif op.kind == "scale":
+            v = w[op.w_idx] * vals[op.a]
+        elif op.kind == "add":
+            v = vals[op.a] + vals[op.b]
+        else:                                     # fma
+            v = vals[op.b] + w[op.w_idx] * vals[op.a]
+        vals.append(v)
+    return vals[cplan.out]

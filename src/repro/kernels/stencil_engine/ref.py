@@ -1,9 +1,12 @@
 """jnp oracle for every engine stencil (f64-capable reference path).
 
-Expands the same tap list as the Pallas kernel, in the same order, with the
-same accumulation dtype rules -- so in f64 the kernel and this reference are
-bit-identical, and in f32/bf16 they differ only by block-boundary-free
-rounding noise.
+Executes the same compiled plan (:mod:`.plan`) as the Pallas kernel, with
+the same shift primitive and the same accumulation dtype rules -- so for any
+given ``plan`` kind the kernel and this reference are bit-identical in f64
+(whatever the blocking, j-tiled or not), and in f32/bf16 they differ only by
+block-boundary-free rounding noise.  Different plan kinds reassociate the
+tap sum and therefore agree only to rounding in floating point (exactly, on
+integer-valued data).
 """
 
 from __future__ import annotations
@@ -13,7 +16,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .kernel import acc_dtype_for, accumulate_taps
+from .kernel import acc_dtype_for
+from .plan import StencilPlan, compile_plan, execute_plan
 from .spec import StencilSpec, get_stencil
 
 
@@ -26,26 +30,36 @@ def _interior_mask(shape, ndim: int) -> jax.Array:
     return mask
 
 
-def apply_spec_once(u: jax.Array, w: jax.Array, spec: StencilSpec) -> jax.Array:
+def apply_plan_once(u: jax.Array, w: jax.Array,
+                    cplan: StencilPlan) -> jax.Array:
+    """One Dirichlet-masked application of the planned operator, in
+    ``u.dtype``."""
+    mask = _interior_mask(u.shape, cplan.spec.ndim)
+    return jnp.where(mask, execute_plan(cplan, u, w), 0)
+
+
+def apply_spec_once(u: jax.Array, w: jax.Array, spec: StencilSpec,
+                    plan: str = "auto") -> jax.Array:
     """One Dirichlet-masked application of the operator, in ``u.dtype``."""
-    mask = _interior_mask(u.shape, spec.ndim)
-    return jnp.where(mask, accumulate_taps(u, w, spec, u.dtype), 0)
+    return apply_plan_once(u, w, compile_plan(spec, plan))
 
 
-@functools.partial(jax.jit, static_argnames=("stencil", "sweeps"))
+@functools.partial(jax.jit, static_argnames=("stencil", "sweeps", "plan"))
 def stencil_ref(a: jax.Array, w: jax.Array, stencil="stencil27",
-                sweeps: int = 1) -> jax.Array:
+                sweeps: int = 1, plan: str = "auto") -> jax.Array:
     """Reference for ``stencil_apply``: ``sweeps`` Jacobi applications of the
-    named (or ad-hoc) spec, Dirichlet boundary zeroed each sweep.
+    named (or ad-hoc) spec, Dirichlet boundary zeroed each sweep, under the
+    same compiled ``plan`` as the kernel.
 
     Jitted so eager callers see the same XLA rounding (FMA contraction) as
     the Pallas kernel -- that's what makes the f64 parity bit-exact."""
     spec = get_stencil(stencil)
     if a.ndim < spec.ndim:
         raise ValueError(f"{spec.name}: input rank {a.ndim} < {spec.ndim}")
+    cplan = compile_plan(spec, plan)
     acc = acc_dtype_for(a.dtype)
     u = a.astype(acc)
     wf = spec.canon_weights(w).astype(acc)
     for _ in range(sweeps):
-        u = apply_spec_once(u, wf, spec)
+        u = apply_plan_once(u, wf, cplan)
     return u.astype(a.dtype)

@@ -4,14 +4,22 @@ The partition plan comes from ``repro.sharding.planner.stencil_halo_sharding``
 (divisibility and halo-depth checks, PlanNote audit trail).  Each shard owns a
 contiguous slab of i-rows, trades ``sweeps`` halo rows with its neighbours
 via ``lax.ppermute`` (edge shards receive zeros -- the Dirichlet boundary),
-and then runs the *same* fused Pallas kernel as the single-device path; the
-kernel's geometry operand (global row offset, global M) keeps the
-interior/boundary masking correct across shard seams.
+and then runs the *same* fused plan-compiled Pallas kernel as the
+single-device path (including j-tiled blocking when the local N x P slab
+exceeds the VMEM budget); the kernel's geometry operand (global row offset,
+global M) keeps the interior/boundary masking correct across shard seams.
+
+The compiled shard_map program is memoized in a small bounded cache keyed on
+the mesh's *device ids + topology + axis names* (plus the execution
+geometry), not on the ``Mesh`` object itself -- equal test meshes share one
+entry and the cache can never retain more than ``_SHARDED_CACHE_MAX``
+programs (the old ``lru_cache`` keyed on ``Mesh`` kept up to 64 meshes alive
+indefinitely).
 """
 
 from __future__ import annotations
 
-import functools
+from collections import OrderedDict
 from typing import Optional, Union
 
 import jax
@@ -22,18 +30,35 @@ from jax.sharding import Mesh, PartitionSpec as P
 from .._compat import shard_map
 
 from ...sharding.planner import StencilShardPlan, stencil_halo_sharding
-from .autotune import autotune_block_i
+from .autotune import autotune_blocks
 from .kernel import acc_dtype_for
 from .ops import call_3d, stencil_apply
+from .plan import StencilPlan, compile_plan
 from .spec import StencilSpec, get_stencil
 
+_SHARDED_CACHE: "OrderedDict[tuple, object]" = OrderedDict()
+_SHARDED_CACHE_MAX = 32
 
-@functools.lru_cache(maxsize=64)
-def _sharded_fn(spec: StencilSpec, mesh: Mesh, axis: str, bi: int,
-                sweeps: int, interpret: bool, h: int, m_loc: int, n_sh: int,
-                m: int, part):
+
+def _mesh_key(mesh: Mesh) -> tuple:
+    """Hashable mesh identity that does not retain the Mesh object: device
+    platforms + ids (ids restart at 0 per backend), topology shape, and axis
+    names."""
+    return (tuple((d.platform, int(d.id)) for d in mesh.devices.flat),
+            tuple(mesh.devices.shape), tuple(mesh.axis_names))
+
+
+def _sharded_fn(cplan: StencilPlan, mesh: Mesh, axis: str, bi: int,
+                bj: Optional[int], sweeps: int, interpret: bool, h: int,
+                m_loc: int, n_sh: int, m: int, part):
     """Build (and cache) the jitted shard_map program for one geometry, so
     repeated calls don't retrace the inner pallas_call."""
+    key = (cplan, _mesh_key(mesh), axis, bi, bj, sweeps, interpret, h,
+           m_loc, n_sh, m, part)
+    fn = _SHARDED_CACHE.get(key)
+    if fn is not None:
+        _SHARDED_CACHE.move_to_end(key)
+        return fn
 
     def local_fn(a_loc: jax.Array, wf_: jax.Array) -> jax.Array:
         idx = jax.lax.axis_index(axis)
@@ -46,19 +71,25 @@ def _sharded_fn(spec: StencilSpec, mesh: Mesh, axis: str, bi: int,
         ext = jnp.concatenate([lo, a_loc, hi], axis=1)
         geom = jnp.stack([idx * m_loc - h,
                           jnp.int32(m)]).astype(jnp.int32)
-        out = call_3d(ext, wf_, geom, spec, bi, sweeps, interpret)
+        out = call_3d(ext, wf_, geom, cplan, bi, bj, sweeps, interpret)
         return out[:, h:h + m_loc]
 
-    return jax.jit(shard_map(local_fn, mesh=mesh, in_specs=(part, P(None)),
-                             out_specs=part, check_rep=False))
+    fn = jax.jit(shard_map(local_fn, mesh=mesh, in_specs=(part, P(None)),
+                           out_specs=part, check_rep=False))
+    _SHARDED_CACHE[key] = fn
+    while len(_SHARDED_CACHE) > _SHARDED_CACHE_MAX:
+        _SHARDED_CACHE.popitem(last=False)
+    return fn
 
 
 def stencil_sharded(a: jax.Array, w: jax.Array,
                     stencil: Union[str, int, StencilSpec] = "stencil27",
                     mesh: Optional[Mesh] = None, axis: str = "data",
-                    block_i: Optional[int] = None, sweeps: int = 1,
-                    interpret: bool = True,
-                    plan: Optional[StencilShardPlan] = None) -> jax.Array:
+                    block_i: Optional[int] = None,
+                    block_j: Optional[int] = None, plan: str = "auto",
+                    sweeps: int = 1, interpret: bool = True,
+                    shard_plan: Optional[StencilShardPlan] = None
+                    ) -> jax.Array:
     """Halo-exchange execution of ``stencil_apply`` over a mesh axis.
 
     ``a`` is ``(..., M, N, P)`` (volumetric specs only); ``mesh`` defaults to
@@ -68,9 +99,16 @@ def stencil_sharded(a: jax.Array, w: jax.Array,
     Note: the kernel runs per shard on the halo-extended local slab, so an
     explicit ``block_i`` must divide ``M / n_shards + 2 * sweeps`` (not M);
     it is ignored when the planner falls back to the unsharded path.  Omit
-    it to let the cost model choose in every configuration.
+    it to let the plan-aware cost model choose in every configuration
+    (including a j-tile width when the local slab overflows VMEM).
     """
+    if isinstance(plan, StencilShardPlan):
+        raise TypeError(
+            "stencil_sharded(plan=...) now selects the execution-plan kind "
+            "(auto/direct/cse/factored); pass the partition plan as "
+            "shard_plan=... instead")
     spec = get_stencil(stencil)
+    cplan = compile_plan(spec, plan)
     if spec.ndim != 3:
         raise ValueError(f"{spec.name}: sharded execution needs a volumetric "
                          f"(ndim=3) spec")
@@ -79,27 +117,31 @@ def stencil_sharded(a: jax.Array, w: jax.Array,
     if mesh is None:
         mesh = jax.make_mesh((jax.device_count(),), (axis,))
     m, n, p = a.shape[-3:]
-    if plan is None:
-        plan = stencil_halo_sharding(m, mesh, axis=axis, sweeps=sweeps)
-    if plan.n_shards <= 1:
+    if shard_plan is None:
+        shard_plan = stencil_halo_sharding(m, mesh, axis=axis, sweeps=sweeps)
+    if shard_plan.n_shards <= 1:
         # An explicit block_i is sized for the halo-extended local slab; it
         # generally doesn't divide M, so let the cost model choose here --
         # the same call must work whatever the device count.
-        return stencil_apply(a, w, spec, sweeps=sweeps, interpret=interpret)
+        return stencil_apply(a, w, spec, plan=plan, sweeps=sweeps,
+                             interpret=interpret)
 
     batch = int(np.prod(a.shape[:-3])) if a.ndim > 3 else 1
     a4 = a.reshape(batch, m, n, p)
     acc = acc_dtype_for(a.dtype)
     wf = spec.canon_weights(w).astype(acc)
-    h, m_loc, n_sh = plan.halo, plan.local_rows, plan.n_shards
+    h, m_loc, n_sh = shard_plan.halo, shard_plan.local_rows, shard_plan.n_shards
     m_ext = m_loc + 2 * h
     if block_i is not None and m_ext % block_i != 0:
         raise ValueError(
             f"sharded block_i={block_i} must divide the halo-extended local "
             f"slab (M/n_shards + 2*sweeps = {m_loc} + {2 * h} = {m_ext}); "
             f"omit block_i to let the cost model choose")
-    bi = block_i or autotune_block_i(m_ext, n, p, a.dtype.itemsize,
-                                     sweeps=sweeps, taps=spec.taps)
-    fn = _sharded_fn(spec, mesh, axis, bi, sweeps, interpret, h, m_loc, n_sh,
-                     m, plan.spec)
+    bi, bj = block_i, block_j
+    if bi is None:
+        bi, bj_auto = autotune_blocks(m_ext, n, p, a.dtype.itemsize,
+                                      sweeps=sweeps, plan=cplan, block_j=bj)
+        bj = bj if bj is not None else bj_auto
+    fn = _sharded_fn(cplan, mesh, axis, bi, bj, sweeps, interpret, h, m_loc,
+                     n_sh, m, shard_plan.spec)
     return fn(a4, wf).reshape(a.shape)

@@ -11,11 +11,14 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import (get_stencil, list_stencils, spec_from_mask,
-                           stencil_apply, stencil_ref, stencil3_ref,
-                           stencil7_ref, stencil27_ref)
+from repro.kernels import (compile_plan, get_stencil, list_stencils,
+                           spec_from_mask, stencil_apply, stencil_ref,
+                           stencil3_ref, stencil7_ref, stencil27_ref)
 from repro.kernels.stencil_engine.autotune import (autotune_block_i,
-                                                   pick_block_i)
+                                                   autotune_blocks,
+                                                   pick_block_i,
+                                                   pick_block_rows)
+from repro.kernels.stencil_engine.plan import mirror_symmetric
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 RNG = np.random.default_rng(7)
@@ -180,6 +183,164 @@ def test_boolean_mask_assigns_unique_weights():
     expect = float(1.0 * a[i, j, k - 1] + 2.0 * a[i, j, k]
                    + 3.0 * a[i, j, k + 1])
     assert abs(float(got[i, j, k]) - expect) < 1e-5
+
+
+def test_plan_op_counts_factored_vs_direct():
+    """Acceptance: the stencil27 factored plan is <= 1/3 of the direct
+    plan's shifts and <= 40% of its flops, statically, via the plan IR."""
+    direct = compile_plan("stencil27", "direct")
+    factored = compile_plan("stencil27", "factored")
+    cse = compile_plan("stencil27", "cse")
+    assert (direct.shifts, direct.flops) == (54, 53)   # 27 muls + 26 adds
+    assert factored.shifts * 3 <= direct.shifts
+    assert factored.flops <= 0.4 * direct.flops
+    assert cse.shifts < direct.shifts and cse.flops == direct.flops
+    # auto resolves to factored for the symmetric built-ins, cse otherwise
+    for name in ("stencil3", "stencil7", "stencil27"):
+        assert mirror_symmetric(get_stencil(name))
+        assert compile_plan(name, "auto").kind == "factored"
+    mask = np.zeros((3, 3, 3), bool)
+    mask[1, 1, 1] = mask[1, 1, 2] = True               # no -k mirror tap
+    lop = spec_from_mask("lop", mask)
+    assert not mirror_symmetric(lop)
+    assert compile_plan(lop, "auto").kind == "cse"
+    with pytest.raises(ValueError, match="mirror-symmetric"):
+        compile_plan(lop, "factored")
+
+
+def test_plan_kinds_agree_and_match_ref():
+    """Every plan kind is bit-identical to the same-plan reference; across
+    plan kinds the reassociated sums agree to f32 rounding."""
+    a = jnp.asarray(RNG.standard_normal((8, 12, 16)), jnp.float32)
+    w = jnp.asarray(RNG.uniform(0.1, 1.0, (2, 2, 2)), jnp.float32)
+    outs = {}
+    for plan in ("direct", "cse", "factored"):
+        got = stencil_apply(a, w, "stencil27", block_i=4, plan=plan)
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(stencil_ref(a, w, "stencil27",
+                                                    plan=plan)))
+        outs[plan] = np.asarray(got)
+    for plan in ("cse", "factored"):
+        np.testing.assert_allclose(outs[plan], outs["direct"],
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_factored_f64_bit_identical_to_ref():
+    """Acceptance: stencil27 factored, f64, bit-identical to stencil_ref --
+    blocked kernel vs full-array oracle, fused sweeps included."""
+    with jax.experimental.enable_x64():
+        a = jnp.asarray(RNG.standard_normal((8, 10, 16)), jnp.float64)
+        w = jnp.asarray(RNG.uniform(0.1, 1.0, (2, 2, 2)), jnp.float64)
+        for sweeps in (1, 2):
+            got = stencil_apply(a, w, "stencil27", block_i=4,
+                                plan="factored", sweeps=sweeps)
+            ref = stencil_ref(a, w, "stencil27", sweeps=sweeps,
+                              plan="factored")
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@pytest.mark.parametrize("name", ["stencil7", "stencil27"])
+@pytest.mark.parametrize("sweeps", [1, 2])
+def test_j_tiled_matches_untiled(name, sweeps):
+    """j-tiling is pure data movement: on integer-valued data (exact
+    arithmetic, immune to per-program fma contraction) every blocking is
+    bit-identical to the untiled run and the reference; on float data it
+    agrees to rounding."""
+    spec = get_stencil(name)
+    ai = jnp.asarray(RNG.integers(-4, 5, (8, 12, 16)), jnp.float32)
+    wi = jnp.asarray(RNG.integers(1, 4, spec.w_shape), jnp.float32)
+    untiled = stencil_apply(ai, wi, name, block_i=4, sweeps=sweeps)
+    for bj in (3, 4, 6):
+        tiled = stencil_apply(ai, wi, name, block_i=4, block_j=bj,
+                              sweeps=sweeps)
+        np.testing.assert_array_equal(np.asarray(tiled), np.asarray(untiled))
+    np.testing.assert_array_equal(
+        np.asarray(untiled),
+        np.asarray(stencil_ref(ai, wi, name, sweeps=sweeps)))
+    af = jnp.asarray(RNG.standard_normal((8, 12, 16)), jnp.float32)
+    wf = jnp.asarray(RNG.uniform(0.1, 1.0, spec.w_shape), jnp.float32)
+    uf = stencil_apply(af, wf, name, block_i=4, sweeps=sweeps)
+    tf = stencil_apply(af, wf, name, block_i=4, block_j=4, sweeps=sweeps)
+    np.testing.assert_allclose(np.asarray(tf), np.asarray(uf),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_j_tiled_batched_and_custom_mask():
+    ab = jnp.asarray(RNG.integers(-4, 5, (2, 6, 9, 16)), jnp.float32)
+    w = jnp.asarray(RNG.integers(1, 4, (2, 2, 2)), jnp.float32)
+    got = stencil_apply(ab, w, "stencil27", block_i=3, block_j=3)
+    np.testing.assert_array_equal(
+        np.asarray(got),
+        np.asarray(stencil_apply(ab, w, "stencil27", block_i=3)))
+    mask = np.zeros((3, 3, 3), bool)                  # asymmetric: cse plan
+    mask[1, 1, 1] = mask[2, 0, 1] = mask[1, 2, 2] = True
+    spec = spec_from_mask("jt-asym", mask)
+    wc = jnp.asarray([1.0, -2.0, 2.0], jnp.float32)
+    a = ab[0]
+    np.testing.assert_array_equal(
+        np.asarray(stencil_apply(a, wc, spec, block_i=2, block_j=3)),
+        np.asarray(stencil_ref(a, wc, spec)))
+
+
+def test_j_tiled_sweeps_deeper_than_halo_raises():
+    a = jnp.zeros((8, 8, 16), jnp.float32)
+    w = jnp.zeros((2, 2, 2), jnp.float32)
+    with pytest.raises(ValueError, match="block_j"):
+        stencil_apply(a, w, "stencil27", block_i=4, block_j=2, sweeps=3)
+
+
+def test_autotune_blocks_engages_j_tiling_past_vmem_wall():
+    """When no full-N block fits the budget (previously a hard wall), the
+    tuner returns a feasible (bi, bj) tile instead."""
+    plan = compile_plan("stencil27")
+    # comfortable slab: stays untiled
+    bi, bj = autotune_blocks(32, 48, 128, 4, plan=plan)
+    assert bj is None and 32 % bi == 0
+    # N x P slab over budget even at bi=1: j-tiling kicks in
+    bi, bj = autotune_blocks(8, 288, 1024, 4, plan=plan)
+    assert bj is not None and 288 % bj == 0 and 8 % bi == 0
+    from repro.kernels.stencil_engine.autotune import _fits
+    assert _fits(bi, bj, 288, 1024, 4, 1, 4, 8 * 1024 * 1024)
+    assert not _fits(1, None, 288, 1024, 4, 1, 4, 8 * 1024 * 1024)
+    # the plan-aware model charges the factored schedule ~4x less VPU work
+    direct = compile_plan("stencil27", "direct")
+    from repro.kernels.stencil_engine.autotune import _step_time
+    assert (_step_time(8, None, 48, 128, 4, 1, plan.shifts, plan.flops)
+            <= _step_time(8, None, 48, 128, 4, 1, direct.shifts,
+                          direct.flops))
+
+
+def test_pick_block_rows_divisor_fallback():
+    # power-of-two path unchanged
+    assert pick_block_rows(256, 128, 4) == 256
+    # rows=12: no power-of-two candidate divides it; the old code returned
+    # all 12 rows even when that blew the budget -- now the largest fitting
+    # divisor wins
+    assert pick_block_rows(12, 1024, 4, vmem_budget=16 * 1024) == 4
+    # and when the full tile fits, behaviour is unchanged (rows itself)
+    assert pick_block_rows(12, 16, 4) == 12
+    # nothing fits: degrade to single rows, never over budget by choice
+    assert pick_block_rows(7, 4096, 8, vmem_budget=1024) == 1
+
+
+def test_sharded_fn_cache_keyed_on_device_ids_and_bounded():
+    """The shard_map program cache must not key on Mesh object identity
+    (leaking meshes) and must stay bounded."""
+    from jax.sharding import PartitionSpec as P
+    from repro.kernels.stencil_engine import sharded as sh
+    plan = compile_plan("stencil27")
+    part = P(None, "data")
+    from jax.sharding import Mesh
+    m1 = jax.make_mesh((1,), ("data",))
+    m2 = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    assert sh._mesh_key(m1) == sh._mesh_key(m2)
+    f1 = sh._sharded_fn(plan, m1, "data", 4, None, 1, True, 1, 8, 1, 8, part)
+    f2 = sh._sharded_fn(plan, m2, "data", 4, None, 1, True, 1, 8, 1, 8, part)
+    assert f1 is f2
+    for k in range(sh._SHARDED_CACHE_MAX + 8):
+        sh._sharded_fn(plan, m1, "data", 4, None, 1, True, 1, 8 + k, 1,
+                       8 + k, part)
+    assert len(sh._SHARDED_CACHE) <= sh._SHARDED_CACHE_MAX
 
 
 def test_autotuner_properties():
