@@ -9,16 +9,25 @@ real hardware.
 The tail rows exercise the unified stencil engine: batched execution, fused
 multi-sweep Jacobi (``s`` operator applications per HBM round-trip), a
 direct-vs-cse-vs-factored plan comparison (the paper's synthesized schedule
-vs the naive one, with each plan's static shift/flop counts), a j-tiled run
-at a size where the untiled N x P slab exceeds the VMEM budget (previously a
-hard wall), and a 2-device halo-exchange ``shard_map`` run (forced
-host-platform devices, in a subprocess so this process keeps its
-single-device view).
+vs the naive one, with each plan's static shift/flop counts), a
+streamed-vs-replicated path comparison (the paper's plane-streaming kernel
+vs the halo-replicated one, with each path's modeled bytes/point and
+achieved HBM bandwidth), a j-tiled run at a size where the untiled N x P
+slab exceeds the VMEM budget (previously a hard wall), and a 2-device
+halo-exchange ``shard_map`` run (forced host-platform devices, in a
+subprocess so this process keeps its single-device view).
 
 Besides the ``name,us_per_call,derived`` text rows, every measurement is
 recorded as a dict and the whole run is dumped to ``BENCH_stencil.json``
 (path overridable via ``$BENCH_STENCIL_JSON``) -- rows plus the stencil27
-plan op counts -- which CI uploads as an artifact.
+plan op counts and per-path modeled bytes/point -- which CI uploads as an
+artifact.
+
+``python benchmarks/stencil_throughput.py --quick`` runs only the
+streamed-vs-replicated rows plus the cost-model gate (exit 1 if the
+streamed path's modeled bytes/point exceeds 2.5 x itemsize, or regresses
+above the replicated path, for the reference 27-point configuration) --
+the fast CI guard.
 """
 
 from __future__ import annotations
@@ -35,9 +44,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import (autotune_blocks, compile_plan, stencil_apply,
-                           stencil_ref, stencil3_ref, stencil7_ref,
-                           stencil27, stencil27_ref)
+from repro.core.perfmodel import streaming_roofline
+from repro.kernels import (autotune_engine, bytes_per_point, compile_plan,
+                           stencil_apply, stencil_ref, stencil3_ref,
+                           stencil7_ref, stencil27, stencil27_ref)
+from repro.kernels.stencil_engine.autotune import HBM_BW, VPU_FLOPS
 
 SIZES = (14, 30, 62, 126)
 
@@ -61,12 +72,17 @@ def _time(fn, *args, reps: int = 5) -> float:
 
 
 def write_json(path: Optional[str] = None) -> str:
-    """Dump the recorded rows + stencil27 plan op counts to ``path``."""
+    """Dump the recorded rows + stencil27 plan op counts + per-path modeled
+    bytes/point to ``path``."""
     path = path or os.environ.get("BENCH_STENCIL_JSON", "BENCH_stencil.json")
     doc = {
-        "schema": "bench_stencil/v1",
+        "schema": "bench_stencil/v2",
         "plans": {kind: compile_plan("stencil27", kind).describe()
                   for kind in ("direct", "cse", "factored")},
+        "paths": {p: {"bytes_per_point_f32": bytes_per_point(p, 4),
+                      "bytes_per_point_f32_jtiled":
+                          bytes_per_point(p, 4, j_tiled=True)}
+                  for p in ("stream", "replicate")},
         "rows": _RECORDS,
     }
     with open(path, "w") as f:
@@ -126,8 +142,20 @@ def run() -> List[str]:
                      napkin_speedup_v5e=vpu_t / mxu_t))
     rows.extend(_engine_rows(rng))
     rows.extend(_plan_rows(rng))
+    rows.extend(_path_rows(rng))
     rows.append(_jtiled_row(rng))
     rows.append(_sharded_row())
+    write_json()
+    return rows
+
+
+def run_quick() -> List[str]:
+    """CI guard: only the streamed-vs-replicated rows + the cost-model gate
+    (no size sweep, no subprocess sharding)."""
+    _RECORDS.clear()
+    rng = np.random.default_rng(0)
+    rows = _path_rows(rng)
+    rows.extend(check_stream_model())
     write_json()
     return rows
 
@@ -194,13 +222,91 @@ def _plan_rows(rng) -> List[str]:
     return rows
 
 
+# Reference 27-point configuration for the streamed-vs-replicated
+# comparison and the CI cost-model gate.
+REF_CONFIG = dict(m=16, n=24, p=128, block_i=4, itemsize=4)
+
+
+def _path_rows(rng) -> List[str]:
+    """Streamed vs replicated data movement for stencil27 -- the paper's
+    plane-streaming kernel (each input plane fetched once, halo carried in
+    VMEM scratch) against the halo-replicated one, with each path's modeled
+    bytes/point, roofline, and achieved HBM bandwidth."""
+    rows: List[str] = []
+    m, n, p, bi = (REF_CONFIG[k] for k in ("m", "n", "p", "block_i"))
+    w = jnp.asarray(rng.uniform(0.1, 1, (2, 2, 2)), jnp.float32)
+    a = jnp.asarray(rng.standard_normal((m, n, p)), jnp.float32)
+    st = (m - 2) * (n - 2) * (p - 2)
+    cplan = compile_plan("stencil27")
+    itemsize = a.dtype.itemsize
+    base = None
+    for sweeps in (1, 2):
+        for path in ("replicate", "stream"):
+            bpp = bytes_per_point(path, itemsize, j_tiled=False,
+                                  sweeps=sweeps)
+            roof = streaming_roofline(bpp - itemsize / sweeps,
+                                      itemsize / sweeps,
+                                      (cplan.flops + cplan.shifts),
+                                      HBM_BW, VPU_FLOPS)
+            t = _time(lambda x, pa=path, s=sweeps: stencil_apply(
+                x, w, "stencil27", block_i=bi, sweeps=s, path=pa), a)
+            err = float(jnp.max(jnp.abs(
+                stencil_apply(a, w, "stencil27", block_i=bi, sweeps=sweeps,
+                              path=path)
+                - stencil_ref(a, w, "stencil27", sweeps=sweeps))))
+            moved = bpp * sweeps * m * n * p          # bytes per call
+            gbps = moved / t / 1e9
+            base = t if path == "replicate" else base
+            rows.append(_row(
+                f"engine27.path_{path}_s{sweeps}.{m}x{n}x{p}", t * 1e6,
+                f"{sweeps*st/t/1e6:.2f} Mstencil/s "
+                f"bytes_per_pt={bpp:.1f} achieved={gbps:.2f} GB/s "
+                f"vs_replicate={base/t:.2f}x bound={roof.bound} "
+                f"max_err={err:.2e} ok={err < 1e-4}",
+                path=path, sweeps=sweeps, bytes_per_point=bpp,
+                achieved_gbps=gbps, modeled_bound=roof.bound,
+                mstencil_per_s=sweeps * st / t / 1e6,
+                speedup_vs_replicate=base / t, max_err=err,
+                ok=bool(err < 1e-4)))
+    return rows
+
+
+def check_stream_model() -> List[str]:
+    """The CI gate (satellite): for the reference 27-point configuration the
+    streamed path must model <= 2.5 x itemsize bytes/point at sweeps=1 and
+    never regress above the replicated path.  Appends a gate row; raises
+    ``SystemExit(1)`` on violation so the workflow fails."""
+    itemsize = REF_CONFIG["itemsize"]
+    stream = bytes_per_point("stream", itemsize)
+    rep = bytes_per_point("replicate", itemsize)
+    m, n, p = (REF_CONFIG[k] for k in ("m", "n", "p"))
+    path, bi, bj = autotune_engine(m, n, p, itemsize,
+                                   plan=compile_plan("stencil27"))
+    ok = (stream <= 2.5 * itemsize) and (stream <= rep) and path == "stream"
+    row = _row("engine27.model_gate", 0.0,
+               f"stream={stream:.1f} replicate={rep:.1f} B/pt "
+               f"limit={2.5 * itemsize:.1f} auto_path={path} ok={ok}",
+               stream_bytes_per_point=stream,
+               replicate_bytes_per_point=rep, auto_path=path, ok=bool(ok))
+    if not ok:
+        # surface the diagnostics the gate exists for: the gate row and the
+        # measured rows recorded so far still reach stdout + the artifact
+        print(row)
+        write_json()
+        raise SystemExit(
+            f"stencil cost-model gate failed: streamed bytes/point "
+            f"{stream} vs replicated {rep} (limit {2.5 * itemsize}), "
+            f"auto path {path!r}")
+    return [row]
+
+
 def _jtiled_row(rng) -> str:
     """A size whose full N x P slab exceeds the VMEM budget: the cost model
     must pick a j-tiled blocking (previously a hard wall) and the result
     must still match the reference."""
     m, n, p = 4, 2048, 128
     cplan = compile_plan("stencil27")
-    bi, bj = autotune_blocks(m, n, p, 4, sweeps=1, plan=cplan)
+    path, bi, bj = autotune_engine(m, n, p, 4, sweeps=1, plan=cplan)
     w = jnp.asarray(rng.uniform(0.1, 1, (2, 2, 2)), jnp.float32)
     a = jnp.asarray(rng.standard_normal((m, n, p)), jnp.float32)
     st = (m - 2) * (n - 2) * (p - 2)
@@ -208,9 +314,10 @@ def _jtiled_row(rng) -> str:
     err = float(jnp.max(jnp.abs(stencil_apply(a, w, "stencil27")
                                 - stencil_ref(a, w, "stencil27"))))
     return _row(f"engine27.jtiled.{m}x{n}x{p}", t * 1e6,
-                f"{st/t/1e6:.2f} Mstencil/s blocks=({bi},{bj}) "
+                f"{st/t/1e6:.2f} Mstencil/s path={path} blocks=({bi},{bj}) "
                 f"max_err={err:.2e} ok={bj is not None and err < 1e-4}",
-                block_i=bi, block_j=bj, mstencil_per_s=st / t / 1e6,
+                path=path, block_i=bi, block_j=bj,
+                mstencil_per_s=st / t / 1e6,
                 max_err=err, ok=bool(bj is not None and err < 1e-4))
 
 
@@ -267,4 +374,5 @@ def _sharded_row() -> str:
 
 
 if __name__ == "__main__":
-    print("\n".join(run()))
+    quick = "--quick" in sys.argv[1:]
+    print("\n".join(run_quick() if quick else run()))

@@ -18,9 +18,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import (list_stencils, spec_from_mask, stencil_apply,
-                           stencil_ref, stencil_sharded)
-from repro.kernels.stencil_engine import autotune_block_i
+from repro.kernels import (bytes_per_point, list_stencils, spec_from_mask,
+                           stencil_apply, stencil_ref, stencil_sharded)
+from repro.kernels.stencil_engine import autotune_engine
 
 
 def main() -> None:
@@ -30,17 +30,25 @@ def main() -> None:
 
     names = sorted({s.name for s in list_stencils().values()})
     print(f"[engine] registry: {names}")
-    bi = autotune_block_i(*a.shape, a.dtype.itemsize, sweeps=1, taps=27)
-    print(f"[engine] grid {a.shape}, cost-model i-block = {bi} "
-          f"(roofline max(DMA, VPU) per point, cf. paper Table 2)")
+    path, bi, bj = autotune_engine(*a.shape, a.dtype.itemsize, sweeps=1)
+    print(f"[engine] grid {a.shape}, cost model picks path={path!r}, "
+          f"i-block = {bi} (roofline max(DMA, VPU) per point, cf. paper "
+          f"Table 2): {bytes_per_point('stream', a.dtype.itemsize):.0f} "
+          f"B/point streamed vs "
+          f"{bytes_per_point('replicate', a.dtype.itemsize):.0f} replicated")
 
     t0 = time.perf_counter()
-    out = stencil_apply(a, w, "stencil27", block_i=bi)
+    out = stencil_apply(a, w, "stencil27", block_i=bi)   # streams by default
     ref = stencil_ref(a, w, "stencil27")
     err = float(jnp.max(jnp.abs(out - ref)))
+    errp = float(jnp.max(jnp.abs(
+        stencil_apply(a, w, "stencil27", block_i=bi, path="replicate")
+        - out)))
+    # f32 stream-vs-replicate is tolerance-level (bit-exact only for
+    # f64/integer data -- per-program fma contraction, see plan.py)
     print(f"[engine] 27-point interpret run {time.perf_counter()-t0:.2f}s, "
-          f"max err vs jnp oracle = {err:.2e} "
-          f"({'OK' if err < 1e-4 else 'FAIL'})")
+          f"max err vs jnp oracle = {err:.2e}, streamed-vs-replicated = "
+          f"{errp:.2e} ({'OK' if err < 1e-4 and errp < 1e-5 else 'FAIL'})")
 
     # Batched + fused: 3 Jacobi sweeps in ONE pallas_call (1 HBM round-trip).
     ab = jnp.asarray(rng.standard_normal((2, 16, 24, 128)), jnp.float32)

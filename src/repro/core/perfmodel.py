@@ -60,6 +60,53 @@ def _bw_limit(read_bps: float, write_bps: float, read_bw: float) -> float:
     return CLOCK_MHZ / (read_bps / read_bw + write_bps / WRITE_BW)
 
 
+@dataclasses.dataclass(frozen=True)
+class StreamEstimate:
+    """Generic streaming roofline for one kernel configuration: the paper's
+    ``min(compute limit, bandwidth limit)`` applied to any (bytes, flops)
+    per-point pair -- used by the Pallas engine's autotuner/benchmarks with
+    TPU HBM/VPU rates the same way :func:`analyze` uses the BG/P ladder."""
+
+    read_bytes_per_point: float
+    write_bytes_per_point: float
+    flops_per_point: float
+    mem_bw: float                   # bytes/s
+    compute_rate: float             # flop/s
+
+    @property
+    def bytes_per_point(self) -> float:
+        return self.read_bytes_per_point + self.write_bytes_per_point
+
+    @property
+    def bw_points_per_s(self) -> float:
+        return self.mem_bw / max(self.bytes_per_point, 1e-30)
+
+    @property
+    def compute_points_per_s(self) -> float:
+        return self.compute_rate / max(self.flops_per_point, 1e-30)
+
+    @property
+    def points_per_s(self) -> float:
+        return min(self.bw_points_per_s, self.compute_points_per_s)
+
+    @property
+    def bound(self) -> str:
+        return ("bandwidth" if self.bw_points_per_s
+                <= self.compute_points_per_s else "compute")
+
+
+def streaming_roofline(read_bytes_per_point: float,
+                       write_bytes_per_point: float,
+                       flops_per_point: float, mem_bw: float,
+                       compute_rate: float) -> StreamEstimate:
+    """Roofline estimate for a streaming kernel: points/s limited by either
+    ``mem_bw / bytes_per_point`` or ``compute_rate / flops_per_point`` --
+    the paper's sect.-5 model with the BG/P DDR/FPU constants generalized
+    so the TPU engine (HBM bytes, plan-derived VPU ops) can reuse it."""
+    return StreamEstimate(read_bytes_per_point, write_bytes_per_point,
+                          flops_per_point, mem_bw, compute_rate)
+
+
 def analyze(cfg: StencilConfig, kern: Optional[SynthKernel] = None,
             n_iters: int = 24) -> PerfEstimate:
     kern = kern or synth_stencil(cfg)

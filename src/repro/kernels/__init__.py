@@ -3,7 +3,8 @@
 from .flash_attention import attention_ref, flash_attention  # noqa: F401
 from .mamba_scan import mamba_scan, mamba_scan_ref  # noqa: F401
 from .stencil_engine import (StencilPlan, StencilSpec,  # noqa: F401
-                             autotune_block_i, autotune_blocks, compile_plan,
+                             autotune_block_i, autotune_blocks,
+                             autotune_engine, bytes_per_point, compile_plan,
                              get_stencil, list_stencils, register_stencil,
                              spec_from_mask, stencil_apply, stencil_ref,
                              stencil_sharded, stencil3, stencil3_ref,

@@ -33,9 +33,21 @@ Execution -- :func:`stencil_apply`
     :func:`stencil_ref` under the same ``plan`` on the reference
     configurations (same op walk, same arithmetic; blocking-invariance is
     exact on integer-valued data -- see :mod:`.plan` on fma contraction).
-    ``block_i``/``block_j`` default to the plan-aware roofline cost model
-    (:func:`autotune_blocks`), which charges the plan's actual
-    ``shifts + flops`` instead of ``2 * taps``.
+    ``block_i``/``block_j`` default to the plan- and path-aware roofline
+    cost model (:func:`autotune_engine` / :func:`autotune_blocks`), which
+    charges the plan's actual ``shifts + flops`` instead of ``2 * taps``
+    and the path's real HBM bytes per point.
+
+Plane streaming -- ``stencil_apply(..., path="stream")`` (default via auto)
+    The paper's central optimization as the volumetric hot path: the grid
+    walks i-blocks in order with a single input operand, and a VMEM
+    ``scratch_shapes`` window of ``block_i + sweeps`` planes is carried
+    across grid steps (``pl.when``-guarded prime/rotate), so each input
+    plane is fetched from HBM exactly once per call and written once --
+    ~2 transfers per point (:func:`bytes_per_point`), vs 4 (untiled) / 10
+    (j-tiled) on the halo-replicated path, which survives as the
+    ``path="replicate"`` parity escape hatch (f64 runs of the two paths
+    are bit-identical).
 
 j-tiled blocking -- ``stencil_apply(..., block_j=bj)``
     Blocks become ``(1, bi, bj, P)`` with a j-halo assembled from the 3x3
@@ -66,11 +78,12 @@ Tier-1 verify: ``PYTHONPATH=src python -m pytest -x -q``
 property tests in ``tests/test_stencil_plan.py``).
 """
 
-from .autotune import (autotune_block_i, autotune_blocks,  # noqa: F401
+from .autotune import (PATH_KINDS, autotune_block_i,  # noqa: F401
+                       autotune_blocks, autotune_engine, bytes_per_point,
                        pick_block_i, pick_block_rows)
 from .compat import (stencil3, stencil3_ref, stencil7, stencil7_ref,  # noqa: F401
                      stencil27, stencil27_ref)
-from .ops import stencil_apply  # noqa: F401
+from .ops import default_interpret, stencil_apply  # noqa: F401
 from .plan import (PLAN_KINDS, PlanOp, StencilPlan, compile_plan,  # noqa: F401
                    execute_plan, mirror_symmetric, shift_slice)
 from .ref import stencil_ref  # noqa: F401

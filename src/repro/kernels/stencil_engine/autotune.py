@@ -1,29 +1,39 @@
-"""Plan-aware cost-model block selection (replaces ``pick_block_i``).
+"""Plan- and path-aware cost-model block selection.
 
 Same shape of reasoning as ``repro.core.perfmodel``: performance is
 ``min(compute limit, bandwidth limit)``, so the modeled time of one grid step
-is ``max(DMA time, VPU time)`` and we pick the feasible block minimizing the
-modeled time per output point:
+is ``max(DMA time, VPU time)`` and we pick the feasible (path, block) pair
+minimizing the modeled time per output point:
 
-* DMA bytes/step: every staged input view (3 i-neighbours untiled, 3x3
-  i/j-neighbours when j-tiled) plus one output block; fused sweeps amortize
-  this over ``s`` operator applications.
+* DMA bytes/step: every staged input view plus one output block.  The
+  *replicated* path stages 3 i-neighbour views untiled (9 i/j views
+  j-tiled); the *streaming* path fetches each i-block once (one
+  identity-mapped view untiled, the 3 j-neighbour views j-tiled) and
+  carries the halo in VMEM scratch -- see :func:`bytes_per_point`.  Fused
+  sweeps amortize the traffic over ``s`` operator applications.
 * VPU ops/step: the *plan's* static op counts -- ``flops + shifts`` per
-  point of the extended working block per sweep (a lane shift occupies the
+  point of the extended working strip per sweep (a lane shift occupies the
   VPU like a flop), not the old blind ``2 * taps``.  A factored stencil27
   plan (8 shifts + 19 flops) therefore models ~4x cheaper than the naive
   schedule (54 + 53), which shifts the DMA/VPU crossover -- the paper's
   Table-4 point that the synthesized schedule changes which resource binds.
 * VMEM residency: the staged tiles (input dtype) + the extended working
-  block and its tap accumulator (accumulation dtype) must fit the budget --
-  the paper's Table-2 "registers required vs registers available"
-  constraint in VMEM terms.
+  strip and its tap accumulator (accumulation dtype) -- plus, on the
+  streaming path, the ``bi + s``-plane rotating scratch window -- must fit
+  the budget: the paper's Table-2 "registers required vs registers
+  available" constraint in VMEM terms.
 
 Feasible blocks divide M (and N when j-tiled -- Pallas grid constraint) and
-satisfy ``bi, bj >= s`` (the +-1-block halo must cover the fused-sweep
-depth).  j-tiling engages only when no full-N block fits the budget --
-previously a hard wall where ``autotune_block_i`` returned an infeasible
-block.  Ties prefer sublane multiples (8), as the old heuristic did.
+satisfy ``bi, bj >= s`` (the carried window / +-1-block halo must cover the
+fused-sweep depth).  j-tiling engages only when no full-N block fits the
+budget.  Ties prefer sublane multiples (8), as the old heuristic did.
+
+:func:`autotune_engine` is the top-level entry: it races the streaming and
+replicated rooflines per shape and returns ``(path, block_i, block_j)`` --
+streaming wins whenever it is feasible (it moves 2 bytes/point where the
+replicated path moves 4, or 4 vs 10 j-tiled) but the replicated path
+remains reachable as the ``path="replicate"`` parity escape hatch and for
+shapes where the streaming scratch window itself overflows VMEM.
 """
 
 from __future__ import annotations
@@ -33,6 +43,8 @@ from typing import List, Optional, Tuple
 # TPU-v5e-flavoured roofline constants (per core), only ever used as a ratio.
 HBM_BW = 819e9          # bytes/s
 VPU_FLOPS = 3e12        # f32 elementwise flop/s
+
+PATH_KINDS = ("auto", "stream", "replicate")
 
 
 def _divisors(x: int) -> List[int]:
@@ -55,16 +67,43 @@ def _plan_ops(plan, taps: int) -> Tuple[int, int]:
     return 0, 2 * taps
 
 
-def _geometry(bi: int, bj: Optional[int], n: int, sweeps: int):
+def _views(j_tiled: bool, path: str) -> int:
+    """Input views staged per grid step: the streaming path fetches each
+    block once (plus the 3 j-neighbour tiles when j-tiled); the replicated
+    path re-fetches the full 3 (untiled) / 9 (j-tiled) halo neighbourhood."""
+    if path == "stream":
+        return 3 if j_tiled else 1
+    return 9 if j_tiled else 3
+
+
+def _geometry(bi: int, bj: Optional[int], n: int, sweeps: int,
+              path: str = "replicate"):
     """(output columns, extended columns, staged input views) per step."""
     if bj is None:
-        return n, n, 3
-    return bj, bj + 2 * sweeps, 9
+        return n, n, _views(False, path)
+    return bj, bj + 2 * sweeps, _views(True, path)
+
+
+def bytes_per_point(path: str, itemsize: int, j_tiled: bool = False,
+                    sweeps: int = 1) -> float:
+    """Modeled HBM bytes moved per output point per call (reads + the one
+    write), amortized over ``sweeps`` fused applications.
+
+    Streaming untiled is the paper's ideal ~2 transfers/point: each input
+    plane read exactly once, each output plane written once.  The replicated
+    path re-reads every plane per staged view: 3 + 1 untiled, 9 + 1
+    j-tiled.  Streaming j-tiled re-reads along j only (3 + 1).
+    """
+    if path not in ("stream", "replicate"):
+        raise ValueError(f"unknown path {path!r}; expected 'stream' or "
+                         f"'replicate'")
+    return (_views(j_tiled, path) + 1) * itemsize / sweeps
 
 
 def _step_time(bi: int, bj: Optional[int], n: int, p: int, itemsize: int,
-               sweeps: int, shifts: int, flops: int) -> float:
-    wj, ej, views = _geometry(bi, bj, n, sweeps)
+               sweeps: int, shifts: int, flops: int,
+               path: str = "replicate") -> float:
+    wj, ej, views = _geometry(bi, bj, n, sweeps, path)
     dma = (views + 1.0) * bi * wj * p * itemsize / HBM_BW
     vpu = ((flops + shifts) * sweeps * (bi + 2 * sweeps) * ej * p
            / VPU_FLOPS)
@@ -72,11 +111,13 @@ def _step_time(bi: int, bj: Optional[int], n: int, p: int, itemsize: int,
 
 
 def _fits(bi: int, bj: Optional[int], n: int, p: int, itemsize: int,
-          sweeps: int, acc_itemsize: int, vmem_budget: int) -> bool:
-    wj, ej, views = _geometry(bi, bj, n, sweeps)
+          sweeps: int, acc_itemsize: int, vmem_budget: int,
+          path: str = "replicate") -> bool:
+    wj, ej, views = _geometry(bi, bj, n, sweeps, path)
     io_tiles = (views + 1) * bi * wj * p * itemsize
+    scratch = ((bi + sweeps) * ej * p * itemsize if path == "stream" else 0)
     working = 2 * (bi + 2 * sweeps) * ej * p * acc_itemsize
-    return io_tiles + working <= vmem_budget
+    return io_tiles + scratch + working <= vmem_budget
 
 
 def autotune_blocks(m: int, n: int, p: int, itemsize: int,
@@ -84,9 +125,11 @@ def autotune_blocks(m: int, n: int, p: int, itemsize: int,
                     acc_itemsize: int = 4,
                     vmem_budget: int = 8 * 1024 * 1024,
                     block_j: Optional[int] = None,
-                    allow_j_tiling: bool = True
+                    allow_j_tiling: bool = True,
+                    path: str = "replicate"
                     ) -> Tuple[int, Optional[int]]:
-    """Smallest modeled time per output point over feasible blockings.
+    """Smallest modeled time per output point over feasible blockings of one
+    execution ``path``.
 
     Returns ``(block_i, block_j)`` with ``block_j=None`` meaning untiled
     (full-N) blocks.  j-tiling is considered only when no untiled block fits
@@ -98,14 +141,15 @@ def autotune_blocks(m: int, n: int, p: int, itemsize: int,
     cands_i = [bi for bi in _divisors(m) if bi >= sweeps] or [m]
 
     def key(bi: int, bj: Optional[int]):
-        return (_step_time(bi, bj, n, p, itemsize, sweeps, shifts, flops),
+        return (_step_time(bi, bj, n, p, itemsize, sweeps, shifts, flops,
+                           path),
                 0 if (bi % 8 == 0 or bi < 8) else 1,
                 -bi * (bj if bj is not None else n))
 
     if block_j is None:
         feasible = [bi for bi in cands_i
                     if _fits(bi, None, n, p, itemsize, sweeps, acc_itemsize,
-                             vmem_budget)]
+                             vmem_budget, path)]
         if feasible:
             return min(feasible, key=lambda bi: key(bi, None)), None
         if not allow_j_tiling:      # nothing fits: smallest legal block
@@ -115,10 +159,47 @@ def autotune_blocks(m: int, n: int, p: int, itemsize: int,
         cands_j = [block_j]
     pairs = [(bi, bj) for bi in cands_i for bj in cands_j
              if _fits(bi, bj, n, p, itemsize, sweeps, acc_itemsize,
-                      vmem_budget)]
+                      vmem_budget, path)]
     if pairs:
         return min(pairs, key=lambda bb: key(*bb))
     return cands_i[0], cands_j[0]   # nothing fits: smallest legal tile
+
+
+def autotune_engine(m: int, n: int, p: int, itemsize: int,
+                    sweeps: int = 1, plan=None, taps: int = 27,
+                    acc_itemsize: int = 4,
+                    vmem_budget: int = 8 * 1024 * 1024,
+                    block_j: Optional[int] = None,
+                    path: str = "auto"
+                    ) -> Tuple[str, int, Optional[int]]:
+    """Race the streaming and replicated rooflines: returns the modeled-best
+    ``(path, block_i, block_j)`` over both paths' feasible blockings.
+
+    ``path="stream"``/``"replicate"`` pins the path and only tunes blocks.
+    Feasible streaming (strictly fewer HBM bytes per point, same VPU work)
+    wins every tie; the replicated path is chosen only when the streaming
+    scratch window cannot fit the VMEM budget at any legal blocking.
+    """
+    if path not in PATH_KINDS:
+        raise ValueError(f"unknown path {path!r}; expected one of "
+                         f"{PATH_KINDS}")
+    shifts, flops = _plan_ops(plan, taps)
+    cands = ("stream", "replicate") if path == "auto" else (path,)
+    best = None
+    for cand in cands:
+        bi, bj = autotune_blocks(m, n, p, itemsize, sweeps=sweeps, plan=plan,
+                                 taps=taps, acc_itemsize=acc_itemsize,
+                                 vmem_budget=vmem_budget, block_j=block_j,
+                                 path=cand)
+        feasible = _fits(bi, bj, n, p, itemsize, sweeps, acc_itemsize,
+                         vmem_budget, cand)
+        t = _step_time(bi, bj, n, p, itemsize, sweeps, shifts, flops, cand)
+        # infeasible blockings only ever win when nothing fits anywhere;
+        # the streaming path wins exact ties (strictly fewer HBM bytes).
+        rank = (0 if feasible else 1, t, 0 if cand == "stream" else 1)
+        if best is None or rank < best[0]:
+            best = (rank, cand, bi, bj)
+    return best[1], best[2], best[3]
 
 
 def autotune_block_i(m: int, n: int, p: int, itemsize: int,

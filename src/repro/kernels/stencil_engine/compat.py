@@ -1,7 +1,11 @@
 """Legacy per-stencil entry points, now thin wrappers over the engine.
 
 ``repro.kernels.stencil{3,7,27}`` re-export these so seed-era call sites
-(benchmarks, examples, tests) keep their exact signatures and semantics.
+(benchmarks, examples, tests) keep their signatures and semantics.  The one
+deliberate change: ``interpret`` now defaults to ``None`` ("interpret only
+when no compiled Pallas backend exists"), so the same call site runs
+compiled on TPU and interpreted on CPU/GPU/CI (the engine's VMEM scratch
+windows are Mosaic-TPU-only).
 """
 
 from __future__ import annotations
@@ -17,7 +21,7 @@ from .ref import stencil_ref
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def stencil3(a: jax.Array, w: jax.Array, block_rows: Optional[int] = None,
-             interpret: bool = True) -> jax.Array:
+             interpret: Optional[bool] = None) -> jax.Array:
     """Symmetric 3-point stencil along the last axis; ``w = (w_edge, w_center)``."""
     return stencil_apply(a, w, "stencil3", block_i=block_rows,
                          interpret=interpret)
@@ -25,7 +29,7 @@ def stencil3(a: jax.Array, w: jax.Array, block_rows: Optional[int] = None,
 
 @functools.partial(jax.jit, static_argnames=("block_i", "interpret"))
 def stencil7(a: jax.Array, w: jax.Array, block_i: Optional[int] = None,
-             interpret: bool = True) -> jax.Array:
+             interpret: Optional[bool] = None) -> jax.Array:
     """Symmetric 7-point stencil; ``w = (wc, wk, wj, wi)``."""
     return stencil_apply(a, w, "stencil7", block_i=block_i,
                          interpret=interpret)
@@ -33,7 +37,7 @@ def stencil7(a: jax.Array, w: jax.Array, block_i: Optional[int] = None,
 
 @functools.partial(jax.jit, static_argnames=("block_i", "interpret"))
 def stencil27(a: jax.Array, w: jax.Array, block_i: Optional[int] = None,
-              interpret: bool = True) -> jax.Array:
+              interpret: Optional[bool] = None) -> jax.Array:
     """Symmetric 27-point stencil; ``w`` has shape (2, 2, 2)."""
     return stencil_apply(a, w, "stencil27", block_i=block_i,
                          interpret=interpret)

@@ -1,24 +1,45 @@
-"""The single Pallas kernel body behind every engine stencil.
+"""The Pallas kernel bodies behind every engine stencil.
 
-One body serves 3-, 7-, 27-point and arbitrary radius-1 masks: the spec is
-first compiled to a :class:`~.plan.StencilPlan` (the paper's synthesis step
--- a factored partial-sum schedule for symmetric specs, a CSE'd shift
-schedule for arbitrary masks, a naive ``direct`` escape hatch) and the plan
-is unrolled at trace time.  Neighbour access is by static slice + zero pad
-on the resident block (:func:`~.plan.shift_slice`), never a wrap-around
-roll, so no out-of-domain values are computed then masked.
+One compute core serves 3-, 7-, 27-point and arbitrary radius-1 masks: the
+spec is first compiled to a :class:`~.plan.StencilPlan` (the paper's
+synthesis step -- a factored partial-sum schedule for symmetric specs, a
+CSE'd shift schedule for arbitrary masks, a naive ``direct`` escape hatch)
+and the plan is unrolled at trace time.  Neighbour access is by static slice
++ zero pad on the resident block (:func:`~.plan.shift_slice`), never a
+wrap-around roll, so no out-of-domain values are computed then masked.
 
-The same body fuses ``s`` Jacobi sweeps per grid step: the working block is
-widened by ``s`` halo rows (and, when j-tiled, ``s`` halo columns) read from
-the neighbour blocks, the sweep loop runs register/VMEM-resident, and only
-the central rows are written back -- one HBM round-trip for ``s``
-applications of the operator, the Pallas analogue of the paper's
-register-resident steady-state stream.  Global geometry (row offset, global
-M) arrives as a small int32 operand so the same kernel runs unsharded
-(offset 0) and as the per-shard body of the halo-exchange ``shard_map``
-path.  When ``bj`` is set the grid gains a j dimension and each step sees a
-``(bi + 2s, bj + 2s, P)`` working block assembled from the 3x3 neighbour
-tiles -- grids whose full N x P slab exceeds the VMEM budget run anyway.
+Two volumetric bodies share that core:
+
+``stencil3d_kernel`` (the *replicated* path, parity escape hatch)
+    The input is passed 3x (untiled) or 9x (j-tiled) under +-1-shifted block
+    index maps, so each grid step re-fetches its halo neighbours from HBM.
+    Simple, stateless, and kept as the ``path="replicate"`` reference.
+
+``stencil3d_stream_kernel`` (the *streaming* path, default)
+    The paper's central optimization (sect. 3-4): stream along the i axis
+    and keep the active planes resident so each loaded plane is reused by
+    every output plane that needs it, instead of being re-fetched.  A single
+    input operand walks i-blocks in order on a grid with one extra step; a
+    VMEM ``scratch_shapes`` buffer carries a rotating window of ``bi + s``
+    input planes (the previous block plus the ``s``-deep halo tail of the
+    block before it) across grid steps.  Step ``t`` computes output block
+    ``t - 1`` from ``[scratch | head s planes of block t]`` and then rotates
+    the window -- so every input plane is fetched from HBM exactly once per
+    call and written once: ~2 transfers per point, the paper's
+    register-resident ideal (VMEM standing in for the register file).
+
+Both bodies fuse ``s`` Jacobi sweeps per grid step: the working strip is
+``s`` halo planes wider than the output block, the sweep loop runs
+VMEM-resident via :func:`run_sweeps` (interior mask and zero fill built
+once, not per unrolled sweep), and only the central planes are written back
+-- one HBM round-trip for ``s`` applications of the operator.  Global
+geometry (row offset, global M) arrives as a small int32 operand so the same
+bodies run unsharded (offset 0) and as the per-shard body of the
+halo-exchange ``shard_map`` path.  When ``bj`` is set the grid gains a j
+dimension: the replicated body sees the 3x3 neighbour tiles; the streaming
+body streams i within each j-tile (3 j-neighbour views, so planes are
+fetched 3x instead of the replicated 9x -- exactly-once needs the full-N
+strip in scratch, which is the one regime j-tiling exists to avoid).
 """
 
 from __future__ import annotations
@@ -37,9 +58,36 @@ def acc_dtype_for(dtype) -> jnp.dtype:
     return jnp.float64 if dtype == jnp.float64 else jnp.float32
 
 
+def run_sweeps(u: jax.Array, interior: jax.Array, w: jax.Array,
+               plan: StencilPlan, sweeps: int) -> jax.Array:
+    """Fused Jacobi sweep loop with the loop-invariant Dirichlet select
+    hoisted: the interior mask *and* the zero fill it selects against are
+    materialized once and reused by every unrolled sweep (previously the
+    scalar zero was re-broadcast to the full block per sweep).  The valid
+    region shrinks one plane per sweep from the extended edges, so the
+    central block is exact after ``sweeps`` applications."""
+    zero = jnp.zeros(u.shape, u.dtype)
+    for _ in range(sweeps):
+        u = jnp.where(interior, execute_plan(plan, u, w), zero)
+    return u
+
+
+def _volumetric_interior(ext, gi0, j0, m_ref, n_global: int):
+    """Interior (non-Dirichlet) mask of an extended working strip whose
+    row 0 sits at global row ``gi0`` and column 0 at global column ``j0``;
+    ``m_ref`` is the (traced) global M.  Built once per grid step and shared
+    across every fused sweep."""
+    gi = gi0 + jax.lax.broadcasted_iota(jnp.int32, ext, 0)
+    jj = j0 + jax.lax.broadcasted_iota(jnp.int32, ext, 1)
+    kk = jax.lax.broadcasted_iota(jnp.int32, ext, 2)
+    return ((gi > 0) & (gi < m_ref - 1)
+            & (jj > 0) & (jj < n_global - 1)
+            & (kk > 0) & (kk < ext[-1] - 1))
+
+
 def stencil3d_kernel(*refs, plan: StencilPlan, bi: int, bj: Optional[int],
                      n_global: int, sweeps: int, acc_dtype):
-    """Fused-sweep volumetric kernel.
+    """Replicated-halo fused-sweep volumetric kernel (``path="replicate"``).
 
     ``refs`` is ``(*blocks, geom_ref, w_ref, o_ref)`` where ``blocks`` holds
     the 3 i-neighbour views (untiled, blocks ``(1, bi, N, P)``) or the 3x3
@@ -58,6 +106,7 @@ def stencil3d_kernel(*refs, plan: StencilPlan, bi: int, bj: Optional[int],
         prev, cur, nxt = (r[0] for r in blocks)            # (bi, N, P)
         u = jnp.concatenate([prev[-s:], cur, nxt[:s]],
                             axis=0).astype(acc_dtype)
+        j0 = 0
     else:
         j_blk = pl.program_id(2)
         strips = []
@@ -69,23 +118,75 @@ def stencil3d_kernel(*refs, plan: StencilPlan, bi: int, bj: Optional[int],
             strips.append(strip[-s:] if ii == 0
                           else (strip if ii == 1 else strip[:s]))
         u = jnp.concatenate(strips, axis=0).astype(acc_dtype)
-    ext = u.shape
-    n, p = ext[-2], ext[-1]
-    gi = (geom_ref[0] + i_blk * bi - s
-          + jax.lax.broadcasted_iota(jnp.int32, ext, 0))
-    jj = jax.lax.broadcasted_iota(jnp.int32, ext, 1)
-    if bj is not None:
-        jj = j_blk * bj - s + jj                            # global j index
-    kk = jax.lax.broadcasted_iota(jnp.int32, ext, 2)
-    interior = ((gi > 0) & (gi < geom_ref[1] - 1)
-                & (jj > 0) & (jj < n_global - 1) & (kk > 0) & (kk < p - 1))
-    # Jacobi sweeps, Dirichlet boundary re-zeroed after each; the valid
-    # region shrinks one row/column per sweep from the extended edges, so
-    # the central block is exact after s sweeps (requires s <= bi, bj).
-    for _ in range(s):
-        u = jnp.where(interior, execute_plan(plan, u, w), 0)
+        j0 = j_blk * bj - s
+    interior = _volumetric_interior(u.shape, geom_ref[0] + i_blk * bi - s,
+                                    j0, geom_ref[1], n_global)
+    u = run_sweeps(u, interior, w, plan, s)
     out = u[s:s + bi] if bj is None else u[s:s + bi, s:s + bj]
     o_ref[0] = out.astype(o_ref.dtype)
+
+
+def stencil3d_stream_kernel(*refs, plan: StencilPlan, bi: int,
+                            bj: Optional[int], n_global: int, sweeps: int,
+                            acc_dtype):
+    """Plane-streaming fused-sweep volumetric kernel (``path="stream"``).
+
+    ``refs`` is ``(*views, geom_ref, w_ref, o_ref, scr_ref)``.  Untiled
+    (``bj is None``): ``views`` is one identity-mapped block ``(1, bi, N,
+    P)`` and the grid's trailing dim runs ``nbi + 1`` steps; j-tiled:
+    ``views`` are the 3 j-neighbour tiles ``(1, bi, bj, P)`` and the grid is
+    ``(B, nbj, nbi + 1)`` with i innermost, so the stream restarts per
+    j-tile.  ``scr_ref`` is VMEM scratch of ``bi + s`` input planes carried
+    across grid steps: planes ``[0, s)`` are the tail of block ``t - 2``
+    (zeros above the domain), planes ``[s, s + bi)`` are block ``t - 1``.
+
+    Step 0 primes the window; step ``t >= 1`` assembles the working strip
+    ``[scratch | head s planes of block t]`` (at ``t == nbi`` the clamped
+    index map re-presents block ``nbi - 1``, whose planes land only at
+    ``gi >= M`` where the interior mask zeroes them -- and an unchanged
+    block index costs no DMA under Pallas revisiting semantics), runs the
+    fused sweeps, writes output block ``t - 1`` via the lagged output index
+    map, and rotates the window.  Net HBM traffic: each input plane read
+    once, each output plane written once.
+    """
+    o_ref, scr_ref = refs[-2], refs[-1]
+    geom_ref, w_ref = refs[-4], refs[-3]
+    views = refs[:-4]
+    s = sweeps
+    w = w_ref[...]
+    if bj is None:
+        t = pl.program_id(1)
+        cur = views[0][0]                                  # (bi, N, P)
+        j0 = 0
+    else:
+        t = pl.program_id(2)
+        j_blk = pl.program_id(1)
+        jm, jc, jp = (v[0] for v in views)                 # (bi, bj, P)
+        cur = jnp.concatenate([jm[:, -s:], jc, jp[:, :s]],
+                              axis=1)                      # (bi, bj + 2s, P)
+        j0 = j_blk * bj - s
+
+    @pl.when(t == 0)
+    def _prime():
+        # Window for output block 0: block "-1" is above the domain (zeros;
+        # they only ever feed rows the interior mask zeroes), block 0 = cur.
+        scr_ref[:s] = jnp.zeros((s,) + cur.shape[1:], cur.dtype)
+        scr_ref[s:] = cur
+
+    @pl.when(t > 0)
+    def _compute():
+        u = jnp.concatenate([scr_ref[...], cur[:s]],
+                            axis=0).astype(acc_dtype)      # (bi + 2s, ·, P)
+        interior = _volumetric_interior(
+            u.shape, geom_ref[0] + (t - 1) * bi - s, j0, geom_ref[1],
+            n_global)
+        u = run_sweeps(u, interior, w, plan, s)
+        out = u[s:s + bi] if bj is None else u[s:s + bi, s:s + bj]
+        o_ref[0] = out.astype(o_ref.dtype)
+        # Rotate the window: new tail = last s planes of block t - 1.
+        tail = scr_ref[bi:bi + s]
+        scr_ref[:s] = tail
+        scr_ref[s:] = cur
 
 
 def stencil1d_kernel(a_ref, w_ref, o_ref, *, plan: StencilPlan, sweeps: int,
@@ -97,6 +198,4 @@ def stencil1d_kernel(a_ref, w_ref, o_ref, *, plan: StencilPlan, sweeps: int,
     p = u.shape[-1]
     kk = jax.lax.broadcasted_iota(jnp.int32, u.shape, u.ndim - 1)
     interior = (kk > 0) & (kk < p - 1)
-    for _ in range(sweeps):
-        u = jnp.where(interior, execute_plan(plan, u, w), 0)
-    o_ref[...] = u.astype(o_ref.dtype)
+    o_ref[...] = run_sweeps(u, interior, w, plan, sweeps).astype(o_ref.dtype)

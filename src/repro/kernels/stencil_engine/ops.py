@@ -1,11 +1,15 @@
 """Jitted public entry point: one configurable stencil executor.
 
 ``stencil_apply`` runs any registered (or ad-hoc) radius-1 spec over batched,
-multi-dtype inputs, with optional fused Jacobi sweeps, via the single kernel
-body in :mod:`.kernel`.  The spec is compiled to an execution plan
-(:mod:`.plan` -- ``auto``/``factored``/``cse``/``direct``) before tracing,
-and blocks may be tiled along j as well as i when the full N x P slab would
-not fit VMEM.  See the package docstring for the full tour.
+multi-dtype inputs, with optional fused Jacobi sweeps, via the kernel bodies
+in :mod:`.kernel`.  The spec is compiled to an execution plan (:mod:`.plan`
+-- ``auto``/``factored``/``cse``/``direct``) before tracing; the volumetric
+hot path is the *plane-streaming* kernel (``path="stream"``, each input
+plane fetched from HBM once, the halo carried in VMEM scratch across grid
+steps) with the halo-*replicated* kernel kept as a parity escape hatch
+(``path="replicate"``, like ``plan="direct"``); and blocks may be tiled
+along j as well as i when the full N x P slab would not fit VMEM.  See the
+package docstring for the full tour.
 """
 
 from __future__ import annotations
@@ -17,11 +21,30 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-from .autotune import autotune_blocks, pick_block_rows
-from .kernel import acc_dtype_for, stencil1d_kernel, stencil3d_kernel
+from .autotune import (PATH_KINDS, autotune_blocks, autotune_engine,
+                       pick_block_rows)
+from .kernel import (acc_dtype_for, stencil1d_kernel, stencil3d_kernel,
+                     stencil3d_stream_kernel)
 from .plan import StencilPlan, compile_plan
 from .spec import StencilSpec, get_stencil
+
+
+@functools.lru_cache(maxsize=None)
+def default_interpret() -> bool:
+    """Resolve ``interpret=None``: interpret the Pallas kernels only when no
+    compiled backend for *these kernels* is available -- i.e. run compiled
+    on TPU and interpreted elsewhere -- so the same call site works
+    everywhere.  The kernel bodies are Mosaic-TPU-shaped (``pltpu.VMEM``
+    scratch windows carried across a sequential grid), which the GPU
+    (Triton / Mosaic-GPU) lowerings do not provide, so GPU hosts stay on
+    the interpreter too."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    return default_interpret() if interpret is None else bool(interpret)
 
 
 def _clamped_imap(di: int, dj: int, top_i: int, top_j: int):
@@ -37,24 +60,105 @@ def _clamped_imap(di: int, dj: int, top_i: int, top_j: int):
     return f
 
 
-def call_3d(a4: jax.Array, wf: jax.Array, geom: jax.Array, plan: StencilPlan,
-            bi: int, bj: Optional[int], sweeps: int,
-            interpret: bool) -> jax.Array:
-    """Wire the fused volumetric kernel: ``a4`` is ``(B, M, N, P)``.
-
-    Untiled (``bj is None``): blocks are ``(1, bi, N, P)`` and the i-halo
-    comes from passing ``a4`` three times under +-1-shifted (clamped) block
-    index maps.  j-tiled: blocks are ``(1, bi, bj, P)`` and the kernel sees
-    all 3x3 neighbour views, so the working slab never exceeds
-    ``(bi + 2s)(bj + 2s)P`` whatever N is.  ``geom`` = (global row offset,
-    global M) int32.
-    """
-    b, m, n, p = a4.shape
+def _validate_blocks(m: int, n: int, bi: int, bj: Optional[int],
+                     sweeps: int) -> None:
     if m % bi != 0:
         raise ValueError(f"block size {bi} must divide M={m}")
     if sweeps > bi:
         raise ValueError(f"fused sweeps={sweeps} exceed the +-1-block halo; "
                          f"need block_i >= sweeps (block_i={bi})")
+    if bj is not None:
+        if n % bj != 0:
+            raise ValueError(f"block size {bj} must divide N={n}")
+        if sweeps > bj:
+            raise ValueError(f"fused sweeps={sweeps} exceed the +-1-block "
+                             f"halo; need block_j >= sweeps (block_j={bj})")
+
+
+def _call_3d_stream(a4: jax.Array, wf: jax.Array, geom: jax.Array,
+                    plan: StencilPlan, bi: int, bj: Optional[int],
+                    sweeps: int, interpret: bool) -> jax.Array:
+    """Wire the plane-streaming kernel: one pass over the i-blocks with one
+    extra grid step, a lagged output index map, and a VMEM scratch window of
+    ``bi + sweeps`` input planes carried across steps.  Untiled, the input
+    is a single identity-mapped operand -- each plane is fetched from HBM
+    exactly once per call (the final clamped step re-presents the last
+    block, which Pallas revisiting semantics keep DMA-free); j-tiled, the 3
+    j-neighbour views stream i within each j-tile (3 fetches per plane vs
+    the replicated path's 9)."""
+    b, m, n, p = a4.shape
+    nbi = m // bi
+    s = sweeps
+    kern = functools.partial(stencil3d_stream_kernel, plan=plan, bi=bi,
+                             bj=bj, n_global=n, sweeps=s,
+                             acc_dtype=acc_dtype_for(a4.dtype))
+    if bj is None:
+        block = (1, bi, n, p)
+        in_specs = [
+            pl.BlockSpec(block, functools.partial(
+                lambda bb, t, top: (bb, jnp.minimum(t, top), 0, 0),
+                top=nbi - 1)),
+            pl.BlockSpec(geom.shape, lambda bb, t: (0,)),
+            pl.BlockSpec(wf.shape, lambda bb, t: (0,)),
+        ]
+        return pl.pallas_call(
+            kern,
+            grid=(b, nbi + 1),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec(
+                block, lambda bb, t: (bb, jnp.maximum(t - 1, 0), 0, 0)),
+            out_shape=jax.ShapeDtypeStruct(a4.shape, a4.dtype),
+            scratch_shapes=[pltpu.VMEM((bi + s, n, p), a4.dtype)],
+            interpret=interpret,
+        )(a4, geom, wf)
+
+    nbj = n // bj
+    block = (1, bi, bj, p)
+
+    def jmap(dj: int):
+        def f(bb, j, t):
+            jj = j if dj == 0 else (jnp.maximum(j - 1, 0) if dj < 0
+                                    else jnp.minimum(j + 1, nbj - 1))
+            return (bb, jnp.minimum(t, nbi - 1), jj, 0)
+        return f
+
+    in_specs = [pl.BlockSpec(block, jmap(dj)) for dj in (-1, 0, 1)]
+    in_specs += [pl.BlockSpec(geom.shape, lambda bb, j, t: (0,)),
+                 pl.BlockSpec(wf.shape, lambda bb, j, t: (0,))]
+    return pl.pallas_call(
+        kern,
+        grid=(b, nbj, nbi + 1),        # i innermost: the stream restarts
+        in_specs=in_specs,             # (and re-primes) per j-tile
+        out_specs=pl.BlockSpec(
+            block, lambda bb, j, t: (bb, jnp.maximum(t - 1, 0), j, 0)),
+        out_shape=jax.ShapeDtypeStruct(a4.shape, a4.dtype),
+        scratch_shapes=[pltpu.VMEM((bi + s, bj + 2 * s, p), a4.dtype)],
+        interpret=interpret,
+    )(a4, a4, a4, geom, wf)
+
+
+def call_3d(a4: jax.Array, wf: jax.Array, geom: jax.Array, plan: StencilPlan,
+            bi: int, bj: Optional[int], sweeps: int, interpret: bool,
+            path: str = "stream") -> jax.Array:
+    """Wire a fused volumetric kernel: ``a4`` is ``(B, M, N, P)``.
+
+    ``path="stream"`` (default) walks the i-blocks in order and carries the
+    halo in VMEM scratch -- each input plane is fetched once.
+    ``path="replicate"`` is the stateless parity escape hatch: the i-halo
+    comes from passing ``a4`` three times under +-1-shifted (clamped) block
+    index maps (untiled) or the full 3x3 neighbour views (j-tiled).  Both
+    paths share block geometry: untiled blocks are ``(1, bi, N, P)``;
+    j-tiled blocks ``(1, bi, bj, P)``, so the working slab never exceeds
+    ``(bi + 2s)(bj + 2s)P`` whatever N is.  ``geom`` = (global row offset,
+    global M) int32.
+    """
+    b, m, n, p = a4.shape
+    _validate_blocks(m, n, bi, bj, sweeps)
+    if path == "stream":
+        return _call_3d_stream(a4, wf, geom, plan, bi, bj, sweeps, interpret)
+    if path != "replicate":
+        raise ValueError(f"unknown path {path!r}; expected 'stream' or "
+                         f"'replicate'")
     nbi = m // bi
     kern = functools.partial(stencil3d_kernel, plan=plan, bi=bi, bj=bj,
                              n_global=n, sweeps=sweeps,
@@ -80,11 +184,6 @@ def call_3d(a4: jax.Array, wf: jax.Array, geom: jax.Array, plan: StencilPlan,
             interpret=interpret,
         )(a4, a4, a4, geom, wf)
 
-    if n % bj != 0:
-        raise ValueError(f"block size {bj} must divide N={n}")
-    if sweeps > bj:
-        raise ValueError(f"fused sweeps={sweeps} exceed the +-1-block halo; "
-                         f"need block_j >= sweeps (block_j={bj})")
     nbj = n // bj
     block = (1, bi, bj, p)
     in_specs = [pl.BlockSpec(block, _clamped_imap(di, dj, nbi - 1, nbj - 1))
@@ -120,12 +219,13 @@ def _call_1d(a2: jax.Array, wf: jax.Array, plan: StencilPlan, block_rows: int,
 
 @functools.partial(jax.jit,
                    static_argnames=("stencil", "block_i", "block_j", "plan",
-                                    "sweeps", "interpret"))
+                                    "sweeps", "path", "interpret"))
 def stencil_apply(a: jax.Array, w: jax.Array,
                   stencil: Union[str, int, StencilSpec] = "stencil27",
                   block_i: Optional[int] = None,
                   block_j: Optional[int] = None, plan: str = "auto",
-                  sweeps: int = 1, interpret: bool = True) -> jax.Array:
+                  sweeps: int = 1, path: str = "auto",
+                  interpret: Optional[bool] = None) -> jax.Array:
     """Apply a registered stencil: ``sweeps`` fused Jacobi applications.
 
     * volumetric specs: ``a`` is ``(..., M, N, P)`` -- leading dims batch;
@@ -137,16 +237,30 @@ def stencil_apply(a: jax.Array, w: jax.Array,
       as :func:`stencil_ref` (f64 bit-parity on the reference
       configurations; exact blocking-invariance on integer-valued data --
       see :mod:`.plan` on fma contraction);
+    * ``path`` picks the data-movement strategy for volumetric specs:
+      ``"stream"`` fetches each input plane from HBM once and carries the
+      halo in VMEM scratch across grid steps (the paper's plane-streaming
+      ideal, ~2 transfers per point); ``"replicate"`` re-fetches the +-1
+      halo neighbours per block (the parity escape hatch).  ``"auto"``
+      streams whenever feasible, falling back to the replicated roofline
+      choice per shape;
     * ``block_i``/``block_j`` (i-block rows / j-tile columns) default to the
-      plan-aware cost model, which engages j-tiling only when the full
-      N x P slab would blow the VMEM budget.
+      plan- and path-aware cost model, which engages j-tiling only when the
+      full N x P slab would blow the VMEM budget;
+    * ``interpret=None`` (default) interprets the kernel only when no
+      compiled Pallas backend exists for the platform (CPU/CI) and compiles
+      on TPU (the kernels are Mosaic-TPU-shaped; GPU stays interpreted); pass an explicit bool to force either mode.
     """
     if sweeps < 1:
         raise ValueError(f"sweeps must be >= 1, got {sweeps}")
+    if path not in PATH_KINDS:
+        raise ValueError(f"unknown path {path!r}; expected one of "
+                         f"{PATH_KINDS}")
     spec = get_stencil(stencil)
     cplan = compile_plan(spec, plan)
     acc = acc_dtype_for(a.dtype)
     wf = spec.canon_weights(w).astype(acc)
+    interp = resolve_interpret(interpret)
 
     if spec.ndim == 1:
         if a.ndim < 2:
@@ -154,18 +268,21 @@ def stencil_apply(a: jax.Array, w: jax.Array,
         rows = int(np.prod(a.shape[:-1]))
         a2 = a.reshape(rows, a.shape[-1])
         br = block_i or pick_block_rows(rows, a.shape[-1], a.dtype.itemsize)
-        return _call_1d(a2, wf, cplan, br, sweeps, interpret).reshape(a.shape)
+        return _call_1d(a2, wf, cplan, br, sweeps, interp).reshape(a.shape)
 
     if a.ndim < 3:
         raise ValueError(f"{spec.name}: need (..., M, N, P), got {a.shape}")
     m, n, p = a.shape[-3:]
     batch = int(np.prod(a.shape[:-3])) if a.ndim > 3 else 1
     a4 = a.reshape(batch, m, n, p)
-    bi, bj = block_i, block_j
+    bi, bj, rpath = block_i, block_j, path
     if bi is None:
-        bi, bj_auto = autotune_blocks(m, n, p, a.dtype.itemsize,
-                                      sweeps=sweeps, plan=cplan, block_j=bj)
+        rpath, bi, bj_auto = autotune_engine(m, n, p, a.dtype.itemsize,
+                                             sweeps=sweeps, plan=cplan,
+                                             block_j=bj, path=path)
         bj = bj if bj is not None else bj_auto
-    geom = jnp.array([0, m], jnp.int32)
-    out = call_3d(a4, wf, geom, cplan, bi, bj, sweeps, interpret)
+    elif rpath == "auto":
+        rpath = "stream"            # pinned blocks: stream is strictly
+    geom = jnp.array([0, m], jnp.int32)  # fewer HBM bytes at equal blocks
+    out = call_3d(a4, wf, geom, cplan, bi, bj, sweeps, interp, rpath)
     return out.reshape(a.shape)

@@ -240,13 +240,31 @@ def _factored_ops(spec: StencilSpec, b: _Builder) -> Optional[int]:
 
 
 @functools.lru_cache(maxsize=256)
+def _compile_plan_cached(spec: StencilSpec, kind: str) -> StencilPlan:
+    """The memoized synthesis step, keyed on the *canonical* (spec, resolved
+    plan kind) pair -- a frozen spec hashes on its name + tap/weight-index
+    tuples, so repeated eager/un-jitted calls, the autotuner, and
+    equal-valued ad-hoc ``spec_from_mask`` specs all share one compiled
+    schedule instead of rebuilding the SSA program per call."""
+    b = _Builder()
+    build = {"direct": _direct_ops, "cse": _cse_ops,
+             "factored": _factored_ops}[kind]
+    out = build(spec, b)
+    return StencilPlan(spec=spec, kind=kind, ops=tuple(b.ops),
+                       out=-1 if out is None else out)
+
+
 def compile_plan(spec: Union[str, int, StencilSpec],
                  plan: str = "auto") -> StencilPlan:
-    """Compile ``spec`` into a :class:`StencilPlan`.
+    """Compile ``spec`` into a :class:`StencilPlan` (memoized).
 
     ``plan="auto"`` picks ``factored`` for mirror-symmetric specs (stencil3,
     stencil7, stencil27, symmetric masks) and ``cse`` otherwise;
-    ``plan="direct"`` is the naive parity escape hatch.
+    ``plan="direct"`` is the naive parity escape hatch.  The spec and the
+    plan kind are canonicalized *before* the cache lookup, so
+    ``compile_plan("27")``, ``compile_plan("stencil27")`` and
+    ``compile_plan(get_stencil("stencil27"))`` -- and ``plan="auto"`` vs its
+    resolved kind -- return the identical plan object.
     """
     spec = get_stencil(spec)
     if plan not in PLAN_KINDS:
@@ -259,12 +277,7 @@ def compile_plan(spec: Union[str, int, StencilSpec],
             f"{spec.name}: factored plan needs a mirror-symmetric tap set "
             f"(closed under per-axis sign flips, weights on |offsets|); "
             f"use plan='cse' or 'auto'")
-    b = _Builder()
-    build = {"direct": _direct_ops, "cse": _cse_ops,
-             "factored": _factored_ops}[kind]
-    out = build(spec, b)
-    return StencilPlan(spec=spec, kind=kind, ops=tuple(b.ops),
-                       out=-1 if out is None else out)
+    return _compile_plan_cached(spec, kind)
 
 
 def shift_slice(t: jax.Array, off: Offset) -> jax.Array:

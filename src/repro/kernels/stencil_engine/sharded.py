@@ -5,7 +5,10 @@ The partition plan comes from ``repro.sharding.planner.stencil_halo_sharding``
 contiguous slab of i-rows, trades ``sweeps`` halo rows with its neighbours
 via ``lax.ppermute`` (edge shards receive zeros -- the Dirichlet boundary),
 and then runs the *same* fused plan-compiled Pallas kernel as the
-single-device path (including j-tiled blocking when the local N x P slab
+single-device path -- by default the plane-streaming body, so the shard_map
+body also fetches each local plane from HBM exactly once and carries the
+halo window in VMEM scratch (``path="replicate"`` stays available as the
+parity escape hatch, and j-tiled blocking engages when the local N x P slab
 exceeds the VMEM budget); the kernel's geometry operand (global row offset,
 global M) keeps the interior/boundary masking correct across shard seams.
 
@@ -30,9 +33,9 @@ from jax.sharding import Mesh, PartitionSpec as P
 from .._compat import shard_map
 
 from ...sharding.planner import StencilShardPlan, stencil_halo_sharding
-from .autotune import autotune_blocks
+from .autotune import PATH_KINDS, autotune_engine
 from .kernel import acc_dtype_for
-from .ops import call_3d, stencil_apply
+from .ops import call_3d, resolve_interpret, stencil_apply
 from .plan import StencilPlan, compile_plan
 from .spec import StencilSpec, get_stencil
 
@@ -50,11 +53,11 @@ def _mesh_key(mesh: Mesh) -> tuple:
 
 def _sharded_fn(cplan: StencilPlan, mesh: Mesh, axis: str, bi: int,
                 bj: Optional[int], sweeps: int, interpret: bool, h: int,
-                m_loc: int, n_sh: int, m: int, part):
+                m_loc: int, n_sh: int, m: int, part, path: str = "stream"):
     """Build (and cache) the jitted shard_map program for one geometry, so
     repeated calls don't retrace the inner pallas_call."""
     key = (cplan, _mesh_key(mesh), axis, bi, bj, sweeps, interpret, h,
-           m_loc, n_sh, m, part)
+           m_loc, n_sh, m, part, path)
     fn = _SHARDED_CACHE.get(key)
     if fn is not None:
         _SHARDED_CACHE.move_to_end(key)
@@ -71,7 +74,8 @@ def _sharded_fn(cplan: StencilPlan, mesh: Mesh, axis: str, bi: int,
         ext = jnp.concatenate([lo, a_loc, hi], axis=1)
         geom = jnp.stack([idx * m_loc - h,
                           jnp.int32(m)]).astype(jnp.int32)
-        out = call_3d(ext, wf_, geom, cplan, bi, bj, sweeps, interpret)
+        out = call_3d(ext, wf_, geom, cplan, bi, bj, sweeps, interpret,
+                      path)
         return out[:, h:h + m_loc]
 
     fn = jax.jit(shard_map(local_fn, mesh=mesh, in_specs=(part, P(None)),
@@ -87,7 +91,8 @@ def stencil_sharded(a: jax.Array, w: jax.Array,
                     mesh: Optional[Mesh] = None, axis: str = "data",
                     block_i: Optional[int] = None,
                     block_j: Optional[int] = None, plan: str = "auto",
-                    sweeps: int = 1, interpret: bool = True,
+                    sweeps: int = 1, path: str = "auto",
+                    interpret: Optional[bool] = None,
                     shard_plan: Optional[StencilShardPlan] = None
                     ) -> jax.Array:
     """Halo-exchange execution of ``stencil_apply`` over a mesh axis.
@@ -95,6 +100,10 @@ def stencil_sharded(a: jax.Array, w: jax.Array,
     ``a`` is ``(..., M, N, P)`` (volumetric specs only); ``mesh`` defaults to
     a 1-D mesh over every visible device.  Returns the same value as the
     single-device path; falls back to it when the planner declines to shard.
+    ``path`` selects the per-shard data-movement strategy exactly as in
+    ``stencil_apply`` -- ``"auto"`` streams the halo-extended local slab
+    (each local plane fetched once), ``"replicate"`` re-fetches the halo
+    neighbours per block (parity escape hatch).
 
     Note: the kernel runs per shard on the halo-extended local slab, so an
     explicit ``block_i`` must divide ``M / n_shards + 2 * sweeps`` (not M);
@@ -107,8 +116,12 @@ def stencil_sharded(a: jax.Array, w: jax.Array,
             "stencil_sharded(plan=...) now selects the execution-plan kind "
             "(auto/direct/cse/factored); pass the partition plan as "
             "shard_plan=... instead")
+    if path not in PATH_KINDS:
+        raise ValueError(f"unknown path {path!r}; expected one of "
+                         f"{PATH_KINDS}")
     spec = get_stencil(stencil)
     cplan = compile_plan(spec, plan)
+    interpret = resolve_interpret(interpret)
     if spec.ndim != 3:
         raise ValueError(f"{spec.name}: sharded execution needs a volumetric "
                          f"(ndim=3) spec")
@@ -124,7 +137,7 @@ def stencil_sharded(a: jax.Array, w: jax.Array,
         # generally doesn't divide M, so let the cost model choose here --
         # the same call must work whatever the device count.
         return stencil_apply(a, w, spec, plan=plan, sweeps=sweeps,
-                             interpret=interpret)
+                             path=path, interpret=interpret)
 
     batch = int(np.prod(a.shape[:-3])) if a.ndim > 3 else 1
     a4 = a.reshape(batch, m, n, p)
@@ -137,11 +150,14 @@ def stencil_sharded(a: jax.Array, w: jax.Array,
             f"sharded block_i={block_i} must divide the halo-extended local "
             f"slab (M/n_shards + 2*sweeps = {m_loc} + {2 * h} = {m_ext}); "
             f"omit block_i to let the cost model choose")
-    bi, bj = block_i, block_j
+    bi, bj, rpath = block_i, block_j, path
     if bi is None:
-        bi, bj_auto = autotune_blocks(m_ext, n, p, a.dtype.itemsize,
-                                      sweeps=sweeps, plan=cplan, block_j=bj)
+        rpath, bi, bj_auto = autotune_engine(m_ext, n, p, a.dtype.itemsize,
+                                             sweeps=sweeps, plan=cplan,
+                                             block_j=bj, path=path)
         bj = bj if bj is not None else bj_auto
+    elif rpath == "auto":
+        rpath = "stream"
     fn = _sharded_fn(cplan, mesh, axis, bi, bj, sweeps, interpret, h, m_loc,
-                     n_sh, m, shard_plan.spec)
+                     n_sh, m, shard_plan.spec, rpath)
     return fn(a4, wf).reshape(a.shape)
