@@ -9,25 +9,27 @@ real hardware.
 The tail rows exercise the unified stencil engine: batched execution, fused
 multi-sweep Jacobi (``s`` operator applications per HBM round-trip), a
 direct-vs-cse-vs-factored plan comparison (the paper's synthesized schedule
-vs the naive one, with each plan's static shift/flop counts), a
-streamed-vs-replicated path comparison (the paper's plane-streaming kernel
-vs the halo-replicated one, with each path's modeled bytes/point and
-achieved HBM bandwidth), a j-tiled run at a size where the untiled N x P
-slab exceeds the VMEM budget (previously a hard wall), and a 2-device
-halo-exchange ``shard_map`` run (forced host-platform devices, in a
-subprocess so this process keeps its single-device view).
+vs the naive one, with each plan's static shift/flop counts and pass list),
+a streamed-vs-replicated path comparison (the paper's plane-streaming
+kernel vs the halo-replicated one, with each path's modeled bytes/point and
+achieved HBM bandwidth), the radius-2 builtins (star13 / box125: streaming
+still ~2 x itemsize/point where the replicated path pays 6 x), a j-tiled
+run at a size where the untiled N x P slab exceeds the VMEM budget
+(previously a hard wall), and a 2-device halo-exchange ``shard_map`` run
+(forced host-platform devices, in a subprocess so this process keeps its
+single-device view).
 
 Besides the ``name,us_per_call,derived`` text rows, every measurement is
 recorded as a dict and the whole run is dumped to ``BENCH_stencil.json``
-(path overridable via ``$BENCH_STENCIL_JSON``) -- rows plus the stencil27
-plan op counts and per-path modeled bytes/point -- which CI uploads as an
-artifact.
+(path overridable via ``$BENCH_STENCIL_JSON``; schema v3: per-spec plan op
+counts with ``radius`` + ``pass_list`` columns, per-path modeled
+bytes/point at radius 1 and 2) -- which CI uploads as an artifact.
 
 ``python benchmarks/stencil_throughput.py --quick`` runs only the
 streamed-vs-replicated rows plus the cost-model gate (exit 1 if the
-streamed path's modeled bytes/point exceeds 2.5 x itemsize, or regresses
-above the replicated path, for the reference 27-point configuration) --
-the fast CI guard.
+streamed path's modeled bytes/point exceeds 2.5 x itemsize -- at radius 1
+*and* radius 2 -- or regresses above the replicated path, for the
+reference 27-point and star13 configurations) -- the fast CI guard.
 """
 
 from __future__ import annotations
@@ -72,16 +74,22 @@ def _time(fn, *args, reps: int = 5) -> float:
 
 
 def write_json(path: Optional[str] = None) -> str:
-    """Dump the recorded rows + stencil27 plan op counts + per-path modeled
-    bytes/point to ``path``."""
+    """Dump the recorded rows + per-spec plan op counts (with ``radius`` and
+    ``pass_list`` columns) + per-path modeled bytes/point at radius 1 and 2
+    to ``path``."""
     path = path or os.environ.get("BENCH_STENCIL_JSON", "BENCH_stencil.json")
     doc = {
-        "schema": "bench_stencil/v2",
-        "plans": {kind: compile_plan("stencil27", kind).describe()
-                  for kind in ("direct", "cse", "factored")},
+        "schema": "bench_stencil/v3",
+        "plans": {name: {kind: compile_plan(name, kind).describe()
+                         for kind in ("direct", "cse", "factored")}
+                  for name in ("stencil27", "star13", "box125")},
         "paths": {p: {"bytes_per_point_f32": bytes_per_point(p, 4),
                       "bytes_per_point_f32_jtiled":
-                          bytes_per_point(p, 4, j_tiled=True)}
+                          bytes_per_point(p, 4, j_tiled=True),
+                      "bytes_per_point_f32_r2":
+                          bytes_per_point(p, 4, radius=2),
+                      "bytes_per_point_f32_r2_jtiled":
+                          bytes_per_point(p, 4, j_tiled=True, radius=2)}
                   for p in ("stream", "replicate")},
         "rows": _RECORDS,
     }
@@ -143,6 +151,7 @@ def run() -> List[str]:
     rows.extend(_engine_rows(rng))
     rows.extend(_plan_rows(rng))
     rows.extend(_path_rows(rng))
+    rows.extend(_radius_rows(rng))
     rows.append(_jtiled_row(rng))
     rows.append(_sharded_row())
     write_json()
@@ -216,9 +225,46 @@ def _plan_rows(rng) -> List[str]:
                          f"flops={cplan.flops} vs_direct={t_direct/t:.2f}x "
                          f"max_err={err:.2e} ok={err < 1e-4}",
                          plan=cplan.describe(), plan_kind=kind,
+                         radius=list(cplan.spec.radius),
+                         pass_list=list(cplan.passes),
                          mstencil_per_s=st / t / 1e6,
                          speedup_vs_direct=t_direct / t, max_err=err,
                          ok=bool(err < 1e-4)))
+    return rows
+
+
+def _radius_rows(rng) -> List[str]:
+    """Radius-2 builtins (star13 / box125): streamed vs replicated with the
+    radius-aware modeled bytes/point -- streaming stays ~2 x itemsize/point
+    while the replicated path pays (2r+2) = 6 x -- plus parity against the
+    reference."""
+    rows: List[str] = []
+    m, n, p, bi = 16, 24, 128, 4
+    for name, wshape in (("star13", (3,)), ("box125", (3, 3, 3))):
+        cplan = compile_plan(name)
+        w = jnp.asarray(rng.uniform(0.1, 1, wshape), jnp.float32)
+        a = jnp.asarray(rng.standard_normal((m, n, p)), jnp.float32)
+        st = (m - 2) * (n - 2) * (p - 2)
+        base = None
+        for path in ("replicate", "stream"):
+            bpp = bytes_per_point(path, 4, radius=2)
+            t = _time(lambda x, pa=path: stencil_apply(
+                x, w, name, block_i=bi, path=pa), a, reps=3)
+            err = float(jnp.max(jnp.abs(
+                stencil_apply(a, w, name, block_i=bi, path=path)
+                - stencil_ref(a, w, name))))
+            base = t if path == "replicate" else base
+            rows.append(_row(
+                f"engine_r2.{name}_{path}.{m}x{n}x{p}", t * 1e6,
+                f"{st/t/1e6:.2f} Mstencil/s bytes_per_pt={bpp:.1f} "
+                f"shifts={cplan.shifts} flops={cplan.flops} "
+                f"vs_replicate={base/t:.2f}x max_err={err:.2e} "
+                f"ok={err < 1e-3}",
+                path=path, radius=list(cplan.spec.radius),
+                pass_list=list(cplan.passes), bytes_per_point=bpp,
+                plan=cplan.describe(), mstencil_per_s=st / t / 1e6,
+                speedup_vs_replicate=base / t, max_err=err,
+                ok=bool(err < 1e-3)))
     return rows
 
 
@@ -274,30 +320,42 @@ def _path_rows(rng) -> List[str]:
 def check_stream_model() -> List[str]:
     """The CI gate (satellite): for the reference 27-point configuration the
     streamed path must model <= 2.5 x itemsize bytes/point at sweeps=1 and
-    never regress above the replicated path.  Appends a gate row; raises
-    ``SystemExit(1)`` on violation so the workflow fails."""
+    never regress above the replicated path -- and the same bound must hold
+    at radius 2 (star13), where the replicated path pays 6 x itemsize.
+    Appends gate rows; raises ``SystemExit(1)`` on violation so the
+    workflow fails."""
     itemsize = REF_CONFIG["itemsize"]
-    stream = bytes_per_point("stream", itemsize)
-    rep = bytes_per_point("replicate", itemsize)
     m, n, p = (REF_CONFIG[k] for k in ("m", "n", "p"))
-    path, bi, bj = autotune_engine(m, n, p, itemsize,
-                                   plan=compile_plan("stencil27"))
-    ok = (stream <= 2.5 * itemsize) and (stream <= rep) and path == "stream"
-    row = _row("engine27.model_gate", 0.0,
-               f"stream={stream:.1f} replicate={rep:.1f} B/pt "
-               f"limit={2.5 * itemsize:.1f} auto_path={path} ok={ok}",
-               stream_bytes_per_point=stream,
-               replicate_bytes_per_point=rep, auto_path=path, ok=bool(ok))
-    if not ok:
-        # surface the diagnostics the gate exists for: the gate row and the
+    rows: List[str] = []
+    failures: List[str] = []
+    for label, name, radius in (("engine27.model_gate", "stencil27", 1),
+                                ("engine_r2.model_gate", "star13", 2)):
+        stream = bytes_per_point("stream", itemsize, radius=radius)
+        rep = bytes_per_point("replicate", itemsize, radius=radius)
+        path, bi, bj = autotune_engine(m, n, p, itemsize,
+                                       plan=compile_plan(name))
+        ok = (stream <= 2.5 * itemsize) and (stream <= rep) \
+            and path == "stream"
+        rows.append(_row(label, 0.0,
+                         f"stream={stream:.1f} replicate={rep:.1f} B/pt "
+                         f"limit={2.5 * itemsize:.1f} radius={radius} "
+                         f"auto_path={path} ok={ok}",
+                         stream_bytes_per_point=stream, radius=radius,
+                         replicate_bytes_per_point=rep, auto_path=path,
+                         ok=bool(ok)))
+        if not ok:
+            failures.append(
+                f"{name} (radius {radius}): streamed bytes/point {stream} "
+                f"vs replicated {rep} (limit {2.5 * itemsize}), auto path "
+                f"{path!r}")
+    if failures:
+        # surface the diagnostics the gate exists for: the gate rows and the
         # measured rows recorded so far still reach stdout + the artifact
-        print(row)
+        print("\n".join(rows))
         write_json()
-        raise SystemExit(
-            f"stencil cost-model gate failed: streamed bytes/point "
-            f"{stream} vs replicated {rep} (limit {2.5 * itemsize}), "
-            f"auto path {path!r}")
-    return [row]
+        raise SystemExit("stencil cost-model gate failed: "
+                         + "; ".join(failures))
+    return rows
 
 
 def _jtiled_row(rng) -> str:

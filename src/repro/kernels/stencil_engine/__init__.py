@@ -1,31 +1,42 @@
-"""Unified Pallas stencil engine: one kernel body, every radius-1 stencil.
+"""Unified Pallas stencil engine: one kernel body, every radius-R stencil.
 
 The paper's central artifact is a synthesis framework that emits many stencil
 variants (3/7/27-point, mm/lc register strategies, any jam factor) from one
 kernel description.  This package is that idea applied to the repo's Pallas
 layer: the former ``stencil3``/``stencil7``/``stencil27`` kernel/ops/ref
 triples are now *one* spec registry, compiled to an explicit execution plan
-(the paper's synthesis step) and run by one kernel body.
+by a pass pipeline (the paper's synthesis step) and run by one kernel body,
+at any per-axis radius.
 
 Mask registry
     :func:`get_stencil` / :func:`register_stencil` /
     :func:`list_stencils` / :func:`spec_from_mask`.  Built-ins:
     ``"stencil3"`` (k-only, ``w=(w_edge, w_center)``), ``"stencil7"``
     (``w=(wc, wk, wj, wi)``), ``"stencil27"`` (``w[|di|,|dj|,|dk|]``, shape
-    ``(2,2,2)``).  ``spec_from_mask`` turns any ``(3,3,3)``
-    coefficient-index mask into a runnable spec.
+    ``(2,2,2)``), and the radius-2 ``"star13"`` (the 4th-order Laplacian
+    star, ``w=(wc, w1, w2)``) and ``"box125"`` (5x5x5 box,
+    ``w[|di|,|dj|,|dk|]``, shape ``(3,3,3)``).  ``spec_from_mask`` turns
+    any odd-shaped coefficient-index mask (``(2r+1)`` per axis) into a
+    runnable spec.
 
-Plan IR -- :func:`compile_plan` (paper sect. 4, synthesis -> plan)
+Pass-pipeline plan compiler -- :func:`compile_plan` (paper sect. 4)
     A spec compiles to a :class:`StencilPlan` -- a tiny SSA schedule of
     shift/scale/add/fma ops interpreted at trace time by both the kernel
-    and the reference.  ``factored`` (mirror-symmetric specs) shares
-    k-pair partial sums across j then i: stencil27 drops from 54 shifts +
-    53 flop-ops (``direct``, the naive escape hatch) to 8 shifts + 19
-    flop-ops.  ``cse`` (arbitrary masks) builds each ``(dj, dk)`` plane
-    shift once and reuses it across ``di``.  Shifts are static slices with
-    zero fill on the halo-extended block -- no wrap-around values are ever
-    computed then masked.  The plan's static op counts drive the cost
-    model.
+    and the reference.  ``compile_plan`` runs an ordered pass list
+    (``build_direct`` -> ``cse`` / ``mirror_factor`` -> ``order_ops``; the
+    plan kinds are presets in ``PASS_PRESETS``): ``mirror_factor``
+    (per-axis ``|d|``-symmetric specs, any radius) shares k-pair partial
+    sums per distance across j then i -- stencil27 drops from 54 shifts +
+    53 flop-ops (``direct``, the naive escape hatch) to 8 + 19, the
+    radius-2 star13 from 12 + 25 to 12 + 19, box125 from 300 + 249 to
+    20 + 63; ``cse`` (arbitrary masks) builds each ``(dj, dk)`` plane shift
+    once and reuses it across ``di``; ``order_ops`` re-sequences the
+    schedule with the core list scheduler's longest-path-to-sink priority
+    and provably never increases peak SSA liveness (:func:`peak_live` --
+    the paper's register-pressure constraint as the executor's working
+    set).  Shifts are static slices with zero fill on the halo-extended
+    block -- no wrap-around values are ever computed then masked.  The
+    plan's static op counts drive the cost model.
 
 Execution -- :func:`stencil_apply`
     Batched (arbitrary leading dims) and multi-dtype: bf16/f32 inputs
@@ -41,13 +52,13 @@ Execution -- :func:`stencil_apply`
 Plane streaming -- ``stencil_apply(..., path="stream")`` (default via auto)
     The paper's central optimization as the volumetric hot path: the grid
     walks i-blocks in order with a single input operand, and a VMEM
-    ``scratch_shapes`` window of ``block_i + sweeps`` planes is carried
-    across grid steps (``pl.when``-guarded prime/rotate), so each input
-    plane is fetched from HBM exactly once per call and written once --
-    ~2 transfers per point (:func:`bytes_per_point`), vs 4 (untiled) / 10
-    (j-tiled) on the halo-replicated path, which survives as the
-    ``path="replicate"`` parity escape hatch (f64 runs of the two paths
-    are bit-identical).
+    ``scratch_shapes`` window of ``block_i + radius * sweeps`` planes is
+    carried across grid steps (``pl.when``-guarded prime/rotate), so each
+    input plane is fetched from HBM exactly once per call and written once
+    -- ~2 transfers per point at any radius (:func:`bytes_per_point`), vs
+    ``2r + 2`` (untiled) / ``(2r+1)^2 + 1`` (j-tiled) on the
+    halo-replicated path, which survives as the ``path="replicate"``
+    parity escape hatch (f64 runs of the two paths are bit-identical).
 
 j-tiled blocking -- ``stencil_apply(..., block_j=bj)``
     Blocks become ``(1, bi, bj, P)`` with a j-halo assembled from the 3x3
@@ -68,7 +79,8 @@ Sharded execution -- :func:`stencil_sharded`
     ``shard_map`` over the i-axis: the partition plan (divisibility, halo
     depth, PlanNotes) comes from
     ``repro.sharding.planner.stencil_halo_sharding``; shards exchange
-    ``sweeps`` halo rows via ``lax.ppermute`` and run the same fused kernel,
+    ``radius * sweeps`` halo rows via ``lax.ppermute`` and run the same
+    fused kernel,
     with global-geometry masking keeping shard seams exact.  Compiled
     shard_map programs are memoized keyed on device ids + axis names (not
     ``Mesh`` objects) in a bounded cache.
@@ -83,9 +95,11 @@ from .autotune import (PATH_KINDS, autotune_block_i,  # noqa: F401
                        pick_block_i, pick_block_rows)
 from .compat import (stencil3, stencil3_ref, stencil7, stencil7_ref,  # noqa: F401
                      stencil27, stencil27_ref)
+from .common import DEFAULT_VMEM_BUDGET  # noqa: F401
 from .ops import default_interpret, stencil_apply  # noqa: F401
-from .plan import (PLAN_KINDS, PlanOp, StencilPlan, compile_plan,  # noqa: F401
-                   execute_plan, mirror_symmetric, shift_slice)
+from .plan import (PASS_PRESETS, PLAN_KINDS, PlanOp,  # noqa: F401
+                   StencilPlan, compile_plan, execute_plan,
+                   mirror_symmetric, peak_live, run_passes, shift_slice)
 from .ref import stencil_ref  # noqa: F401
 from .sharded import stencil_sharded  # noqa: F401
 from .spec import (StencilSpec, get_stencil, list_stencils,  # noqa: F401

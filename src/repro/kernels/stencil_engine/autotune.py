@@ -1,4 +1,4 @@
-"""Plan- and path-aware cost-model block selection.
+"""Plan-, path-, and radius-aware cost-model block selection.
 
 Same shape of reasoning as ``repro.core.perfmodel``: performance is
 ``min(compute limit, bandwidth limit)``, so the modeled time of one grid step
@@ -6,39 +6,45 @@ is ``max(DMA time, VPU time)`` and we pick the feasible (path, block) pair
 minimizing the modeled time per output point:
 
 * DMA bytes/step: every staged input view plus one output block.  The
-  *replicated* path stages 3 i-neighbour views untiled (9 i/j views
-  j-tiled); the *streaming* path fetches each i-block once (one
-  identity-mapped view untiled, the 3 j-neighbour views j-tiled) and
-  carries the halo in VMEM scratch -- see :func:`bytes_per_point`.  Fused
-  sweeps amortize the traffic over ``s`` operator applications.
+  *replicated* path stages ``2*ri + 1`` i-neighbour views untiled
+  (``(2*ri + 1) * (2*rj + 1)`` i/j views j-tiled); the *streaming* path
+  fetches each i-block once (one identity-mapped view untiled, the
+  ``2*rj + 1`` j-neighbour views j-tiled) and carries the halo in VMEM
+  scratch -- see :func:`bytes_per_point`.  Streaming therefore stays at
+  ~2 transfers/point *at any radius* while the replicated cost grows with
+  ``r``; fused sweeps amortize the traffic over ``s`` applications.
 * VPU ops/step: the *plan's* static op counts -- ``flops + shifts`` per
   point of the extended working strip per sweep (a lane shift occupies the
-  VPU like a flop), not the old blind ``2 * taps``.  A factored stencil27
-  plan (8 shifts + 19 flops) therefore models ~4x cheaper than the naive
+  VPU like a flop), not a blind ``2 * taps``.  A factored stencil27 plan
+  (8 shifts + 19 flops) therefore models ~4x cheaper than the naive
   schedule (54 + 53), which shifts the DMA/VPU crossover -- the paper's
   Table-4 point that the synthesized schedule changes which resource binds.
 * VMEM residency: the staged tiles (input dtype) + the extended working
   strip and its tap accumulator (accumulation dtype) -- plus, on the
-  streaming path, the ``bi + s``-plane rotating scratch window -- must fit
-  the budget: the paper's Table-2 "registers required vs registers
+  streaming path, the ``bi + ri * sweeps``-plane rotating scratch window --
+  must fit the budget: the paper's Table-2 "registers required vs registers
   available" constraint in VMEM terms.
 
 Feasible blocks divide M (and N when j-tiled -- Pallas grid constraint) and
-satisfy ``bi, bj >= s`` (the carried window / +-1-block halo must cover the
-fused-sweep depth).  j-tiling engages only when no full-N block fits the
-budget.  Ties prefer sublane multiples (8), as the old heuristic did.
+satisfy ``bi >= ri * s`` / ``bj >= rj * s`` (the carried window / +-1-block
+halo must cover the fused-sweep halo depth).  j-tiling engages only when no
+full-N block fits the budget.  Ties prefer sublane multiples (8), as the old
+heuristic did.
 
 :func:`autotune_engine` is the top-level entry: it races the streaming and
 replicated rooflines per shape and returns ``(path, block_i, block_j)`` --
 streaming wins whenever it is feasible (it moves 2 bytes/point where the
-replicated path moves 4, or 4 vs 10 j-tiled) but the replicated path
-remains reachable as the ``path="replicate"`` parity escape hatch and for
-shapes where the streaming scratch window itself overflows VMEM.
+replicated path moves ``2*ri + 2``, or ``2*rj + 2`` vs
+``(2ri+1)(2rj+1) + 1`` j-tiled) but the replicated path remains reachable
+as the ``path="replicate"`` parity escape hatch and for shapes where the
+streaming scratch window itself overflows VMEM.
 """
 
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from typing import Optional, Tuple, Union
+
+from .common import DEFAULT_VMEM_BUDGET, divisors as _divisors
 
 # TPU-v5e-flavoured roofline constants (per core), only ever used as a ratio.
 HBM_BW = 819e9          # bytes/s
@@ -46,17 +52,22 @@ VPU_FLOPS = 3e12        # f32 elementwise flop/s
 
 PATH_KINDS = ("auto", "stream", "replicate")
 
+RadiusLike = Union[int, Tuple[int, int, int], None]
 
-def _divisors(x: int) -> List[int]:
-    small, large = [], []
-    d = 1
-    while d * d <= x:
-        if x % d == 0:
-            small.append(d)
-            if d != x // d:
-                large.append(x // d)
-        d += 1
-    return small + large[::-1]
+
+def _radius3(radius: RadiusLike, plan=None) -> Tuple[int, int, int]:
+    """Canonicalize a radius argument: ``None`` defers to the plan's spec
+    (radius-1 when neither is given); an int is isotropic."""
+    if radius is None:
+        if plan is not None:
+            return tuple(plan.spec.radius)
+        return (1, 1, 1)
+    if isinstance(radius, int):
+        return (radius, radius, radius)
+    r = tuple(int(x) for x in radius)
+    if len(r) != 3:
+        raise ValueError(f"radius must be an int or 3-tuple, got {radius!r}")
+    return r
 
 
 def _plan_ops(plan, taps: int) -> Tuple[int, int]:
@@ -67,66 +78,76 @@ def _plan_ops(plan, taps: int) -> Tuple[int, int]:
     return 0, 2 * taps
 
 
-def _views(j_tiled: bool, path: str) -> int:
+def _views(j_tiled: bool, path: str, ri: int = 1, rj: int = 1) -> int:
     """Input views staged per grid step: the streaming path fetches each
-    block once (plus the 3 j-neighbour tiles when j-tiled); the replicated
-    path re-fetches the full 3 (untiled) / 9 (j-tiled) halo neighbourhood."""
+    block once (plus the ``2rj + 1`` j-neighbour tiles when j-tiled); the
+    replicated path re-fetches the full ``2ri + 1`` (untiled) /
+    ``(2ri+1)(2rj+1)`` (j-tiled) halo neighbourhood."""
     if path == "stream":
-        return 3 if j_tiled else 1
-    return 9 if j_tiled else 3
+        return (2 * rj + 1) if j_tiled else 1
+    return (2 * ri + 1) * (2 * rj + 1) if j_tiled else (2 * ri + 1)
 
 
 def _geometry(bi: int, bj: Optional[int], n: int, sweeps: int,
-              path: str = "replicate"):
+              path: str = "replicate",
+              radius: Tuple[int, int, int] = (1, 1, 1)):
     """(output columns, extended columns, staged input views) per step."""
+    ri, rj, _ = radius
     if bj is None:
-        return n, n, _views(False, path)
-    return bj, bj + 2 * sweeps, _views(True, path)
+        return n, n, _views(False, path, ri, rj)
+    return bj, bj + 2 * rj * sweeps, _views(True, path, ri, rj)
 
 
 def bytes_per_point(path: str, itemsize: int, j_tiled: bool = False,
-                    sweeps: int = 1) -> float:
+                    sweeps: int = 1, radius: RadiusLike = None) -> float:
     """Modeled HBM bytes moved per output point per call (reads + the one
     write), amortized over ``sweeps`` fused applications.
 
-    Streaming untiled is the paper's ideal ~2 transfers/point: each input
-    plane read exactly once, each output plane written once.  The replicated
-    path re-reads every plane per staged view: 3 + 1 untiled, 9 + 1
-    j-tiled.  Streaming j-tiled re-reads along j only (3 + 1).
+    Streaming untiled is the paper's ideal ~2 transfers/point *at any
+    radius*: each input plane read exactly once, each output plane written
+    once.  The replicated path re-reads every plane per staged view:
+    ``2ri + 2`` untiled, ``(2ri+1)(2rj+1) + 1`` j-tiled (4 and 10 at
+    radius 1, 6 and 26 at radius 2).  Streaming j-tiled re-reads along j
+    only (``2rj + 2``).
     """
     if path not in ("stream", "replicate"):
         raise ValueError(f"unknown path {path!r}; expected 'stream' or "
                          f"'replicate'")
-    return (_views(j_tiled, path) + 1) * itemsize / sweeps
+    ri, rj, _ = _radius3(radius)
+    return (_views(j_tiled, path, ri, rj) + 1) * itemsize / sweeps
 
 
 def _step_time(bi: int, bj: Optional[int], n: int, p: int, itemsize: int,
                sweeps: int, shifts: int, flops: int,
-               path: str = "replicate") -> float:
-    wj, ej, views = _geometry(bi, bj, n, sweeps, path)
+               path: str = "replicate",
+               radius: Tuple[int, int, int] = (1, 1, 1)) -> float:
+    wj, ej, views = _geometry(bi, bj, n, sweeps, path, radius)
     dma = (views + 1.0) * bi * wj * p * itemsize / HBM_BW
-    vpu = ((flops + shifts) * sweeps * (bi + 2 * sweeps) * ej * p
+    vpu = ((flops + shifts) * sweeps * (bi + 2 * radius[0] * sweeps) * ej * p
            / VPU_FLOPS)
     return max(dma, vpu) / (bi * wj * p * sweeps)  # per output point-sweep
 
 
 def _fits(bi: int, bj: Optional[int], n: int, p: int, itemsize: int,
           sweeps: int, acc_itemsize: int, vmem_budget: int,
-          path: str = "replicate") -> bool:
-    wj, ej, views = _geometry(bi, bj, n, sweeps, path)
+          path: str = "replicate",
+          radius: Tuple[int, int, int] = (1, 1, 1)) -> bool:
+    wj, ej, views = _geometry(bi, bj, n, sweeps, path, radius)
     io_tiles = (views + 1) * bi * wj * p * itemsize
-    scratch = ((bi + sweeps) * ej * p * itemsize if path == "stream" else 0)
-    working = 2 * (bi + 2 * sweeps) * ej * p * acc_itemsize
+    scratch = ((bi + radius[0] * sweeps) * ej * p * itemsize
+               if path == "stream" else 0)
+    working = 2 * (bi + 2 * radius[0] * sweeps) * ej * p * acc_itemsize
     return io_tiles + scratch + working <= vmem_budget
 
 
 def autotune_blocks(m: int, n: int, p: int, itemsize: int,
                     sweeps: int = 1, plan=None, taps: int = 27,
                     acc_itemsize: int = 4,
-                    vmem_budget: int = 8 * 1024 * 1024,
+                    vmem_budget: int = DEFAULT_VMEM_BUDGET,
                     block_j: Optional[int] = None,
                     allow_j_tiling: bool = True,
-                    path: str = "replicate"
+                    path: str = "replicate",
+                    radius: RadiusLike = None
                     ) -> Tuple[int, Optional[int]]:
     """Smallest modeled time per output point over feasible blockings of one
     execution ``path``.
@@ -134,32 +155,36 @@ def autotune_blocks(m: int, n: int, p: int, itemsize: int,
     Returns ``(block_i, block_j)`` with ``block_j=None`` meaning untiled
     (full-N) blocks.  j-tiling is considered only when no untiled block fits
     ``vmem_budget`` (or when ``block_j`` pins a tile width).  ``plan`` (a
-    :class:`~.plan.StencilPlan`) supplies the actual shift/flop counts;
-    without it the legacy ``2 * taps`` estimate applies.
+    :class:`~.plan.StencilPlan`) supplies the actual shift/flop counts and
+    the spec radius; without it the legacy radius-1 ``2 * taps`` estimate
+    applies.
     """
     shifts, flops = _plan_ops(plan, taps)
-    cands_i = [bi for bi in _divisors(m) if bi >= sweeps] or [m]
+    rad = _radius3(radius, plan)
+    min_bi = max(1, rad[0] * sweeps)
+    min_bj = max(1, rad[1] * sweeps)
+    cands_i = [bi for bi in _divisors(m) if bi >= min_bi] or [m]
 
     def key(bi: int, bj: Optional[int]):
         return (_step_time(bi, bj, n, p, itemsize, sweeps, shifts, flops,
-                           path),
+                           path, rad),
                 0 if (bi % 8 == 0 or bi < 8) else 1,
                 -bi * (bj if bj is not None else n))
 
     if block_j is None:
         feasible = [bi for bi in cands_i
                     if _fits(bi, None, n, p, itemsize, sweeps, acc_itemsize,
-                             vmem_budget, path)]
+                             vmem_budget, path, rad)]
         if feasible:
             return min(feasible, key=lambda bi: key(bi, None)), None
         if not allow_j_tiling:      # nothing fits: smallest legal block
             return cands_i[0], None
-        cands_j = [bj for bj in _divisors(n) if sweeps <= bj < n] or [n]
+        cands_j = [bj for bj in _divisors(n) if min_bj <= bj < n] or [n]
     else:
         cands_j = [block_j]
     pairs = [(bi, bj) for bi in cands_i for bj in cands_j
              if _fits(bi, bj, n, p, itemsize, sweeps, acc_itemsize,
-                      vmem_budget, path)]
+                      vmem_budget, path, rad)]
     if pairs:
         return min(pairs, key=lambda bb: key(*bb))
     return cands_i[0], cands_j[0]   # nothing fits: smallest legal tile
@@ -168,32 +193,36 @@ def autotune_blocks(m: int, n: int, p: int, itemsize: int,
 def autotune_engine(m: int, n: int, p: int, itemsize: int,
                     sweeps: int = 1, plan=None, taps: int = 27,
                     acc_itemsize: int = 4,
-                    vmem_budget: int = 8 * 1024 * 1024,
+                    vmem_budget: int = DEFAULT_VMEM_BUDGET,
                     block_j: Optional[int] = None,
-                    path: str = "auto"
+                    path: str = "auto",
+                    radius: RadiusLike = None
                     ) -> Tuple[str, int, Optional[int]]:
     """Race the streaming and replicated rooflines: returns the modeled-best
     ``(path, block_i, block_j)`` over both paths' feasible blockings.
 
     ``path="stream"``/``"replicate"`` pins the path and only tunes blocks.
-    Feasible streaming (strictly fewer HBM bytes per point, same VPU work)
-    wins every tie; the replicated path is chosen only when the streaming
-    scratch window cannot fit the VMEM budget at any legal blocking.
+    Feasible streaming (strictly fewer HBM bytes per point at any radius,
+    same VPU work) wins every tie; the replicated path is chosen only when
+    the streaming scratch window cannot fit the VMEM budget at any legal
+    blocking.
     """
     if path not in PATH_KINDS:
         raise ValueError(f"unknown path {path!r}; expected one of "
                          f"{PATH_KINDS}")
     shifts, flops = _plan_ops(plan, taps)
+    rad = _radius3(radius, plan)
     cands = ("stream", "replicate") if path == "auto" else (path,)
     best = None
     for cand in cands:
         bi, bj = autotune_blocks(m, n, p, itemsize, sweeps=sweeps, plan=plan,
                                  taps=taps, acc_itemsize=acc_itemsize,
                                  vmem_budget=vmem_budget, block_j=block_j,
-                                 path=cand)
+                                 path=cand, radius=rad)
         feasible = _fits(bi, bj, n, p, itemsize, sweeps, acc_itemsize,
-                         vmem_budget, cand)
-        t = _step_time(bi, bj, n, p, itemsize, sweeps, shifts, flops, cand)
+                         vmem_budget, cand, rad)
+        t = _step_time(bi, bj, n, p, itemsize, sweeps, shifts, flops, cand,
+                       rad)
         # infeasible blockings only ever win when nothing fits anywhere;
         # the streaming path wins exact ties (strictly fewer HBM bytes).
         rank = (0 if feasible else 1, t, 0 if cand == "stream" else 1)
@@ -205,7 +234,7 @@ def autotune_engine(m: int, n: int, p: int, itemsize: int,
 def autotune_block_i(m: int, n: int, p: int, itemsize: int,
                      sweeps: int = 1, taps: int = 27, plan=None,
                      acc_itemsize: int = 4,
-                     vmem_budget: int = 8 * 1024 * 1024) -> int:
+                     vmem_budget: int = DEFAULT_VMEM_BUDGET) -> int:
     """Untiled (full-N) i-block choice -- the pre-j-tiling entry point."""
     bi, _ = autotune_blocks(m, n, p, itemsize, sweeps=sweeps, plan=plan,
                             taps=taps, acc_itemsize=acc_itemsize,
@@ -214,14 +243,14 @@ def autotune_block_i(m: int, n: int, p: int, itemsize: int,
 
 
 def pick_block_i(m: int, n: int, p: int, itemsize: int,
-                 vmem_budget: int = 8 * 1024 * 1024) -> int:
+                 vmem_budget: int = DEFAULT_VMEM_BUDGET) -> int:
     """Legacy entry point (kept for the MXU kernel and old callers)."""
     return autotune_block_i(m, n, p, itemsize, sweeps=1, taps=27,
                             vmem_budget=vmem_budget)
 
 
 def pick_block_rows(rows: int, p: int, itemsize: int,
-                    vmem_budget: int = 4 << 20) -> int:
+                    vmem_budget: int = DEFAULT_VMEM_BUDGET) -> int:
     """Row-block choice for the k-only (1-D) path: the largest power-of-two
     row count whose tile fits the budget; when no power of two divides
     ``rows``, the largest *fitting divisor* (never an over-budget full-rows

@@ -1,19 +1,47 @@
-"""Shared Pallas plumbing kept for non-engine stencil kernels (stencil_mxu).
+"""Shared stencil-engine plumbing: budgets, divisors, legacy Pallas helpers.
 
-The engine's own kernels live in :mod:`.kernel`/:mod:`.ops`; these are the
-original halo/tiling utilities the MXU banded-matmul kernel still imports
-(``shifted_planes``, ``interior_mask``, ``stencil_pallas_call``), re-exported
-by ``repro.kernels._stencil_common`` for backward compatibility.
+Engine-wide constants and small helpers live here so the cost model, the
+block pickers, and the benchmarks agree on one source of truth:
+
+* :data:`DEFAULT_VMEM_BUDGET` -- the single VMEM residency budget every
+  block/tile chooser defaults to (previously ``8 << 20`` in
+  ``autotune_blocks`` and a stray ``4 << 20`` in ``pick_block_rows``).
+* :func:`divisors` -- sorted divisors of an int (block-size candidates).
+
+The rest are the original halo/tiling utilities the MXU banded-matmul
+kernel still imports (``shifted_planes``, ``interior_mask``,
+``stencil_pallas_call``), re-exported by ``repro.kernels._stencil_common``
+for backward compatibility; the engine's own kernels live in
+:mod:`.kernel`/:mod:`.ops`.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Callable
+from typing import Callable, List
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+# One documented VMEM residency budget (bytes) for every engine block/tile
+# chooser: staged IO tiles + working strips + streaming scratch must fit
+# inside it.  ~half a TPU core's VMEM, leaving headroom for Pallas's own
+# double-buffering of the staged operands.
+DEFAULT_VMEM_BUDGET = 8 << 20
+
+
+def divisors(x: int) -> List[int]:
+    """All divisors of ``x`` in ascending order (block-size candidates)."""
+    small, large = [], []
+    d = 1
+    while d * d <= x:
+        if x % d == 0:
+            small.append(d)
+            if d != x // d:
+                large.append(x // d)
+        d += 1
+    return small + large[::-1]
 
 
 def shifted_planes(prev_blk: jax.Array, cur: jax.Array, nxt_blk: jax.Array):

@@ -1,50 +1,61 @@
 """The Pallas kernel bodies behind every engine stencil.
 
-One compute core serves 3-, 7-, 27-point and arbitrary radius-1 masks: the
-spec is first compiled to a :class:`~.plan.StencilPlan` (the paper's
-synthesis step -- a factored partial-sum schedule for symmetric specs, a
-CSE'd shift schedule for arbitrary masks, a naive ``direct`` escape hatch)
-and the plan is unrolled at trace time.  Neighbour access is by static slice
-+ zero pad on the resident block (:func:`~.plan.shift_slice`), never a
-wrap-around roll, so no out-of-domain values are computed then masked.
+One compute core serves 3-, 7-, 27-point, the radius-2 star13/box125, and
+arbitrary radius-R masks: the spec is first compiled to a
+:class:`~.plan.StencilPlan` (the paper's synthesis step, now an explicit
+pass pipeline -- a factored partial-sum schedule for symmetric specs, a
+CSE'd shift schedule for arbitrary masks, a naive ``direct`` escape hatch,
+all re-sequenced by the liveness-ordering pass) and the plan is unrolled at
+trace time.  Neighbour access is by static slice + zero pad on the resident
+block (:func:`~.plan.shift_slice`), never a wrap-around roll, so no
+out-of-domain values are computed then masked.
 
-Two volumetric bodies share that core:
+Two volumetric bodies share that core; all geometry below is per-axis
+radius-aware with halo widths ``h = radius * sweeps``:
 
 ``stencil3d_kernel`` (the *replicated* path, parity escape hatch)
-    The input is passed 3x (untiled) or 9x (j-tiled) under +-1-shifted block
-    index maps, so each grid step re-fetches its halo neighbours from HBM.
-    Simple, stateless, and kept as the ``path="replicate"`` reference.
+    The input is passed ``2*ri + 1`` times (untiled) or ``(2*ri + 1) *
+    (2*rj + 1)`` times (j-tiled) under block-shifted (clamped) index maps,
+    so each grid step re-fetches its halo neighbours from HBM.  Simple,
+    stateless, and kept as the ``path="replicate"`` reference.
 
 ``stencil3d_stream_kernel`` (the *streaming* path, default)
     The paper's central optimization (sect. 3-4): stream along the i axis
     and keep the active planes resident so each loaded plane is reused by
     every output plane that needs it, instead of being re-fetched.  A single
     input operand walks i-blocks in order on a grid with one extra step; a
-    VMEM ``scratch_shapes`` buffer carries a rotating window of ``bi + s``
-    input planes (the previous block plus the ``s``-deep halo tail of the
-    block before it) across grid steps.  Step ``t`` computes output block
-    ``t - 1`` from ``[scratch | head s planes of block t]`` and then rotates
-    the window -- so every input plane is fetched from HBM exactly once per
-    call and written once: ~2 transfers per point, the paper's
-    register-resident ideal (VMEM standing in for the register file).
+    VMEM ``scratch_shapes`` buffer carries a rotating window of ``bi + h``
+    input planes (the previous block plus the ``h = ri * sweeps``-deep halo
+    tail of the block before it) across grid steps.  Step ``t`` computes
+    output block ``t - 1`` from ``[scratch | head h planes of block t]`` and
+    then rotates the window -- so every input plane is fetched from HBM
+    exactly once per call and written once: ~2 transfers per point, the
+    paper's register-resident ideal (VMEM standing in for the register
+    file).
 
 Both bodies fuse ``s`` Jacobi sweeps per grid step: the working strip is
-``s`` halo planes wider than the output block, the sweep loop runs
+``h`` halo planes wider than the output block per side, the sweep loop runs
 VMEM-resident via :func:`run_sweeps` (interior mask and zero fill built
 once, not per unrolled sweep), and only the central planes are written back
--- one HBM round-trip for ``s`` applications of the operator.  Global
-geometry (row offset, global M) arrives as a small int32 operand so the same
-bodies run unsharded (offset 0) and as the per-shard body of the
-halo-exchange ``shard_map`` path.  When ``bj`` is set the grid gains a j
-dimension: the replicated body sees the 3x3 neighbour tiles; the streaming
-body streams i within each j-tile (3 j-neighbour views, so planes are
-fetched 3x instead of the replicated 9x -- exactly-once needs the full-N
-strip in scratch, which is the one regime j-tiling exists to avoid).
+-- one HBM round-trip for ``s`` applications of the operator.  At radius
+>= 2, clamped neighbour views can place *duplicated* edge data where the
+out-of-domain zero halo belongs and interior points genuinely read those
+positions, so the assembled strip is explicitly zeroed outside the global
+domain (:func:`zero_outside_domain`; a no-op at radius 1, where clamp
+garbage only ever feeds Dirichlet-masked rows).  Global geometry (row
+offset, global M) arrives as a small int32 operand so the same bodies run
+unsharded (offset 0) and as the per-shard body of the halo-exchange
+``shard_map`` path.  When ``bj`` is set the grid gains a j dimension: the
+replicated body sees the ``(2ri+1) x (2rj+1)`` neighbour tiles; the
+streaming body streams i within each j-tile (``2rj + 1`` j-neighbour views,
+so planes are fetched ``2rj + 1`` times instead of the replicated
+``(2ri+1)(2rj+1)`` -- exactly-once needs the full-N strip in scratch, which
+is the one regime j-tiling exists to avoid).
 """
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -64,8 +75,9 @@ def run_sweeps(u: jax.Array, interior: jax.Array, w: jax.Array,
     hoisted: the interior mask *and* the zero fill it selects against are
     materialized once and reused by every unrolled sweep (previously the
     scalar zero was re-broadcast to the full block per sweep).  The valid
-    region shrinks one plane per sweep from the extended edges, so the
-    central block is exact after ``sweeps`` applications."""
+    region shrinks ``radius`` planes per sweep from the extended edges, so
+    the central block is exact after ``sweeps`` applications under the
+    ``h = radius * sweeps`` halo."""
     zero = jnp.zeros(u.shape, u.dtype)
     for _ in range(sweeps):
         u = jnp.where(interior, execute_plan(plan, u, w), zero)
@@ -75,7 +87,9 @@ def run_sweeps(u: jax.Array, interior: jax.Array, w: jax.Array,
 def _volumetric_interior(ext, gi0, j0, m_ref, n_global: int):
     """Interior (non-Dirichlet) mask of an extended working strip whose
     row 0 sits at global row ``gi0`` and column 0 at global column ``j0``;
-    ``m_ref`` is the (traced) global M.  Built once per grid step and shared
+    ``m_ref`` is the (traced) global M.  The Dirichlet ring stays one point
+    wide at every radius (out-of-domain reads are zeros, matching the
+    reference's zero-fill shifts).  Built once per grid step and shared
     across every fused sweep."""
     gi = gi0 + jax.lax.broadcasted_iota(jnp.int32, ext, 0)
     jj = j0 + jax.lax.broadcasted_iota(jnp.int32, ext, 1)
@@ -85,44 +99,88 @@ def _volumetric_interior(ext, gi0, j0, m_ref, n_global: int):
             & (kk > 0) & (kk < ext[-1] - 1))
 
 
+def zero_outside_domain(u: jax.Array, gi0, j0, m_ref, n_global: int,
+                        radius: Tuple[int, int, int]) -> jax.Array:
+    """Zero strip positions outside the global (M, N) domain.
+
+    Clamped neighbour index maps duplicate edge blocks, so strip rows/
+    columns beyond the domain hold copies of in-domain data instead of the
+    zeros the reference's zero-fill shifts assume.  At radius 1 those
+    positions only ever feed rows the Dirichlet mask zeroes (proved by the
+    one-plane-per-sweep shrink argument), so this is skipped to keep the
+    radius-1 programs byte-identical; at radius >= 2 an interior point at
+    distance 1 from the boundary genuinely reads distance-2 neighbours
+    across it, so the zeros must be materialized."""
+    if radius[0] <= 1 and radius[1] <= 1:
+        return u
+    gi = gi0 + jax.lax.broadcasted_iota(jnp.int32, u.shape, 0)
+    jj = j0 + jax.lax.broadcasted_iota(jnp.int32, u.shape, 1)
+    ok = (gi >= 0) & (gi < m_ref) & (jj >= 0) & (jj < n_global)
+    return jnp.where(ok, u, jnp.zeros(u.shape, u.dtype))
+
+
+def _concat_halo(prev, cur, nxt, h: int, axis: int) -> jax.Array:
+    """``[tail h of prev | cur | head h of nxt]`` along ``axis`` -- the halo
+    slices are taken *before* concatenating so the temporary stays at
+    ``block + 2h``, never the full staged neighbourhood.  ``h`` never
+    exceeds the block extent (``block >= radius * sweeps`` is validated),
+    so the +-1 neighbours always cover the halo; any outer views remain
+    staged-but-unread (the replicated path's honest ``2r + 1`` cost)."""
+    if h == 0:
+        return cur
+    src = [slice(None)] * cur.ndim
+    src[axis] = slice(-h, None)
+    head = [slice(None)] * cur.ndim
+    head[axis] = slice(0, h)
+    return jnp.concatenate([prev[tuple(src)], cur, nxt[tuple(head)]],
+                           axis=axis)
+
+
 def stencil3d_kernel(*refs, plan: StencilPlan, bi: int, bj: Optional[int],
                      n_global: int, sweeps: int, acc_dtype):
     """Replicated-halo fused-sweep volumetric kernel (``path="replicate"``).
 
     ``refs`` is ``(*blocks, geom_ref, w_ref, o_ref)`` where ``blocks`` holds
-    the 3 i-neighbour views (untiled, blocks ``(1, bi, N, P)``) or the 3x3
-    i/j-neighbour views in row-major ``(di, dj)`` order (j-tiled, blocks
-    ``(1, bi, bj, P)``).  ``geom_ref`` = (global row of this array's row 0,
-    global M) -- both 0 and the local M for the single-device path;
-    shard-dependent under shard_map.
+    the ``2ri + 1`` i-neighbour views (untiled, blocks ``(1, bi, N, P)``) or
+    the ``(2ri + 1) x (2rj + 1)`` i/j-neighbour views in row-major
+    ``(di, dj)`` order (j-tiled, blocks ``(1, bi, bj, P)``).  ``geom_ref`` =
+    (global row of this array's row 0, global M) -- both 0 and the local M
+    for the single-device path; shard-dependent under shard_map.
     """
     o_ref = refs[-1]
     geom_ref, w_ref = refs[-3], refs[-2]
     blocks = refs[:-3]
+    ri, rj, _ = plan.spec.radius
     i_blk = pl.program_id(1)
     s = sweeps
+    hi = ri * s
     w = w_ref[...]
     if bj is None:
-        prev, cur, nxt = (r[0] for r in blocks)            # (bi, N, P)
-        u = jnp.concatenate([prev[-s:], cur, nxt[:s]],
-                            axis=0).astype(acc_dtype)
+        prev, cur, nxt = (blocks[ri + d][0] if hi else blocks[ri][0]
+                          for d in (-1, 0, 1))
+        u = _concat_halo(prev, cur, nxt, hi, 0).astype(acc_dtype)
         j0 = 0
     else:
+        hj = rj * s
         j_blk = pl.program_id(2)
-        strips = []
-        for ii in range(3):
-            row = [blocks[3 * ii + 0][0][:, -s:],
-                   blocks[3 * ii + 1][0],
-                   blocks[3 * ii + 2][0][:, :s]]
-            strip = jnp.concatenate(row, axis=1)           # (bi, bj + 2s, P)
-            strips.append(strip[-s:] if ii == 0
-                          else (strip if ii == 1 else strip[:s]))
-        u = jnp.concatenate(strips, axis=0).astype(acc_dtype)
-        j0 = j_blk * bj - s
-    interior = _volumetric_interior(u.shape, geom_ref[0] + i_blk * bi - s,
-                                    j0, geom_ref[1], n_global)
+        nj = 2 * rj + 1
+
+        def jrow(ii: int) -> jax.Array:
+            tiles = [blocks[ii * nj + rj + (d if hj else 0)][0]
+                     for d in (-1, 0, 1)]
+            return _concat_halo(*tiles, hj, 1)     # (bi, bj + 2hj, P)
+
+        mid = jrow(ri)
+        rows = ((jrow(ri - 1), mid, jrow(ri + 1)) if hi
+                else (mid, mid, mid))
+        u = _concat_halo(*rows, hi, 0).astype(acc_dtype)
+        j0 = j_blk * bj - hj
+    gi0 = geom_ref[0] + i_blk * bi - hi
+    u = zero_outside_domain(u, gi0, j0, geom_ref[1], n_global,
+                            plan.spec.radius)
+    interior = _volumetric_interior(u.shape, gi0, j0, geom_ref[1], n_global)
     u = run_sweeps(u, interior, w, plan, s)
-    out = u[s:s + bi] if bj is None else u[s:s + bi, s:s + bj]
+    out = u[hi:hi + bi] if bj is None else u[hi:hi + bi, hj:hj + bj]
     o_ref[0] = out.astype(o_ref.dtype)
 
 
@@ -134,65 +192,74 @@ def stencil3d_stream_kernel(*refs, plan: StencilPlan, bi: int,
     ``refs`` is ``(*views, geom_ref, w_ref, o_ref, scr_ref)``.  Untiled
     (``bj is None``): ``views`` is one identity-mapped block ``(1, bi, N,
     P)`` and the grid's trailing dim runs ``nbi + 1`` steps; j-tiled:
-    ``views`` are the 3 j-neighbour tiles ``(1, bi, bj, P)`` and the grid is
-    ``(B, nbj, nbi + 1)`` with i innermost, so the stream restarts per
-    j-tile.  ``scr_ref`` is VMEM scratch of ``bi + s`` input planes carried
-    across grid steps: planes ``[0, s)`` are the tail of block ``t - 2``
-    (zeros above the domain), planes ``[s, s + bi)`` are block ``t - 1``.
+    ``views`` are the ``2rj + 1`` j-neighbour tiles ``(1, bi, bj, P)`` and
+    the grid is ``(B, nbj, nbi + 1)`` with i innermost, so the stream
+    restarts per j-tile.  ``scr_ref`` is VMEM scratch of ``bi + h`` input
+    planes (``h = ri * sweeps``) carried across grid steps: planes
+    ``[0, h)`` are the tail of block ``t - 2`` (zeros above the domain),
+    planes ``[h, h + bi)`` are block ``t - 1``.
 
     Step 0 primes the window; step ``t >= 1`` assembles the working strip
-    ``[scratch | head s planes of block t]`` (at ``t == nbi`` the clamped
+    ``[scratch | head h planes of block t]`` (at ``t == nbi`` the clamped
     index map re-presents block ``nbi - 1``, whose planes land only at
-    ``gi >= M`` where the interior mask zeroes them -- and an unchanged
-    block index costs no DMA under Pallas revisiting semantics), runs the
-    fused sweeps, writes output block ``t - 1`` via the lagged output index
-    map, and rotates the window.  Net HBM traffic: each input plane read
-    once, each output plane written once.
+    ``gi >= M`` where the domain zeroing / interior mask kills them -- and
+    an unchanged block index costs no DMA under Pallas revisiting
+    semantics), runs the fused sweeps, writes output block ``t - 1`` via
+    the lagged output index map, and rotates the window.  Net HBM traffic:
+    each input plane read once, each output plane written once.
     """
     o_ref, scr_ref = refs[-2], refs[-1]
     geom_ref, w_ref = refs[-4], refs[-3]
     views = refs[:-4]
+    ri, rj, _ = plan.spec.radius
     s = sweeps
+    hi = ri * s
     w = w_ref[...]
     if bj is None:
         t = pl.program_id(1)
         cur = views[0][0]                                  # (bi, N, P)
         j0 = 0
     else:
+        hj = rj * s
         t = pl.program_id(2)
         j_blk = pl.program_id(1)
-        jm, jc, jp = (v[0] for v in views)                 # (bi, bj, P)
-        cur = jnp.concatenate([jm[:, -s:], jc, jp[:, :s]],
-                              axis=1)                      # (bi, bj + 2s, P)
-        j0 = j_blk * bj - s
+        jm, jc, jp = (views[rj + d][0] if hj else views[rj][0]
+                      for d in (-1, 0, 1))
+        cur = _concat_halo(jm, jc, jp, hj, 1)              # (bi, bj+2hj, P)
+        j0 = j_blk * bj - hj
 
     @pl.when(t == 0)
     def _prime():
         # Window for output block 0: block "-1" is above the domain (zeros;
         # they only ever feed rows the interior mask zeroes), block 0 = cur.
-        scr_ref[:s] = jnp.zeros((s,) + cur.shape[1:], cur.dtype)
-        scr_ref[s:] = cur
+        if hi:
+            scr_ref[:hi] = jnp.zeros((hi,) + cur.shape[1:], cur.dtype)
+        scr_ref[hi:] = cur
 
     @pl.when(t > 0)
     def _compute():
-        u = jnp.concatenate([scr_ref[...], cur[:s]],
-                            axis=0).astype(acc_dtype)      # (bi + 2s, ·, P)
-        interior = _volumetric_interior(
-            u.shape, geom_ref[0] + (t - 1) * bi - s, j0, geom_ref[1],
-            n_global)
+        u = (jnp.concatenate([scr_ref[...], cur[:hi]], axis=0) if hi
+             else scr_ref[...]).astype(acc_dtype)          # (bi + 2hi, ., P)
+        gi0 = geom_ref[0] + (t - 1) * bi - hi
+        u = zero_outside_domain(u, gi0, j0, geom_ref[1], n_global,
+                                plan.spec.radius)
+        interior = _volumetric_interior(u.shape, gi0, j0, geom_ref[1],
+                                        n_global)
         u = run_sweeps(u, interior, w, plan, s)
-        out = u[s:s + bi] if bj is None else u[s:s + bi, s:s + bj]
+        out = u[hi:hi + bi] if bj is None else u[hi:hi + bi, hj:hj + bj]
         o_ref[0] = out.astype(o_ref.dtype)
-        # Rotate the window: new tail = last s planes of block t - 1.
-        tail = scr_ref[bi:bi + s]
-        scr_ref[:s] = tail
-        scr_ref[s:] = cur
+        # Rotate the window: new tail = last hi planes of block t - 1.
+        if hi:
+            tail = scr_ref[bi:bi + hi]
+            scr_ref[:hi] = tail
+        scr_ref[hi:] = cur
 
 
 def stencil1d_kernel(a_ref, w_ref, o_ref, *, plan: StencilPlan, sweeps: int,
                      acc_dtype):
     """k-only kernel over ``(block_rows, P)`` blocks; rows are independent,
-    so fused sweeps need no halo at all."""
+    so fused sweeps need no halo at all (shift zero-fill covers any k
+    radius)."""
     u = a_ref[...].astype(acc_dtype)
     w = w_ref[...]
     p = u.shape[-1]

@@ -1,15 +1,16 @@
 """Jitted public entry point: one configurable stencil executor.
 
-``stencil_apply`` runs any registered (or ad-hoc) radius-1 spec over batched,
+``stencil_apply`` runs any registered (or ad-hoc) radius-R spec over batched,
 multi-dtype inputs, with optional fused Jacobi sweeps, via the kernel bodies
 in :mod:`.kernel`.  The spec is compiled to an execution plan (:mod:`.plan`
--- ``auto``/``factored``/``cse``/``direct``) before tracing; the volumetric
-hot path is the *plane-streaming* kernel (``path="stream"``, each input
-plane fetched from HBM once, the halo carried in VMEM scratch across grid
-steps) with the halo-*replicated* kernel kept as a parity escape hatch
-(``path="replicate"``, like ``plan="direct"``); and blocks may be tiled
-along j as well as i when the full N x P slab would not fit VMEM.  See the
-package docstring for the full tour.
+-- a pass pipeline; ``auto``/``factored``/``cse``/``direct`` presets) before
+tracing; the volumetric hot path is the *plane-streaming* kernel
+(``path="stream"``, each input plane fetched from HBM once, the
+``radius * sweeps``-deep halo carried in VMEM scratch across grid steps)
+with the halo-*replicated* kernel kept as a parity escape hatch
+(``path="replicate"``, ``2r + 1`` neighbour views, like ``plan="direct"``);
+and blocks may be tiled along j as well as i when the full N x P slab would
+not fit VMEM.  See the package docstring for the full tour.
 """
 
 from __future__ import annotations
@@ -49,30 +50,31 @@ def resolve_interpret(interpret: Optional[bool]) -> bool:
 
 def _clamped_imap(di: int, dj: int, top_i: int, top_j: int):
     """Index map for the (di, dj) neighbour view of a (1, bi, bj, P) block
-    grid, clamped at the domain edges (the clamped duplicate data only ever
-    lands on rows/columns the global interior mask zeroes)."""
+    grid, clamped at the domain edges (the clamped duplicate data lands on
+    positions the kernel's domain zeroing / interior mask kills)."""
     def f(bb, i, j):
-        ii = i if di == 0 else (jnp.maximum(i - 1, 0) if di < 0
-                                else jnp.minimum(i + 1, top_i))
-        jj = j if dj == 0 else (jnp.maximum(j - 1, 0) if dj < 0
-                                else jnp.minimum(j + 1, top_j))
+        ii = i if di == 0 else jnp.clip(i + di, 0, top_i)
+        jj = j if dj == 0 else jnp.clip(j + dj, 0, top_j)
         return (bb, ii, jj, 0)
     return f
 
 
 def _validate_blocks(m: int, n: int, bi: int, bj: Optional[int],
-                     sweeps: int) -> None:
+                     sweeps: int, radius) -> None:
+    ri, rj, _ = radius
     if m % bi != 0:
         raise ValueError(f"block size {bi} must divide M={m}")
-    if sweeps > bi:
-        raise ValueError(f"fused sweeps={sweeps} exceed the +-1-block halo; "
-                         f"need block_i >= sweeps (block_i={bi})")
+    if ri * sweeps > bi:
+        raise ValueError(f"fused sweeps={sweeps} exceed the carried halo; "
+                         f"need block_i >= sweeps*r_i "
+                         f"(block_i={bi}, r_i={ri})")
     if bj is not None:
         if n % bj != 0:
             raise ValueError(f"block size {bj} must divide N={n}")
-        if sweeps > bj:
-            raise ValueError(f"fused sweeps={sweeps} exceed the +-1-block "
-                             f"halo; need block_j >= sweeps (block_j={bj})")
+        if rj * sweeps > bj:
+            raise ValueError(f"fused sweeps={sweeps} exceed the carried "
+                             f"halo; need block_j >= sweeps*r_j "
+                             f"(block_j={bj}, r_j={rj})")
 
 
 def _call_3d_stream(a4: jax.Array, wf: jax.Array, geom: jax.Array,
@@ -80,17 +82,18 @@ def _call_3d_stream(a4: jax.Array, wf: jax.Array, geom: jax.Array,
                     sweeps: int, interpret: bool) -> jax.Array:
     """Wire the plane-streaming kernel: one pass over the i-blocks with one
     extra grid step, a lagged output index map, and a VMEM scratch window of
-    ``bi + sweeps`` input planes carried across steps.  Untiled, the input
-    is a single identity-mapped operand -- each plane is fetched from HBM
-    exactly once per call (the final clamped step re-presents the last
-    block, which Pallas revisiting semantics keep DMA-free); j-tiled, the 3
-    j-neighbour views stream i within each j-tile (3 fetches per plane vs
-    the replicated path's 9)."""
+    ``bi + ri * sweeps`` input planes carried across steps.  Untiled, the
+    input is a single identity-mapped operand -- each plane is fetched from
+    HBM exactly once per call (the final clamped step re-presents the last
+    block, which Pallas revisiting semantics keep DMA-free); j-tiled, the
+    ``2rj + 1`` j-neighbour views stream i within each j-tile (``2rj + 1``
+    fetches per plane vs the replicated path's ``(2ri+1)(2rj+1)``)."""
     b, m, n, p = a4.shape
     nbi = m // bi
-    s = sweeps
+    ri, rj, _ = plan.spec.radius
+    hi = ri * sweeps
     kern = functools.partial(stencil3d_stream_kernel, plan=plan, bi=bi,
-                             bj=bj, n_global=n, sweeps=s,
+                             bj=bj, n_global=n, sweeps=sweeps,
                              acc_dtype=acc_dtype_for(a4.dtype))
     if bj is None:
         block = (1, bi, n, p)
@@ -108,21 +111,28 @@ def _call_3d_stream(a4: jax.Array, wf: jax.Array, geom: jax.Array,
             out_specs=pl.BlockSpec(
                 block, lambda bb, t: (bb, jnp.maximum(t - 1, 0), 0, 0)),
             out_shape=jax.ShapeDtypeStruct(a4.shape, a4.dtype),
-            scratch_shapes=[pltpu.VMEM((bi + s, n, p), a4.dtype)],
+            scratch_shapes=[pltpu.VMEM((bi + hi, n, p), a4.dtype)],
             interpret=interpret,
         )(a4, geom, wf)
 
     nbj = n // bj
+    hj = rj * sweeps
     block = (1, bi, bj, p)
 
     def jmap(dj: int):
         def f(bb, j, t):
-            jj = j if dj == 0 else (jnp.maximum(j - 1, 0) if dj < 0
-                                    else jnp.minimum(j + 1, nbj - 1))
+            jj = j if dj == 0 else jnp.clip(j + dj, 0, nbj - 1)
             return (bb, jnp.minimum(t, nbi - 1), jj, 0)
         return f
 
-    in_specs = [pl.BlockSpec(block, jmap(dj)) for dj in (-1, 0, 1)]
+    # The full 2rj+1 j-neighbourhood is staged (the cost model's canonical
+    # j-tiled streaming traffic, (2rj+2) bytes/pt); with bj >= rj*sweeps
+    # validated, the kernel body only reads the +-1 tiles' halo slices --
+    # narrowing the staging to match is a possible future optimization that
+    # would also have to move bytes_per_point/_views off their
+    # radius-canonical accounting.
+    in_specs = [pl.BlockSpec(block, jmap(dj))
+                for dj in range(-rj, rj + 1)]
     in_specs += [pl.BlockSpec(geom.shape, lambda bb, j, t: (0,)),
                  pl.BlockSpec(wf.shape, lambda bb, j, t: (0,))]
     return pl.pallas_call(
@@ -132,9 +142,9 @@ def _call_3d_stream(a4: jax.Array, wf: jax.Array, geom: jax.Array,
         out_specs=pl.BlockSpec(
             block, lambda bb, j, t: (bb, jnp.maximum(t - 1, 0), j, 0)),
         out_shape=jax.ShapeDtypeStruct(a4.shape, a4.dtype),
-        scratch_shapes=[pltpu.VMEM((bi + s, bj + 2 * s, p), a4.dtype)],
+        scratch_shapes=[pltpu.VMEM((bi + hi, bj + 2 * hj, p), a4.dtype)],
         interpret=interpret,
-    )(a4, a4, a4, geom, wf)
+    )(*([a4] * (2 * rj + 1)), geom, wf)
 
 
 def call_3d(a4: jax.Array, wf: jax.Array, geom: jax.Array, plan: StencilPlan,
@@ -145,33 +155,41 @@ def call_3d(a4: jax.Array, wf: jax.Array, geom: jax.Array, plan: StencilPlan,
     ``path="stream"`` (default) walks the i-blocks in order and carries the
     halo in VMEM scratch -- each input plane is fetched once.
     ``path="replicate"`` is the stateless parity escape hatch: the i-halo
-    comes from passing ``a4`` three times under +-1-shifted (clamped) block
-    index maps (untiled) or the full 3x3 neighbour views (j-tiled).  Both
-    paths share block geometry: untiled blocks are ``(1, bi, N, P)``;
-    j-tiled blocks ``(1, bi, bj, P)``, so the working slab never exceeds
-    ``(bi + 2s)(bj + 2s)P`` whatever N is.  ``geom`` = (global row offset,
-    global M) int32.
+    comes from passing ``a4`` ``2ri + 1`` times under block-shifted
+    (clamped) index maps (untiled) or the full ``(2ri+1) x (2rj+1)``
+    neighbour views (j-tiled).  Both paths share block geometry: untiled
+    blocks are ``(1, bi, N, P)``; j-tiled blocks ``(1, bi, bj, P)``, so the
+    working slab never exceeds ``(bi + 2*hi)(bj + 2*hj)P`` whatever N is
+    (``h = radius * sweeps``).  ``geom`` = (global row offset, global M)
+    int32.
     """
     b, m, n, p = a4.shape
-    _validate_blocks(m, n, bi, bj, sweeps)
+    _validate_blocks(m, n, bi, bj, sweeps, plan.spec.radius)
     if path == "stream":
         return _call_3d_stream(a4, wf, geom, plan, bi, bj, sweeps, interpret)
     if path != "replicate":
         raise ValueError(f"unknown path {path!r}; expected 'stream' or "
                          f"'replicate'")
     nbi = m // bi
+    ri, rj, _ = plan.spec.radius
     kern = functools.partial(stencil3d_kernel, plan=plan, bi=bi, bj=bj,
                              n_global=n, sweeps=sweeps,
                              acc_dtype=acc_dtype_for(a4.dtype))
     if bj is None:
         block = (1, bi, n, p)
-        in_specs = [
-            pl.BlockSpec(block,
-                         lambda bb, i: (bb, jnp.maximum(i - 1, 0), 0, 0)),
-            pl.BlockSpec(block, lambda bb, i: (bb, i, 0, 0)),
-            pl.BlockSpec(block, functools.partial(
-                lambda bb, i, top: (bb, jnp.minimum(i + 1, top), 0, 0),
-                top=nbi - 1)),
+
+        def imap_i(di: int):
+            def f(bb, i):
+                ii = i if di == 0 else jnp.clip(i + di, 0, nbi - 1)
+                return (bb, ii, 0, 0)
+            return f
+
+        # 2ri+1 staged views = the replicated path's canonical per-radius
+        # cost ((2ri+2) bytes/pt -- what makes the stream-vs-replicate race
+        # honest); only the +-1 views' halo slices are read by the body.
+        in_specs = [pl.BlockSpec(block, imap_i(di))
+                    for di in range(-ri, ri + 1)]
+        in_specs += [
             pl.BlockSpec(geom.shape, lambda bb, i: (0,)),
             pl.BlockSpec(wf.shape, lambda bb, i: (0,)),
         ]
@@ -182,14 +200,15 @@ def call_3d(a4: jax.Array, wf: jax.Array, geom: jax.Array, plan: StencilPlan,
             out_specs=pl.BlockSpec(block, lambda bb, i: (bb, i, 0, 0)),
             out_shape=jax.ShapeDtypeStruct(a4.shape, a4.dtype),
             interpret=interpret,
-        )(a4, a4, a4, geom, wf)
+        )(*([a4] * (2 * ri + 1)), geom, wf)
 
     nbj = n // bj
     block = (1, bi, bj, p)
     in_specs = [pl.BlockSpec(block, _clamped_imap(di, dj, nbi - 1, nbj - 1))
-                for di in (-1, 0, 1) for dj in (-1, 0, 1)]
+                for di in range(-ri, ri + 1) for dj in range(-rj, rj + 1)]
     in_specs += [pl.BlockSpec(geom.shape, lambda bb, i, j: (0,)),
                  pl.BlockSpec(wf.shape, lambda bb, i, j: (0,))]
+    n_views = (2 * ri + 1) * (2 * rj + 1)
     return pl.pallas_call(
         kern,
         grid=(b, nbi, nbj),
@@ -197,7 +216,7 @@ def call_3d(a4: jax.Array, wf: jax.Array, geom: jax.Array, plan: StencilPlan,
         out_specs=pl.BlockSpec(block, lambda bb, i, j: (bb, i, j, 0)),
         out_shape=jax.ShapeDtypeStruct(a4.shape, a4.dtype),
         interpret=interpret,
-    )(*([a4] * 9), geom, wf)
+    )(*([a4] * n_views), geom, wf)
 
 
 def _call_1d(a2: jax.Array, wf: jax.Array, plan: StencilPlan, block_rows: int,
@@ -239,14 +258,14 @@ def stencil_apply(a: jax.Array, w: jax.Array,
       see :mod:`.plan` on fma contraction);
     * ``path`` picks the data-movement strategy for volumetric specs:
       ``"stream"`` fetches each input plane from HBM once and carries the
-      halo in VMEM scratch across grid steps (the paper's plane-streaming
-      ideal, ~2 transfers per point); ``"replicate"`` re-fetches the +-1
-      halo neighbours per block (the parity escape hatch).  ``"auto"``
-      streams whenever feasible, falling back to the replicated roofline
-      choice per shape;
+      ``radius * sweeps``-deep halo in VMEM scratch across grid steps (the
+      paper's plane-streaming ideal, ~2 transfers per point at any radius);
+      ``"replicate"`` re-fetches the ``2r + 1`` halo neighbours per block
+      (the parity escape hatch).  ``"auto"`` streams whenever feasible,
+      falling back to the replicated roofline choice per shape;
     * ``block_i``/``block_j`` (i-block rows / j-tile columns) default to the
-      plan- and path-aware cost model, which engages j-tiling only when the
-      full N x P slab would blow the VMEM budget;
+      plan-, path-, and radius-aware cost model, which engages j-tiling
+      only when the full N x P slab would blow the VMEM budget;
     * ``interpret=None`` (default) interprets the kernel only when no
       compiled Pallas backend exists for the platform (CPU/CI) and compiles
       on TPU (the kernels are Mosaic-TPU-shaped; GPU stays interpreted); pass an explicit bool to force either mode.

@@ -1,0 +1,76 @@
+"""Plan compiler: spec -> pass pipeline -> :class:`StencilPlan`.
+
+The package splits the former monolithic ``plan.py`` into the IR
+(:mod:`.ir`: ops, liveness, the trace-time interpreter) and the rewrite
+passes (:mod:`.passes`: ``build_direct`` -> ``cse`` / ``mirror_factor`` ->
+``order_ops``).  :func:`compile_plan` resolves a plan *kind* to its pass
+preset and runs the pipeline, memoized on the canonical (spec, kind) pair.
+
+Three plan kinds (now pass-list presets, ``PASS_PRESETS``):
+
+``direct``
+    ``[build_direct]`` -- the naive schedule, kept as an escape hatch for
+    parity testing (54 shifts + 53 flop-ops for stencil27).
+
+``cse``
+    ``[build_direct, cse, order_ops]`` -- common-subexpression-eliminated
+    schedule for arbitrary masks (10 + 53 for stencil27).
+
+``factored``
+    ``[build_direct, mirror_factor, order_ops]`` -- the paper's partial-sum
+    factorization for mirror-symmetric specs at any radius (8 + 19 for
+    stencil27, 12 + 19 for the radius-2 star13, 20 + 63 for box125).
+
+``auto`` resolves to ``factored`` for mirror-symmetric specs and ``cse``
+otherwise, *before* the memo lookup, so every alias spelling shares one
+compiled plan object.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple, Union
+
+from ..spec import StencilSpec, get_stencil
+from .ir import (Builder, PlanOp, StencilPlan, execute_plan,  # noqa: F401
+                 op_sources, peak_live, renumber, shift_slice)
+from .passes import (PASS_PRESETS, build_direct, cse,  # noqa: F401
+                     mirror_factor, mirror_symmetric, order_ops, run_passes)
+
+PLAN_KINDS = ("auto", "direct", "cse", "factored")
+
+
+@functools.lru_cache(maxsize=256)
+def _compile_plan_cached(spec: StencilSpec, kind: str) -> StencilPlan:
+    """The memoized synthesis step, keyed on the *canonical* (spec, resolved
+    plan kind) pair -- a frozen spec hashes on its name + tap/weight-index
+    tuples + radius, so repeated eager/un-jitted calls, the autotuner, and
+    equal-valued ad-hoc ``spec_from_mask`` specs all share one compiled
+    schedule instead of re-running the pass pipeline per call."""
+    return run_passes(spec, PASS_PRESETS[kind])
+
+
+def compile_plan(spec: Union[str, int, StencilSpec],
+                 plan: str = "auto") -> StencilPlan:
+    """Compile ``spec`` into a :class:`StencilPlan` (memoized).
+
+    ``plan="auto"`` picks ``factored`` for mirror-symmetric specs (stencil3,
+    stencil7, stencil27, star13, box125, symmetric masks) and ``cse``
+    otherwise; ``plan="direct"`` is the naive parity escape hatch.  The spec
+    and the plan kind are canonicalized *before* the cache lookup, so
+    ``compile_plan("27")``, ``compile_plan("stencil27")`` and
+    ``compile_plan(get_stencil("stencil27"))`` -- and ``plan="auto"`` vs its
+    resolved kind -- return the identical plan object.
+    """
+    spec = get_stencil(spec)
+    if plan not in PLAN_KINDS:
+        raise ValueError(f"unknown plan {plan!r}; expected one of {PLAN_KINDS}")
+    kind = plan
+    if kind == "auto":
+        kind = "factored" if mirror_symmetric(spec) else "cse"
+    if kind == "factored" and not mirror_symmetric(spec):
+        raise ValueError(
+            f"{spec.name}: factored plan needs a mirror-symmetric tap set "
+            f"(closed under per-axis sign flips, weights on |offsets|); "
+            f"use plan='cse' or 'auto'")
+    return _compile_plan_cached(spec, kind)

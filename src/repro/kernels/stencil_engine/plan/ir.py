@@ -1,0 +1,221 @@
+"""Plan IR: the tiny SSA program a spec compiles to, plus its analyses.
+
+A :class:`StencilPlan` is an explicit tap schedule -- shift/scale/add/fma ops
+in SSA form -- *compiled before tracing* (by the pass pipeline in
+:mod:`.passes`) and then interpreted at trace time by both the Pallas kernel
+and the jnp reference.  Because the two executors walk the identical op list,
+the f64 paths stay bit-for-bit equal, and the plan's static ``shifts`` /
+``flops`` / ``peak_live`` counts feed the block-size cost model instead of a
+blind ``2 * taps`` estimate.
+
+Shifts are single-axis ops of any magnitude up to the spec's per-axis radius,
+with zero fill (static slices on the halo-extended block -- no wrap-around
+values are ever computed then masked; the vacated positions only ever land on
+rows the Dirichlet mask zeroes).
+
+Determinism, precisely: a plan fixes the *mathematical* op sequence, so on
+exact arithmetic (integer-valued data and weights within the mantissa) every
+plan kind, blocking, and tiling is bit-identical -- the property tests
+assert this.  In floating point, XLA/LLVM may contract a ``w * x + y`` into
+an fma in one compiled program and not another (the choice follows fusion
+shape, survives ``optimization_barrier`` and bitcast fences, and is *not*
+controllable from JAX), so cross-*program* bit-equality -- e.g. j-tiled vs
+untiled -- is only a per-op <= 1-ulp agreement in general.  Same-plan
+kernel-vs-reference f64 parity for the blessed configurations (the engine's
+reference path, asserted in tier-1) has been bit-exact in practice; the
+builders keep products feeding their adds directly (scales are hoisted past
+shifts: ``shift(w * x) -> w * shift(x)``, identical op counts) to keep the
+contraction pattern as uniform as possible across programs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..spec import StencilSpec
+
+Offset = Tuple[int, int, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanOp:
+    """One SSA op.  Value ids: 0 is the input ``u``; op ``k`` defines id
+    ``k + 1``.  ``shift``: value ``a`` moved by ``off`` (exactly one nonzero
+    component, ``|off| <= radius`` on that axis, ``out[x] = in[x + off]``,
+    zero fill).  ``scale``: ``w[w_idx] * a``.  ``add``: ``a + b``.  ``fma``:
+    ``b + w[w_idx] * a``."""
+
+    kind: str                     # "shift" | "scale" | "add" | "fma"
+    a: int
+    b: int = -1
+    off: Offset = (0, 0, 0)
+    w_idx: int = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilPlan:
+    """A compiled execution schedule for one spec.
+
+    ``out`` is the id of the final value (-1 for an empty tap list, which
+    executes as zeros).  ``passes`` records the pass pipeline that produced
+    the schedule (the BENCH ``pass_list`` column).  ``shifts``/``flops`` are
+    the static op counts the cost model consumes: each shift is one
+    full-block lane/sublane move, and flops count multiplies and adds (an
+    fma is two).  ``peak_live`` is the maximum number of simultaneously live
+    SSA values while executing the schedule in order -- the paper's
+    register-pressure constraint recast as the VMEM working-set the executor
+    carries.
+    """
+
+    spec: StencilSpec
+    kind: str                     # "direct" | "cse" | "factored"
+    ops: Tuple[PlanOp, ...]
+    out: int
+    passes: Tuple[str, ...] = ()
+
+    @property
+    def shifts(self) -> int:
+        return sum(1 for op in self.ops if op.kind == "shift")
+
+    @property
+    def flops(self) -> int:
+        return sum({"scale": 1, "add": 1, "fma": 2}.get(op.kind, 0)
+                   for op in self.ops)
+
+    @property
+    def peak_live(self) -> int:
+        return peak_live(self)
+
+    def describe(self) -> Dict[str, object]:
+        """Machine-readable op counts (benchmark / JSON artifact form)."""
+        return {"taps": self.spec.taps, "shifts": self.shifts,
+                "flops": self.flops, "ops": len(self.ops),
+                "peak_live": self.peak_live,
+                "radius": list(self.spec.radius),
+                "pass_list": list(self.passes)}
+
+
+class Builder:
+    """Emit helper: returns the SSA id of each new value."""
+
+    def __init__(self):
+        self.ops: List[PlanOp] = []
+
+    def _emit(self, op: PlanOp) -> int:
+        self.ops.append(op)
+        return len(self.ops)          # u is id 0; op k defines id k + 1
+
+    def shift(self, a: int, axis: int, d: int) -> int:
+        off = [0, 0, 0]
+        off[axis] = d
+        return self._emit(PlanOp("shift", a, off=tuple(off)))
+
+    def scale(self, w_idx: int, a: int) -> int:
+        return self._emit(PlanOp("scale", a, w_idx=w_idx))
+
+    def add(self, a: int, b: int) -> int:
+        return self._emit(PlanOp("add", a, b))
+
+    def fma(self, w_idx: int, a: int, acc: int) -> int:
+        return self._emit(PlanOp("fma", a, acc, w_idx=w_idx))
+
+    def acc(self, w_idx: int, a: int, acc: Optional[int]) -> int:
+        return self.scale(w_idx, a) if acc is None else self.fma(w_idx, a, acc)
+
+
+def op_sources(op: PlanOp) -> Tuple[int, ...]:
+    """The SSA value ids an op reads (deduplicated, order preserved)."""
+    srcs = [op.a]
+    if op.b >= 0 and op.b != op.a:
+        srcs.append(op.b)
+    return tuple(srcs)
+
+
+def peak_live(plan: StencilPlan) -> int:
+    """Peak number of simultaneously live SSA values over the schedule.
+
+    A value is live from its definition (the input ``u`` from the start)
+    until its last use; the output stays live through the end.  This is the
+    sequential-execution working set -- what ``execute_plan`` actually keeps
+    resident -- and the invariant the ``order_ops`` pass must never increase.
+    """
+    if not plan.ops:
+        return 1 if plan.out == 0 else 0
+    last_use: Dict[int, int] = {}
+    for i, op in enumerate(plan.ops):
+        for v in op_sources(op):
+            last_use[v] = i
+    if plan.out >= 0:
+        last_use[plan.out] = len(plan.ops)
+    live = 1 if 0 in last_use else 0          # the input u
+    peak = live
+    for i, op in enumerate(plan.ops):
+        live += 1                              # op i defines value i + 1
+        peak = max(peak, live)
+        for v in set(op_sources(op)):
+            if last_use.get(v, -1) == i:
+                live -= 1                      # last use: dead after op i
+        if (i + 1) not in last_use:
+            live -= 1                          # defined but never consumed
+    return peak
+
+
+def renumber(ops: List[PlanOp], order: List[int], out: int
+             ) -> Tuple[Tuple[PlanOp, ...], int]:
+    """Re-emit ``ops`` in ``order`` (a topological permutation of op
+    indices) with SSA ids renumbered to the new positions."""
+    newid = {0: 0}
+    new_ops: List[PlanOp] = []
+    for pos, old in enumerate(order):
+        op = ops[old]
+        new_ops.append(dataclasses.replace(
+            op, a=newid[op.a], b=newid[op.b] if op.b >= 0 else -1))
+        newid[old + 1] = pos + 1
+    return tuple(new_ops), (newid[out] if out >= 0 else -1)
+
+
+def shift_slice(t: jax.Array, off: Offset) -> jax.Array:
+    """``out[x] = t[x + off]`` along one trailing axis, zero fill -- a static
+    slice plus an edge pad, never a wrap-around roll.  ``off`` indexes the
+    (i, j, k) axes as the trailing three dims (k-only specs use only the
+    last); the single nonzero component may have any magnitude up to the
+    spec radius."""
+    (idx, d), = [(i, o) for i, o in enumerate(off) if o]
+    axis = t.ndim - 3 + idx
+    k = abs(d)
+    if k >= t.shape[axis]:
+        return jnp.zeros_like(t)
+    src = [slice(None)] * t.ndim
+    src[axis] = slice(k, None) if d > 0 else slice(0, -k)
+    pad_shape = list(t.shape)
+    pad_shape[axis] = k
+    pad = jnp.zeros(pad_shape, t.dtype)
+    body = t[tuple(src)]
+    return jnp.concatenate([body, pad] if d > 0 else [pad, body], axis=axis)
+
+
+def execute_plan(cplan: StencilPlan, u: jax.Array, w: jax.Array,
+                 shift=shift_slice) -> jax.Array:
+    """Interpret the plan at trace time.  ``u`` must already carry the
+    accumulation dtype; ``w`` is the canonical flat weight vector in the same
+    dtype.  Both the Pallas kernel and the jnp reference call this -- one op
+    walk, identical arithmetic (see the module docstring for what that
+    guarantees bitwise)."""
+    if cplan.out < 0:
+        return jnp.zeros_like(u)
+    vals = [u]
+    for op in cplan.ops:
+        if op.kind == "shift":
+            v = shift(vals[op.a], op.off)
+        elif op.kind == "scale":
+            v = w[op.w_idx] * vals[op.a]
+        elif op.kind == "add":
+            v = vals[op.a] + vals[op.b]
+        else:                                     # fma
+            v = vals[op.b] + w[op.w_idx] * vals[op.a]
+        vals.append(v)
+    return vals[cplan.out]

@@ -2,8 +2,9 @@
 
 The partition plan comes from ``repro.sharding.planner.stencil_halo_sharding``
 (divisibility and halo-depth checks, PlanNote audit trail).  Each shard owns a
-contiguous slab of i-rows, trades ``sweeps`` halo rows with its neighbours
-via ``lax.ppermute`` (edge shards receive zeros -- the Dirichlet boundary),
+contiguous slab of i-rows, trades ``radius * sweeps`` halo rows with its
+neighbours via ``lax.ppermute`` (edge shards receive zeros -- the Dirichlet
+boundary),
 and then runs the *same* fused plan-compiled Pallas kernel as the
 single-device path -- by default the plane-streaming body, so the shard_map
 body also fetches each local plane from HBM exactly once and carries the
@@ -130,8 +131,15 @@ def stencil_sharded(a: jax.Array, w: jax.Array,
     if mesh is None:
         mesh = jax.make_mesh((jax.device_count(),), (axis,))
     m, n, p = a.shape[-3:]
+    ri = spec.radius[0]
     if shard_plan is None:
-        shard_plan = stencil_halo_sharding(m, mesh, axis=axis, sweeps=sweeps)
+        shard_plan = stencil_halo_sharding(m, mesh, axis=axis, sweeps=sweeps,
+                                           radius=ri)
+    if shard_plan.n_shards > 1 and shard_plan.halo < ri * sweeps:
+        raise ValueError(
+            f"shard_plan.halo={shard_plan.halo} rows/side cannot cover "
+            f"radius {ri} x sweeps {sweeps} = {ri * sweeps}; re-plan with "
+            f"stencil_halo_sharding(..., sweeps={sweeps}, radius={ri})")
     if shard_plan.n_shards <= 1:
         # An explicit block_i is sized for the halo-extended local slab; it
         # generally doesn't divide M, so let the cost model choose here --
@@ -148,8 +156,8 @@ def stencil_sharded(a: jax.Array, w: jax.Array,
     if block_i is not None and m_ext % block_i != 0:
         raise ValueError(
             f"sharded block_i={block_i} must divide the halo-extended local "
-            f"slab (M/n_shards + 2*sweeps = {m_loc} + {2 * h} = {m_ext}); "
-            f"omit block_i to let the cost model choose")
+            f"slab (M/n_shards + 2*radius*sweeps = {m_loc} + {2 * h} = "
+            f"{m_ext}); omit block_i to let the cost model choose")
     bi, bj, rpath = block_i, block_j, path
     if bi is None:
         rpath, bi, bj_auto = autotune_engine(m_ext, n, p, a.dtype.itemsize,

@@ -1,14 +1,16 @@
-"""Stencil specifications: radius-1 coefficient masks + the named registry.
+"""Stencil specifications: radius-R coefficient masks + the named registry.
 
-A :class:`StencilSpec` describes a radius-1 stencil as a list of taps --
-``(di, dj, dk)`` offsets in lexicographic order -- each tagged with an index
-into a flat vector of unique coefficients.  The paper's three streaming
-kernels (3-, 7-, 27-point, sect. 3.1) are three entries in the registry; any
-other radius-1 operator is one :func:`spec_from_mask` call away.  The spec is
-a frozen (hashable) dataclass so it can ride through ``jax.jit`` as a static
-argument, and both the Pallas kernel body and the jnp reference expand the
-same tap list, in the same order -- which is what makes the f64 paths agree
-bit-for-bit.
+A :class:`StencilSpec` describes a stencil as a list of taps -- ``(di, dj,
+dk)`` offsets in lexicographic order -- each tagged with an index into a flat
+vector of unique coefficients, plus a per-axis ``radius`` bounding the
+offsets.  The paper's three streaming kernels (3-, 7-, 27-point, sect. 3.1)
+are radius-1 entries in the registry; high-order operators (the 4th-order
+13-point star, the 5x5x5 box) are radius-2 entries, and any other operator is
+one :func:`spec_from_mask` call away from an odd-shaped coefficient mask.
+The spec is a frozen (hashable) dataclass so it can ride through ``jax.jit``
+as a static argument, and both the Pallas kernel body and the jnp reference
+expand the same compiled plan, in the same order -- which is what makes the
+f64 paths agree bit-for-bit.
 """
 
 from __future__ import annotations
@@ -21,15 +23,21 @@ import jax.numpy as jnp
 import numpy as np
 
 Offset = Tuple[int, int, int]
+Radius = Tuple[int, int, int]
 
 
 @dataclasses.dataclass(frozen=True)
 class StencilSpec:
-    """A radius-1 stencil: taps in lexicographic ``(di, dj, dk)`` order.
+    """A radius-``(ri, rj, rk)`` stencil: taps in lexicographic ``(di, dj,
+    dk)`` order.
 
     ``ndim == 3`` operates on ``(..., M, N, P)`` volumes with an i-direction
     halo; ``ndim == 1`` has k-only taps and operates on ``(..., P)`` rows
     (every leading dim is an independent row -- the paper's 3-point kernel).
+    ``radius`` bounds per-axis offsets (``|di| <= ri`` etc.) and drives every
+    geometry decision downstream: halo width is ``radius * sweeps``, the
+    replicated path stages ``2r + 1`` neighbour views, the streaming scratch
+    window carries ``block_i + ri * sweeps`` planes.
     """
 
     name: str
@@ -38,6 +46,7 @@ class StencilSpec:
     w_index: Tuple[int, ...]         # per-tap index into the flat weights
     n_weights: int                   # number of unique coefficients
     w_shape: Tuple[int, ...]         # user-facing weight array shape
+    radius: Radius = (1, 1, 1)       # per-axis (ri, rj, rk) offset bound
 
     @property
     def taps(self) -> int:
@@ -57,11 +66,16 @@ class StencilSpec:
             raise ValueError(f"ndim must be 1 or 3, got {self.ndim}")
         if len(self.offsets) != len(self.w_index):
             raise ValueError("offsets and w_index must be parallel")
+        if (len(self.radius) != 3
+                or any(r < 0 for r in self.radius)):
+            raise ValueError(f"radius must be 3 non-negative ints, got "
+                             f"{self.radius}")
         if self.ndim == 1 and any(di or dj for di, dj, _ in self.offsets):
             raise ValueError("ndim=1 specs may only carry k-direction taps")
         for o in self.offsets:
-            if any(abs(d) > 1 for d in o):
-                raise ValueError(f"radius-1 engine: offset {o} out of range")
+            if any(abs(d) > r for d, r in zip(o, self.radius)):
+                raise ValueError(
+                    f"offset {o} out of range for radius {self.radius}")
         if sorted(self.offsets) != list(self.offsets):
             raise ValueError("offsets must be in lexicographic order")
         if self.w_index and max(self.w_index) >= self.n_weights:
@@ -92,21 +106,27 @@ def list_stencils() -> Dict[str, StencilSpec]:
 
 
 def spec_from_mask(name: str, mask, ndim: int = 3) -> StencilSpec:
-    """Build a spec from a ``(3, 3, 3)`` coefficient-index mask.
+    """Build a spec from an odd-shaped coefficient-index mask.
 
-    ``mask[di+1, dj+1, dk+1]`` is the weight index of the tap at offset
-    ``(di, dj, dk)``; negative entries mean "no tap".  A boolean mask assigns
-    every active tap its own weight in lexicographic order.
+    ``mask`` has shape ``(2*ri + 1, 2*rj + 1, 2*rk + 1)`` (every extent odd;
+    ``(3, 3, 3)`` is the radius-1 case) and ``mask[di + ri, dj + rj, dk +
+    rk]`` is the weight index of the tap at offset ``(di, dj, dk)``; negative
+    entries mean "no tap".  A boolean mask assigns every active tap its own
+    weight in lexicographic order.  Integer masks must use the contiguous
+    weight indices ``0..k-1`` -- a gap (e.g. ``{0, 2}``) would silently
+    create a dangling unused weight, so it is rejected.
     """
     m = np.asarray(mask)
-    if m.shape != (3, 3, 3):
-        raise ValueError(f"mask must be (3, 3, 3), got {m.shape}")
+    if m.ndim != 3 or any(s < 1 or s % 2 == 0 for s in m.shape):
+        raise ValueError(f"mask must be 3-D with odd extents "
+                         f"(2r+1 per axis), got {m.shape}")
+    ri, rj, rk = (s // 2 for s in m.shape)
     offsets, w_index = [], []
     next_w = 0
-    for di in (-1, 0, 1):
-        for dj in (-1, 0, 1):
-            for dk in (-1, 0, 1):
-                v = m[di + 1, dj + 1, dk + 1]
+    for di in range(-ri, ri + 1):
+        for dj in range(-rj, rj + 1):
+            for dk in range(-rk, rk + 1):
+                v = m[di + ri, dj + rj, dk + rk]
                 if m.dtype == bool:
                     if not v:
                         continue
@@ -118,10 +138,20 @@ def spec_from_mask(name: str, mask, ndim: int = 3) -> StencilSpec:
                     idx = int(v)
                 offsets.append((di, dj, dk))
                 w_index.append(idx)
-    n_w = (next_w if m.dtype == bool
-           else (max(w_index) + 1 if w_index else 0))
+    if m.dtype == bool:
+        n_w = next_w
+    else:
+        used = sorted(set(w_index))
+        if used and used != list(range(len(used))):
+            missing = sorted(set(range(used[-1] + 1)) - set(used))
+            raise ValueError(
+                f"{name}: weight indices {used} skip {missing}; indices "
+                f"must be contiguous 0..k-1 (a gap would leave an unused "
+                f"dangling weight)")
+        n_w = used[-1] + 1 if used else 0
     return StencilSpec(name=name, ndim=ndim, offsets=tuple(offsets),
-                      w_index=tuple(w_index), n_weights=n_w, w_shape=(n_w,))
+                       w_index=tuple(w_index), n_weights=n_w, w_shape=(n_w,),
+                       radius=(ri, rj, rk))
 
 
 def _builtin_specs() -> None:
@@ -151,6 +181,34 @@ def _builtin_specs() -> None:
         name="stencil27", ndim=3, offsets=tuple(offs), w_index=tuple(widx),
         n_weights=8, w_shape=(2, 2, 2)),
         aliases=("27",))
+    # star13: radius-2 axis star (the 4th-order Laplacian shape) -- one tap
+    # at distance 1 and 2 along each axis plus the centre, weights shared per
+    # distance: w = (w_center, w_dist1, w_dist2).
+    offs, widx = [], []
+    for di in range(-2, 3):
+        for dj in range(-2, 3):
+            for dk in range(-2, 3):
+                nz = [abs(d) for d in (di, dj, dk) if d]
+                if len(nz) > 1 or (nz and nz[0] > 2):
+                    continue
+                offs.append((di, dj, dk))
+                widx.append(nz[0] if nz else 0)
+    register_stencil(StencilSpec(
+        name="star13", ndim=3, offsets=tuple(offs), w_index=tuple(widx),
+        n_weights=3, w_shape=(3,), radius=(2, 2, 2)),
+        aliases=("13",))
+    # box125: the full 5x5x5 box, w[|di|, |dj|, |dk|] with shape (3, 3, 3)
+    # (27 unique coefficients) -- the radius-2 analogue of stencil27.
+    offs, widx = [], []
+    for di in range(-2, 3):
+        for dj in range(-2, 3):
+            for dk in range(-2, 3):
+                offs.append((di, dj, dk))
+                widx.append(9 * abs(di) + 3 * abs(dj) + abs(dk))
+    register_stencil(StencilSpec(
+        name="box125", ndim=3, offsets=tuple(offs), w_index=tuple(widx),
+        n_weights=27, w_shape=(3, 3, 3), radius=(2, 2, 2)),
+        aliases=("125",))
 
 
 _builtin_specs()

@@ -122,10 +122,14 @@ def attention(p: Params, x: jax.Array, cfg: ArchConfig,
     new_cache = None
     if cache is not None:
         ck, cv = cache
+        # start indices must share one dtype; literal zeros weak-type to
+        # int64 under JAX_ENABLE_X64, so mint them in cache_pos's dtype
+        pos = jnp.asarray(cache_pos)
+        zero = jnp.zeros((), pos.dtype)
         ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
-                                          (0, cache_pos, 0, 0))
+                                          (zero, pos, zero, zero))
         cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
-                                          (0, cache_pos, 0, 0))
+                                          (zero, pos, zero, zero))
         new_cache = (ck, cv)
         k_all, v_all = ck, cv
         q_offset = cache_pos

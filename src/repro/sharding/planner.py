@@ -179,26 +179,29 @@ class StencilShardPlan:
     reason is recorded as a PlanNote, Table-2 style."""
     axis: str
     n_shards: int
-    halo: int                 # rows exchanged per side == fused sweep depth
+    halo: int                 # rows exchanged per side == radius * sweeps
     local_rows: int
     spec: Any                 # PartitionSpec for a (B, M, N, P) operand
     notes: List[PlanNote]
 
 
 def stencil_halo_sharding(m: int, mesh: Mesh, axis: str = "data",
-                          sweeps: int = 1) -> StencilShardPlan:
+                          sweeps: int = 1, radius: int = 1
+                          ) -> StencilShardPlan:
     """Plan i-axis halo-exchange sharding for an (..., M, N, P) stencil grid.
 
-    Each shard owns ``M / n`` contiguous i-rows and exchanges ``sweeps`` halo
-    rows with each neighbour per fused call (radius-1 operator applied
-    ``sweeps`` times).  Falls back to an unsharded plan -- with the reason
-    noted -- when M doesn't divide or local rows couldn't cover the halo."""
+    Each shard owns ``M / n`` contiguous i-rows and exchanges ``radius *
+    sweeps`` halo rows with each neighbour per fused call (a radius-R
+    operator applied ``sweeps`` times needs ``R`` rows per sweep).  Falls
+    back to an unsharded plan -- with the reason noted -- when M doesn't
+    divide or local rows couldn't cover the halo."""
     n = _mesh_axis_size(mesh, axis)
+    halo = radius * sweeps
     notes: List[PlanNote] = []
 
     def fallback(reason: str) -> StencilShardPlan:
         notes.append(PlanNote("stencil/i-axis", (m,), None, reason))
-        return StencilShardPlan(axis, 1, sweeps, m, P(None, None, None, None),
+        return StencilShardPlan(axis, 1, halo, m, P(None, None, None, None),
                                 notes)
 
     if n <= 1:
@@ -206,12 +209,13 @@ def stencil_halo_sharding(m: int, mesh: Mesh, axis: str = "data",
     if m % n != 0:
         return fallback(f"M={m} not divisible by {axis}={n}; replicating")
     local = m // n
-    if local < sweeps:
-        return fallback(f"local rows {local} < halo {sweeps}; replicating")
+    if local < halo:
+        return fallback(f"local rows {local} < halo {halo}; replicating")
     notes.append(PlanNote(
         "stencil/i-axis", (m,), P(None, axis, None, None),
-        f"i-axis split {n} ways x {local} rows, halo {sweeps}/side"))
-    return StencilShardPlan(axis, n, sweeps, local,
+        f"i-axis split {n} ways x {local} rows, halo {halo}/side "
+        f"(radius {radius} x sweeps {sweeps})"))
+    return StencilShardPlan(axis, n, halo, local,
                             P(None, axis, None, None), notes)
 
 

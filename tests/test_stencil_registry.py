@@ -1,0 +1,152 @@
+"""Registry / dispatch error paths and hashing contracts: unknown-name
+messages, alias identity, ad-hoc frozen-spec stability through ``jax.jit``
+static args, plan-compiler memoization across alias spellings at radius 2,
+and ``spec_from_mask`` validation (odd shapes, gapped integer masks)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (compile_plan, get_stencil, list_stencils,
+                           spec_from_mask, stencil_apply)
+from repro.kernels.stencil_engine.spec import StencilSpec
+
+
+def test_unknown_stencil_message_lists_registered_names():
+    with pytest.raises(KeyError) as ei:
+        get_stencil("stencil99")
+    msg = str(ei.value)
+    for name in ("stencil3", "stencil7", "stencil27", "star13", "box125"):
+        assert name in msg
+    assert "stencil99" in msg
+
+
+def test_aliases_resolve_to_identical_spec_object():
+    """Aliases are registry entries pointing at the *same* frozen spec, not
+    equal copies -- so static-arg jit caches and the plan memo can't split
+    on spelling."""
+    for alias, name in (("3", "stencil3"), ("7", "stencil7"),
+                        ("27", "stencil27"), ("13", "star13"),
+                        ("125", "box125")):
+        assert get_stencil(alias) is get_stencil(name)
+        assert get_stencil(int(alias)) is get_stencil(name)
+    regs = list_stencils()
+    assert regs["13"] is regs["star13"]
+    assert regs["star13"].radius == (2, 2, 2)
+    assert regs["box125"].taps == 125 and regs["box125"].n_weights == 27
+
+
+def test_adhoc_spec_hashes_stably_through_jit_static_args():
+    """Two equal-valued spec_from_mask results are distinct objects but must
+    hash/compare equal, so a jitted function with the spec as a static
+    argument does not retrace per object."""
+    mask = np.zeros((5, 5, 5), bool)
+    mask[2, 2, 2] = mask[2, 2, 0] = mask[2, 2, 4] = True
+    s1 = spec_from_mask("jit-probe", mask)
+    s2 = spec_from_mask("jit-probe", mask)
+    assert s1 is not s2 and s1 == s2 and hash(s1) == hash(s2)
+    assert s1.radius == (2, 2, 2)
+
+    traces = []
+    import functools
+
+    @functools.partial(jax.jit, static_argnames=("spec",))
+    def run(a, *, spec: StencilSpec):
+        traces.append(spec.name)
+        return a * spec.taps
+
+    a = jnp.ones((4,), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(run(a, spec=s1)),
+                                  np.asarray(run(a, spec=s2)))
+    assert len(traces) == 1          # second call hit the jit cache
+
+
+def test_compile_plan_memo_unifies_aliases_at_radius2():
+    """String, int, and spec-object spellings -- and auto vs its resolved
+    kind -- share one compiled plan entry for the radius-2 builtins."""
+    assert compile_plan("star13") is compile_plan("13")
+    assert compile_plan("star13") is compile_plan(13)
+    assert compile_plan("star13") is compile_plan(get_stencil("star13"))
+    assert compile_plan("star13", "auto") is compile_plan("star13",
+                                                          "factored")
+    assert compile_plan("box125") is compile_plan(125)
+    # distinct kinds stay distinct entries
+    assert compile_plan("star13", "direct") is not compile_plan("star13")
+
+
+def test_spec_from_mask_rejects_gapped_integer_indices():
+    """An integer mask whose weight indices skip values used to silently
+    allocate a dangling unused weight (n_weights = max + 1)."""
+    mask = -np.ones((3, 3, 3), np.int64)
+    mask[1, 1, 1] = 0
+    mask[1, 1, 0] = mask[1, 1, 2] = 2          # skips index 1
+    with pytest.raises(ValueError, match="skip"):
+        spec_from_mask("gappy", mask)
+    # contiguous indices stay fine
+    mask[1, 1, 0] = mask[1, 1, 2] = 1
+    spec = spec_from_mask("dense", mask)
+    assert spec.n_weights == 2
+
+
+def test_spec_from_mask_shape_validation():
+    with pytest.raises(ValueError, match="odd"):
+        spec_from_mask("even", np.zeros((4, 3, 3), bool))
+    with pytest.raises(ValueError, match="odd"):
+        spec_from_mask("flat", np.zeros((3, 3), bool))
+    # mixed odd radii are fine: radius derives per axis
+    mask = np.zeros((5, 3, 7), bool)
+    mask[2, 1, 3] = mask[0, 1, 3] = mask[4, 1, 3] = True
+    spec = spec_from_mask("aniso", mask)
+    assert spec.radius == (2, 1, 3)
+    assert spec.offsets == ((-2, 0, 0), (0, 0, 0), (2, 0, 0))
+
+
+def test_spec_radius_validation():
+    with pytest.raises(ValueError, match="radius"):
+        StencilSpec(name="bad-r", ndim=3, offsets=((0, 0, 0),),
+                    w_index=(0,), n_weights=1, w_shape=(1,),
+                    radius=(1, 1))
+    with pytest.raises(ValueError, match="out of range"):
+        StencilSpec(name="bad-off", ndim=3, offsets=((-2, 0, 0),),
+                    w_index=(0,), n_weights=1, w_shape=(1,),
+                    radius=(1, 1, 1))
+
+
+def test_radius0_axis_mask_runs_both_paths():
+    """A (1, 3, 3) mask -- no i-taps, radius (0, 1, 1) -- runs through the
+    volumetric engine on both paths: zero halo planes, zero-length scratch
+    rotation, single staged view."""
+    rng = np.random.default_rng(6)
+    mask = np.zeros((1, 3, 3), bool)
+    for dj, dk in ((0, 0), (-1, 0), (1, 0), (0, -1), (0, 1)):
+        mask[0, 1 + dj, 1 + dk] = True
+    spec = spec_from_mask("jk5", mask)
+    assert spec.radius == (0, 1, 1)
+    from repro.kernels import stencil_ref
+    a = jnp.asarray(rng.integers(-4, 5, (8, 9, 16)), jnp.float32)
+    w = jnp.asarray(rng.integers(1, 4, 5), jnp.float32)
+    ref = np.asarray(stencil_ref(a, w, spec))
+    for path in ("stream", "replicate"):
+        for bj in (None, 3):
+            got = stencil_apply(a, w, spec, block_i=4, block_j=bj,
+                                path=path)
+            np.testing.assert_array_equal(np.asarray(got), ref)
+
+
+def test_radius2_mask_spec_runs_end_to_end():
+    """An ad-hoc 5x5x5 mask runs through stencil_apply and matches a hand
+    check at one interior point (two-away neighbours included)."""
+    rng = np.random.default_rng(2)
+    mask = np.zeros((5, 5, 5), bool)
+    mask[2, 2, 2] = mask[0, 2, 2] = mask[4, 2, 2] = mask[2, 2, 0] = True
+    spec = spec_from_mask("i2k2", mask)
+    assert spec.radius == (2, 2, 2) and spec.n_weights == 4
+    a = jnp.asarray(rng.standard_normal((8, 6, 16)), jnp.float32)
+    w = jnp.asarray([1.5, 0.25, 0.5, 2.0], jnp.float32)
+    got = stencil_apply(a, w, spec, block_i=4)
+    i, j, k = 3, 2, 7
+    # lexicographic taps: (-2,0,0)->w0, (0,0,-2)->w1, (0,0,0)->w2, (2,0,0)->w3
+    expect = float(1.5 * a[i - 2, j, k] + 0.25 * a[i, j, k - 2]
+                   + 0.5 * a[i, j, k] + 2.0 * a[i + 2, j, k])
+    assert abs(float(got[i, j, k]) - expect) < 1e-4

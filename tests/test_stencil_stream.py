@@ -1,9 +1,11 @@
 """Plane-streaming path: parity against the replicated escape hatch
 (bit-exact on f64 / integer-valued data, to tolerance in f32/bf16) across
-masks x sweeps x j-tiling, the streaming cost model's bytes-per-point
-acceptance numbers, path plumbing (autotune_engine / sharded), the
-interpret=None platform default, compile_plan memoization, and the
-non-divisible-block / sweeps-deeper-than-block error messages."""
+masks x sweeps x j-tiling -- at radius 1 and radius 2 (star13/box125, with
+their 2*sweeps-deep streaming window, 5-view replicated halo, and
+radius*sweeps sharded halo exchange) -- the streaming cost model's
+bytes-per-point acceptance numbers, path plumbing (autotune_engine /
+sharded), the interpret=None platform default, compile_plan memoization,
+and the non-divisible-block / sweeps-deeper-than-block error messages."""
 
 import os
 import subprocess
@@ -206,6 +208,156 @@ def test_compile_plan_memoized():
     # distinct plan kinds stay distinct entries
     assert compile_plan("stencil27", "direct") is not compile_plan(
         "stencil27", "factored")
+
+
+@pytest.mark.parametrize("name", ["star13", "box125"])
+@pytest.mark.parametrize("sweeps", [1, 2])
+@pytest.mark.parametrize("block_j", [None, 4])
+def test_radius2_stream_matches_replicate_bit_exact_integer(name, sweeps,
+                                                            block_j):
+    """Acceptance: the radius-2 builtins run through both data-movement
+    paths with bit-exact integer parity (and match the reference) across
+    fused sweeps and j-tiling -- the streaming window now carries
+    ``2 * sweeps`` halo planes and the replicated path stages 5 views."""
+    spec = get_stencil(name)
+    assert spec.radius == (2, 2, 2)
+    a = jnp.asarray(RNG.integers(-4, 5, (12, 12, 16)), jnp.float32)
+    w = _weights_for(spec, RNG, integer=True)
+    st = stencil_apply(a, w, spec, block_i=4, block_j=block_j,
+                       sweeps=sweeps, path="stream")
+    rp = stencil_apply(a, w, spec, block_i=4, block_j=block_j,
+                       sweeps=sweeps, path="replicate")
+    np.testing.assert_array_equal(np.asarray(st), np.asarray(rp))
+    np.testing.assert_array_equal(
+        np.asarray(st), np.asarray(stencil_ref(a, w, spec, sweeps=sweeps)))
+
+
+def test_radius2_stream_f64_bit_identical_acceptance():
+    """Acceptance: on f64 *integer-valued* data (every reassociation exact
+    within the mantissa -- the engine's cross-program parity discipline,
+    see the plan IR docstring on per-program fma contraction) the radius-2
+    streamed path, the replicated path, and stencil_ref are bit-identical
+    across fused sweeps and j-tiling; on float f64 data the two compiled
+    programs agree to per-op contraction rounding (<= ~1 ulp)."""
+    with jax.experimental.enable_x64():
+        for name in ("star13", "box125"):
+            spec = get_stencil(name)
+            a = jnp.asarray(RNG.integers(-4, 5, (8, 10, 16)), jnp.float64)
+            w = jnp.asarray(RNG.integers(1, 4, spec.w_shape), jnp.float64)
+            for sweeps in (1, 2):
+                for bj in (None, 5):
+                    st = stencil_apply(a, w, name, block_i=4, block_j=bj,
+                                       sweeps=sweeps, path="stream")
+                    rp = stencil_apply(a, w, name, block_i=4, block_j=bj,
+                                       sweeps=sweeps, path="replicate")
+                    np.testing.assert_array_equal(np.asarray(st),
+                                                  np.asarray(rp))
+                    np.testing.assert_array_equal(
+                        np.asarray(st),
+                        np.asarray(stencil_ref(a, w, name, sweeps=sweeps)))
+            af = jnp.asarray(RNG.standard_normal((8, 10, 16)), jnp.float64)
+            wf = jnp.asarray(RNG.uniform(0.1, 1.0, spec.w_shape),
+                             jnp.float64)
+            for sweeps in (1, 2):
+                st = stencil_apply(af, wf, name, block_i=4, sweeps=sweeps,
+                                   path="stream")
+                rp = stencil_apply(af, wf, name, block_i=4, sweeps=sweeps,
+                                   path="replicate")
+                np.testing.assert_allclose(np.asarray(st), np.asarray(rp),
+                                           rtol=1e-13, atol=1e-13)
+                np.testing.assert_allclose(
+                    np.asarray(st),
+                    np.asarray(stencil_ref(af, wf, name, sweeps=sweeps)),
+                    rtol=1e-13, atol=1e-13)
+
+
+def test_radius2_blocking_invariance():
+    """Radius-2 streaming is blocking-invariant on integer data, and the
+    deep-halo validation rejects blocks thinner than radius * sweeps."""
+    a = jnp.asarray(RNG.integers(-4, 5, (12, 12, 16)), jnp.float32)
+    w = jnp.asarray(RNG.integers(1, 4, (3,)), jnp.float32)
+    base = stencil_apply(a, w, "star13", block_i=12, path="stream")
+    for bi, bj in ((2, None), (3, None), (4, 6), (6, 4)):
+        got = stencil_apply(a, w, "star13", block_i=bi, block_j=bj,
+                            path="stream")
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
+    with pytest.raises(ValueError, match="block_i >= sweeps"):
+        stencil_apply(a, w, "star13", block_i=3, sweeps=2)
+    with pytest.raises(ValueError, match="block_j >= sweeps"):
+        stencil_apply(a, w, "star13", block_i=6, block_j=3, sweeps=2)
+
+
+def test_radius2_bytes_per_point_numbers():
+    """The cost model stays honest at radius 2: streaming still moves
+    ~2 x itemsize/point untiled while the replicated path grows to
+    (2r+2) = 6 untiled and (2r+1)^2+1 = 26 j-tiled."""
+    for itemsize in (2, 4, 8):
+        assert bytes_per_point("stream", itemsize, radius=2) \
+            == 2 * itemsize
+        assert bytes_per_point("stream", itemsize, radius=2) \
+            <= 2.5 * itemsize
+        assert bytes_per_point("replicate", itemsize, radius=2) \
+            == 6 * itemsize
+        assert bytes_per_point("stream", itemsize, j_tiled=True, radius=2) \
+            == 6 * itemsize
+        assert bytes_per_point("replicate", itemsize, j_tiled=True,
+                               radius=2) == 26 * itemsize
+    # radius defaults to the plan's spec inside autotune_engine
+    plan = compile_plan("star13")
+    path, bi, bj = autotune_engine(16, 24, 128, 4, plan=plan)
+    assert path == "stream" and 16 % bi == 0 and bi >= 2
+
+
+def test_radius2_sharded_stream_two_devices_subprocess():
+    """Radius-2 halo exchange: the shard_map body trades radius * sweeps
+    rows per neighbour and stays bit-identical to the single-device
+    streamed run -- on forced host devices."""
+    code = """
+        import jax, numpy as np, jax.numpy as jnp
+        assert jax.device_count() == 2, jax.devices()
+        from repro.kernels import stencil_apply, stencil_sharded
+        from repro.sharding.planner import stencil_halo_sharding
+        rng = np.random.default_rng(5)
+        a = jnp.asarray(rng.integers(-4, 5, (16, 12, 16)), jnp.float32)
+        mesh = jax.make_mesh((2,), ("data",))
+        for name, wshape in (("star13", (3,)), ("box125", (3, 3, 3))):
+            w = jnp.asarray(rng.integers(1, 4, wshape), jnp.float32)
+            for s in (1, 2):
+                plan = stencil_halo_sharding(16, mesh, sweeps=s, radius=2)
+                assert plan.n_shards == 2 and plan.halo == 2 * s
+                st = stencil_sharded(a, w, name, mesh=mesh, sweeps=s,
+                                     path="stream")
+                rp = stencil_sharded(a, w, name, mesh=mesh, sweeps=s,
+                                     path="replicate")
+                one = stencil_apply(a, w, name, block_i=4, sweeps=s,
+                                    path="stream")
+                np.testing.assert_array_equal(np.asarray(st), np.asarray(rp))
+                np.testing.assert_array_equal(np.asarray(st),
+                                              np.asarray(one))
+        print("radius2 sharded ok")
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=600,
+                         env=env, cwd=REPO)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "radius2 sharded ok" in out.stdout
+
+
+def test_radius2_shard_plan_halo_mismatch_raises():
+    """An explicit shard_plan whose halo can't cover radius * sweeps is
+    rejected with a clear message instead of silently corrupting seams."""
+    from repro.sharding.planner import StencilShardPlan
+    from jax.sharding import PartitionSpec as P
+    a = jnp.zeros((16, 8, 16), jnp.float32)
+    w = jnp.zeros((3,), jnp.float32)
+    bad = StencilShardPlan(axis="data", n_shards=2, halo=1, local_rows=8,
+                           spec=P(None, "data", None, None), notes=[])
+    from repro.kernels import stencil_sharded
+    with pytest.raises(ValueError, match="halo"):
+        stencil_sharded(a, w, "star13", sweeps=1, shard_plan=bad)
 
 
 def test_sharded_stream_two_devices_subprocess():
