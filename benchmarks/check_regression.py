@@ -1,0 +1,103 @@
+"""CI benchmark-regression gate: fresh ``BENCH_stencil.json`` vs baseline.
+
+Usage::
+
+    python benchmarks/check_regression.py BASELINE.json FRESH.json [--tol 0.05]
+
+Compares the *modeled* quantities the engine's perf claims rest on -- the
+per-path ``bytes_per_point_*`` keys and the per-spec plan op counts
+(``shifts``, ``flops``, ``ops``, ``peak_live``) under every plan kind --
+and fails (exit 1) when any fresh value regresses more than ``tol`` (5%
+default) above the committed baseline, or when a baseline key disappeared.
+Timing rows are deliberately ignored (CI runners are too noisy to gate on
+wall clock); the modeled numbers are deterministic, so any drift is a real
+code change that must be justified by refreshing the committed baseline in
+the same PR.  Improvements (fresh < baseline) always pass, with a note.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
+
+# (json section, per-entry numeric keys gated "higher is a regression")
+GATED_PLAN_KEYS = ("shifts", "flops", "ops", "peak_live")
+
+
+def _flatten(doc: Dict) -> Dict[str, float]:
+    """Flat ``section/name[/kind]/key -> value`` map of the gated numbers."""
+    flat: Dict[str, float] = {}
+    for path_name, keys in (doc.get("paths") or {}).items():
+        for k, v in keys.items():
+            if k.startswith("bytes_per_point") and isinstance(v, (int, float)):
+                flat[f"paths/{path_name}/{k}"] = float(v)
+    for spec_name, kinds in (doc.get("plans") or {}).items():
+        for kind, desc in kinds.items():
+            for k in GATED_PLAN_KEYS:
+                if isinstance(desc.get(k), (int, float)):
+                    flat[f"plans/{spec_name}/{kind}/{k}"] = float(desc[k])
+    return flat
+
+
+def compare(baseline: Dict, fresh: Dict,
+            tol: float) -> Tuple[List[str], List[str]]:
+    """Returns (failures, notes)."""
+    base, new = _flatten(baseline), _flatten(fresh)
+    failures, notes = [], []
+    if not base:
+        failures.append("baseline has no gated keys (paths/plans sections "
+                        "missing?) -- refusing to vacuously pass")
+        return failures, notes
+    for key, b in sorted(base.items()):
+        if key not in new:
+            failures.append(f"{key}: present in baseline ({b:g}) but "
+                            f"missing from the fresh run")
+            continue
+        n = new[key]
+        limit = b * (1.0 + tol)
+        if n > limit + 1e-12:
+            failures.append(f"{key}: {b:g} -> {n:g} "
+                            f"(+{(n / b - 1) * 100:.1f}%, limit +{tol:.0%})")
+        elif n < b:
+            notes.append(f"{key}: improved {b:g} -> {n:g}")
+    for key in sorted(set(new) - set(base)):
+        notes.append(f"{key}: new key ({new[key]:g}), not gated yet")
+    return failures, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline")
+    ap.add_argument("fresh")
+    ap.add_argument("--tol", type=float, default=0.05,
+                    help="allowed fractional regression (default 0.05)")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    bs, fs = baseline.get("schema"), fresh.get("schema")
+    if bs != fs:
+        print(f"note: schema changed {bs!r} -> {fs!r}; gating on the "
+              f"shared keys")
+    failures, notes = compare(baseline, fresh, args.tol)
+    for n in notes:
+        print(f"  ok: {n}")
+    if failures:
+        print(f"benchmark regression gate FAILED ({len(failures)} "
+              f"violation(s) vs {args.baseline}):")
+        for f_ in failures:
+            print(f"  REGRESSION {f_}")
+        print("if intentional, refresh the committed baseline "
+              "(PYTHONPATH=src:. python benchmarks/run.py "
+              "stencil_throughput) in this PR and justify the change")
+        return 1
+    print(f"benchmark regression gate passed: {len(_flatten(baseline))} "
+          f"gated keys within +{args.tol:.0%} of {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

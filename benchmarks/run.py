@@ -1,11 +1,14 @@
 """Benchmark harness: one module per paper table + system benches.
 
-Prints ``name,us_per_call,derived`` CSV (one line per measurement).
+Prints ``name,us_per_call,derived`` CSV (one line per measurement).  A
+sub-benchmark that raises is reported as a ``FAILED`` row and the process
+exits non-zero -- a crashed run can't green-wash the CI bench step.
 """
 
 from __future__ import annotations
 
 import sys
+import traceback
 
 
 def main() -> None:
@@ -16,12 +19,27 @@ def main() -> None:
             ("stencil_throughput", stencil_throughput),
             ("roofline", roofline)]
     only = sys.argv[1] if len(sys.argv) > 1 else None
+    if only and only not in [n for n, _ in mods]:
+        print(f"unknown benchmark {only!r}; available: "
+              f"{[n for n, _ in mods]}", file=sys.stderr)
+        sys.exit(2)
+    failed = []
     print("name,us_per_call,derived")
     for name, mod in mods:
         if only and only != name:
             continue
-        for row in mod.run():
-            print(row)
+        try:
+            for row in mod.run():
+                print(row)
+        except SystemExit:
+            raise                      # an explicit gate verdict: keep it
+        except Exception as exc:       # noqa: BLE001 - report, then fail
+            failed.append(name)
+            print(f"{name},nan,FAILED: {type(exc).__name__}: {exc}")
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        print(f"benchmark failures: {', '.join(failed)}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

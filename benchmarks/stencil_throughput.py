@@ -73,11 +73,17 @@ def _time(fn, *args, reps: int = 5) -> float:
     return best
 
 
-def write_json(path: Optional[str] = None) -> str:
-    """Dump the recorded rows + per-spec plan op counts (with ``radius`` and
-    ``pass_list`` columns) + per-path modeled bytes/point at radius 1 and 2
-    to ``path``."""
-    path = path or os.environ.get("BENCH_STENCIL_JSON", "BENCH_stencil.json")
+def write_json(path: Optional[str] = None,
+               default: str = "BENCH_stencil.json") -> str:
+    """Dump the recorded rows + per-spec plan op counts (with ``radius``,
+    ``pass_list``, and ``bc`` columns) + per-path modeled bytes/point at
+    radius 1 and 2 to ``path``.  ``default`` is the fallback when neither
+    ``path`` nor ``$BENCH_STENCIL_JSON`` is set: the full run refreshes the
+    committed ``BENCH_stencil.json`` regression baseline; the quick gate
+    writes the gitignored ``BENCH_stencil.quick.json`` so a local
+    ``--quick`` can't silently clobber the baseline with a partial record
+    set."""
+    path = path or os.environ.get("BENCH_STENCIL_JSON", default)
     doc = {
         "schema": "bench_stencil/v3",
         "plans": {name: {kind: compile_plan(name, kind).describe()
@@ -152,6 +158,7 @@ def run() -> List[str]:
     rows.extend(_plan_rows(rng))
     rows.extend(_path_rows(rng))
     rows.extend(_radius_rows(rng))
+    rows.extend(_bc_rows(rng))
     rows.append(_jtiled_row(rng))
     rows.append(_sharded_row())
     write_json()
@@ -165,7 +172,7 @@ def run_quick() -> List[str]:
     rng = np.random.default_rng(0)
     rows = _path_rows(rng)
     rows.extend(check_stream_model())
-    write_json()
+    write_json(default="BENCH_stencil.quick.json")
     return rows
 
 
@@ -268,6 +275,33 @@ def _radius_rows(rng) -> List[str]:
     return rows
 
 
+def _bc_rows(rng) -> List[str]:
+    """Boundary-condition variants of the streamed 27-point kernel: the
+    same plan and data movement under periodic (wrapped stream lead-in),
+    neumann (mirror ghost fill), and dirichlet ghosts -- timed, and
+    verified against the per-BC ``np.pad``-mode reference."""
+    rows: List[str] = []
+    m, n, p, bi = (REF_CONFIG[k] for k in ("m", "n", "p", "block_i"))
+    w = jnp.asarray(rng.uniform(0.1, 1, (2, 2, 2)), jnp.float32)
+    a = jnp.asarray(rng.standard_normal((m, n, p)), jnp.float32)
+    for bc in ("clamp", "periodic", "neumann", "dirichlet"):
+        name = "stencil27" if bc == "clamp" else f"stencil27_{bc}"
+        # non-clamp BCs update every point; clamp leaves the ring fixed
+        st = (m - 2) * (n - 2) * (p - 2) if bc == "clamp" else m * n * p
+        t = _time(lambda x, nm=name: stencil_apply(
+            x, w, nm, block_i=bi, path="stream"), a, reps=3)
+        err = float(jnp.max(jnp.abs(
+            stencil_apply(a, w, name, block_i=bi, path="stream")
+            - stencil_ref(a, w, name))))
+        rows.append(_row(
+            f"engine27.bc_{bc}.{m}x{n}x{p}", t * 1e6,
+            f"{st/t/1e6:.2f} Mstencil/s bc={bc} max_err={err:.2e} "
+            f"ok={err < 1e-4}",
+            bc=bc, mstencil_per_s=st / t / 1e6, max_err=err,
+            ok=bool(err < 1e-4)))
+    return rows
+
+
 # Reference 27-point configuration for the streamed-vs-replicated
 # comparison and the CI cost-model gate.
 REF_CONFIG = dict(m=16, n=24, p=128, block_i=4, itemsize=4)
@@ -352,7 +386,7 @@ def check_stream_model() -> List[str]:
         # surface the diagnostics the gate exists for: the gate rows and the
         # measured rows recorded so far still reach stdout + the artifact
         print("\n".join(rows))
-        write_json()
+        write_json(default="BENCH_stencil.quick.json")
         raise SystemExit("stencil cost-model gate failed: "
                          + "; ".join(failures))
     return rows

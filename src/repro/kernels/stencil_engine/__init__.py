@@ -75,12 +75,26 @@ Fused sweeps -- ``stencil_apply(..., sweeps=s)``
     applications (requires ``block_i >= sweeps`` and, when j-tiled,
     ``block_j >= sweeps``).
 
+Boundary conditions -- ``spec.with_bc`` / ``stencil_apply(..., bc=...)``
+    Per-axis-side :class:`BC`: ``clamp`` (the historical default -- zero
+    ghosts + one-point output ring zeroed per sweep), ``periodic`` (wrap;
+    paired per axis), ``dirichlet(v)`` (constant ghosts, realized by the
+    linearity identity ``stencil(u) = stencil(u - v) + v * sum(w)``), and
+    ``neumann`` (zero-flux symmetric mirror).  BC-suffixed builtins
+    (``stencil27_periodic``, ...) live in the registry, plans memoize and
+    ``describe()`` per variant, the reference is the per-sweep
+    ``np.pad``-mode oracle, and every BC runs on both data-movement paths
+    at any radius -- the streaming path wraps its lead-in for periodic
+    (re-fetching only the first ``radius * sweeps`` planes), the sharded
+    path turns the halo exchange into a ring.
+
 Sharded execution -- :func:`stencil_sharded`
     ``shard_map`` over the i-axis: the partition plan (divisibility, halo
     depth, PlanNotes) comes from
     ``repro.sharding.planner.stencil_halo_sharding``; shards exchange
-    ``radius * sweeps`` halo rows via ``lax.ppermute`` and run the same
-    fused kernel,
+    ``radius * sweeps`` halo rows via ``lax.ppermute`` -- a chain whose
+    edge shards take their boundary ghosts locally, or a closed ring when
+    the i axis is periodic -- and run the same fused kernel,
     with global-geometry masking keeping shard seams exact.  Compiled
     shard_map programs are memoized keyed on device ids + axis names (not
     ``Mesh`` objects) in a bounded cache.
@@ -99,8 +113,11 @@ from .common import DEFAULT_VMEM_BUDGET  # noqa: F401
 from .ops import default_interpret, stencil_apply  # noqa: F401
 from .plan import (PASS_PRESETS, PLAN_KINDS, PlanOp,  # noqa: F401
                    StencilPlan, compile_plan, execute_plan,
-                   mirror_symmetric, peak_live, run_passes, shift_slice)
+                   mirror_symmetric, peak_live, run_passes, shift_slice,
+                   shift_slice_bc)
 from .ref import stencil_ref  # noqa: F401
 from .sharded import stencil_sharded  # noqa: F401
-from .spec import (StencilSpec, get_stencil, list_stencils,  # noqa: F401
-                   register_stencil, spec_from_mask)
+from .spec import (BC, BC_KINDS, CLAMP, NEUMANN, PERIODIC,  # noqa: F401
+                   StencilSpec, as_boundary, bc_labels, dirichlet,
+                   get_stencil, list_stencils, register_stencil,
+                   spec_from_mask)

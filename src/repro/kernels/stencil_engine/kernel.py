@@ -37,15 +37,32 @@ Both bodies fuse ``s`` Jacobi sweeps per grid step: the working strip is
 ``h`` halo planes wider than the output block per side, the sweep loop runs
 VMEM-resident via :func:`run_sweeps` (interior mask and zero fill built
 once, not per unrolled sweep), and only the central planes are written back
--- one HBM round-trip for ``s`` applications of the operator.  At radius
->= 2, clamped neighbour views can place *duplicated* edge data where the
-out-of-domain zero halo belongs and interior points genuinely read those
-positions, so the assembled strip is explicitly zeroed outside the global
-domain (:func:`zero_outside_domain`; a no-op at radius 1, where clamp
-garbage only ever feeds Dirichlet-masked rows).  Global geometry (row
-offset, global M) arrives as a small int32 operand so the same bodies run
-unsharded (offset 0) and as the per-shard body of the halo-exchange
-``shard_map`` path.  When ``bj`` is set the grid gains a j dimension: the
+-- one HBM round-trip for ``s`` applications of the operator.
+
+Boundary conditions are a per-axis-side property of the spec
+(:class:`~.spec.BC`) and are realized in three places, chosen per axis by
+where that axis's ghost cells live (:func:`prepare_strip` wires all of it):
+
+* **halo axes** (i always; j when tiled): the assembled strip's
+  out-of-domain positions are *filled* (:func:`fill_ghosts`) -- zeros for
+  clamp (pre-sweep only; the ring mask covers later sweeps, and the
+  all-clamp default keeps the exact legacy :func:`zero_outside_domain` /
+  ring-mask graphs), the constant for dirichlet, a symmetric mirror gather
+  for neumann (re-applied after every fused sweep, the kernel form of the
+  reference's per-sweep ``np.pad``); a periodic i axis instead *wraps* --
+  block index maps reach around the domain and the streaming window gains
+  a lead-in step (see ``stencil3d_stream_kernel``), after which the strip
+  is contiguous in the periodic metric and needs no refill at all;
+* **domain-resident axes** (k always; j untiled): the BC lives in the
+  shift primitive's fill (:func:`~.plan.shift_slice_bc`);
+* **dirichlet values** ride the linearity identity ``stencil(u) =
+  stencil(u - v) + v * sum(w)`` (see :func:`run_sweeps`), since a constant
+  fill inside a shift would be wrong for shifted partial sums.
+
+Global geometry (row offset, global M) arrives as a small int32 operand so
+the same bodies run unsharded (offset 0) and as the per-shard body of the
+halo-exchange ``shard_map`` path -- which is also what makes dirichlet /
+neumann ghosts materialize only on the boundary shards.  When ``bj`` is set the grid gains a j dimension: the
 replicated body sees the ``(2ri+1) x (2rj+1)`` neighbour tiles; the
 streaming body streams i within each j-tile (``2rj + 1`` j-neighbour views,
 so planes are fetched ``2rj + 1`` times instead of the replicated
@@ -55,13 +72,14 @@ is the one regime j-tiling exists to avoid).
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .plan import StencilPlan, execute_plan
+from .plan import StencilPlan, execute_plan, shift_slice, shift_slice_bc
+from .spec import Boundary
 
 
 def acc_dtype_for(dtype) -> jnp.dtype:
@@ -69,25 +87,82 @@ def acc_dtype_for(dtype) -> jnp.dtype:
     return jnp.float64 if dtype == jnp.float64 else jnp.float32
 
 
-def run_sweeps(u: jax.Array, interior: jax.Array, w: jax.Array,
-               plan: StencilPlan, sweeps: int) -> jax.Array:
-    """Fused Jacobi sweep loop with the loop-invariant Dirichlet select
+def bc_all_clamp(bc: Boundary) -> bool:
+    return all(s.kind == "clamp" for ax in bc for s in ax)
+
+
+def make_shift(bc: Boundary, j_in_shift: bool) -> Callable:
+    """The plan executor's shift primitive for this BC configuration.
+
+    Axes whose strip extent *is* the domain extent (k always; j on untiled
+    volumetric blocks / the 1-D path) realize their BC inside the shift fill
+    (:func:`~.plan.shift_slice_bc`); halo axes keep zero fill -- their BC is
+    realized by :func:`fill_ghosts` on the assembled strip.  All-clamp
+    configurations keep the exact legacy :func:`~.plan.shift_slice` (same
+    traced graph, byte-identical programs)."""
+    bc_axes = (False, j_in_shift, True)
+    if all(bc[ax][side].kind in ("clamp", "dirichlet")
+           for ax in (1, 2) if bc_axes[ax] for side in (0, 1)):
+        return shift_slice          # dirichlet ghosts are zero-fill too
+    return lambda t, off: shift_slice_bc(t, off, bc, bc_axes)
+
+
+def ghost_offset(bc: Boundary) -> float:
+    """The shared dirichlet ghost value (0.0 when no side is dirichlet --
+    the single-value-per-spec rule is validated at spec construction)."""
+    for ax in bc:
+        for s in ax:
+            if s.kind == "dirichlet":
+                return s.value
+    return 0.0
+
+
+def run_sweeps(u: jax.Array, interior: Optional[jax.Array], w: jax.Array,
+               plan: StencilPlan, sweeps: int, shift: Callable = shift_slice,
+               refill: Optional[Callable] = None) -> jax.Array:
+    """Fused Jacobi sweep loop with the loop-invariant clamp-ring select
     hoisted: the interior mask *and* the zero fill it selects against are
-    materialized once and reused by every unrolled sweep (previously the
-    scalar zero was re-broadcast to the full block per sweep).  The valid
-    region shrinks ``radius`` planes per sweep from the extended edges, so
-    the central block is exact after ``sweeps`` applications under the
-    ``h = radius * sweeps`` halo."""
-    zero = jnp.zeros(u.shape, u.dtype)
+    materialized once and reused by every unrolled sweep.  ``interior`` is
+    the clamp-side ring mask (``None`` when no side is clamp), ``shift``
+    carries the in-shift BCs of the domain-resident axes, and ``refill``
+    (when the halo axes carry dirichlet/neumann sides) re-fills the
+    out-of-domain ghost strip after every application -- the fused-kernel
+    form of the reference's per-sweep ``np.pad``.
+
+    A dirichlet ghost value ``v != 0`` is realized by linearity: the plan
+    runs on the offset field ``u - v`` (whose dirichlet ghosts are exactly
+    the shifts' zero fill) and ``v * sum(w)`` is added back -- a constant
+    fill inside the shifts would be wrong for intermediate partial sums.
+    The valid region shrinks ``radius`` planes per sweep from the extended
+    edges, so the central block is exact after ``sweeps`` applications
+    under the ``h = radius * sweeps`` halo."""
+    zero = None if interior is None else jnp.zeros(u.shape, u.dtype)
+    v = ghost_offset(plan.spec.bc)
+    off = corr = None
+    if v != 0.0:
+        off = jnp.asarray(v, u.dtype)
+        counts: dict = {}
+        for k in plan.spec.w_index:          # static multiplicity per weight
+            counts[k] = counts.get(k, 0) + 1
+        sumw = sum((w[k] * c for k, c in sorted(counts.items())),
+                   jnp.zeros((), u.dtype))
+        corr = off * sumw
     for _ in range(sweeps):
-        u = jnp.where(interior, execute_plan(plan, u, w), zero)
+        if off is None:
+            u = execute_plan(plan, u, w, shift=shift)
+        else:
+            u = execute_plan(plan, u - off, w, shift=shift) + corr
+        if interior is not None:
+            u = jnp.where(interior, u, zero)
+        if refill is not None:
+            u = refill(u)
     return u
 
 
 def _volumetric_interior(ext, gi0, j0, m_ref, n_global: int):
-    """Interior (non-Dirichlet) mask of an extended working strip whose
+    """Interior (non-clamp-ring) mask of an extended working strip whose
     row 0 sits at global row ``gi0`` and column 0 at global column ``j0``;
-    ``m_ref`` is the (traced) global M.  The Dirichlet ring stays one point
+    ``m_ref`` is the (traced) global M.  The clamp ring stays one point
     wide at every radius (out-of-domain reads are zeros, matching the
     reference's zero-fill shifts).  Built once per grid step and shared
     across every fused sweep."""
@@ -97,6 +172,118 @@ def _volumetric_interior(ext, gi0, j0, m_ref, n_global: int):
     return ((gi > 0) & (gi < m_ref - 1)
             & (jj > 0) & (jj < n_global - 1)
             & (kk > 0) & (kk < ext[-1] - 1))
+
+
+def _clamp_interior(ext, gi0, j0, m_ref, n_global: int, bc: Boundary):
+    """Per-side generalization of :func:`_volumetric_interior`: one ring
+    constraint per *clamp* side (other BCs apply the operator everywhere and
+    realize their ghosts by fill/wrap instead).  ``None`` when no side is
+    clamp -- the per-sweep select is skipped entirely."""
+    coords = {}
+
+    def coord(axis):
+        if axis not in coords:
+            base = (gi0, j0, 0)[axis]
+            coords[axis] = base + jax.lax.broadcasted_iota(jnp.int32, ext,
+                                                           axis)
+        return coords[axis]
+
+    tops = (m_ref, n_global, ext[-1])
+    mask = None
+    for axis in range(3):
+        lo, hi = bc[axis]
+        if lo.kind == "clamp":
+            t = coord(axis) > 0
+            mask = t if mask is None else mask & t
+        if hi.kind == "clamp":
+            t = coord(axis) < tops[axis] - 1
+            mask = t if mask is None else mask & t
+    return mask
+
+
+def _fill_axis(u: jax.Array, axis: int, c0, top, lo, hi,
+               include_clamp: bool) -> jax.Array:
+    """Fill the out-of-domain positions along one halo axis of the strip:
+    ``c0`` is the global coordinate of index 0 and ``top`` the (possibly
+    traced) domain extent.  neumann gathers the symmetric mirror of the
+    in-domain data (``ghost[-1-q] = u[q]``; the mirror source is always
+    resident -- ``block >= radius * sweeps`` is validated); dirichlet is a
+    constant select; clamp zeros are applied only pre-sweep
+    (``include_clamp`` -- the per-sweep ring mask covers them after every
+    application); periodic leaves the strip alone (its halo already holds
+    wrapped data)."""
+    n_ax = u.shape[axis]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (n_ax,), 0)
+    g = c0 + ii
+
+    def on_axis(vec):
+        return jnp.expand_dims(vec, tuple(a for a in range(u.ndim)
+                                          if a != axis))
+
+    if lo.kind == "neumann" or hi.kind == "neumann":
+        src = g
+        mask = None
+        if lo.kind == "neumann":
+            src = jnp.where(g < 0, -1 - g, src)
+            mask = g < 0
+        if hi.kind == "neumann":
+            src = jnp.where(g >= top, 2 * top - 1 - g, src)
+            m = g >= top
+            mask = m if mask is None else mask | m
+        local = jnp.clip(src - c0, 0, n_ax - 1)
+        u = jnp.where(on_axis(mask), jnp.take(u, local, axis=axis), u)
+    for side, oob in ((lo, g < 0), (hi, g >= top)):
+        if side.kind == "dirichlet":
+            u = jnp.where(on_axis(oob), jnp.asarray(side.value, u.dtype), u)
+        elif side.kind == "clamp" and include_clamp:
+            u = jnp.where(on_axis(oob), jnp.zeros((), u.dtype), u)
+    return u
+
+
+def fill_ghosts(u: jax.Array, gi0, j0, m_ref, n_global: int, bc: Boundary,
+                fill_j: bool, include_clamp: bool) -> jax.Array:
+    """Realize the halo axes' BCs on an assembled working strip: axis i
+    always (its halo is staged/streamed), axis j only when tiled (untiled
+    strips span the full N, so j is an in-shift axis).  i is filled before
+    j, so at i/j ghost corners the later axis wins -- the same corner
+    convention as the reference's sequential ``np.pad`` (i, then j, then
+    k)."""
+    u = _fill_axis(u, u.ndim - 3, gi0, m_ref, *bc[0], include_clamp)
+    if fill_j:
+        u = _fill_axis(u, u.ndim - 2, j0, n_global, *bc[1], include_clamp)
+    return u
+
+
+def _needs_refill(bc: Boundary, fill_j: bool) -> bool:
+    axes = (0, 1) if fill_j else (0,)
+    return any(bc[ax][side].kind in ("dirichlet", "neumann")
+               for ax in axes for side in (0, 1))
+
+
+def prepare_strip(u: jax.Array, gi0, j0, m_ref, n_global: int,
+                  plan: StencilPlan, tiled_j: bool):
+    """Shared BC set-up for the volumetric kernel bodies: fill the assembled
+    strip's out-of-domain ghosts, and return the per-sweep machinery
+    ``(u, interior, shift, refill)`` for :func:`run_sweeps`.  All-clamp
+    specs take the exact legacy path (zero fill at radius >= 2 only, the
+    ring mask, plain zero-fill shifts) so default-BC programs stay
+    byte-identical."""
+    bc = plan.spec.bc
+    if bc_all_clamp(bc):
+        u = zero_outside_domain(u, gi0, j0, m_ref, n_global,
+                                plan.spec.radius)
+        return (u, _volumetric_interior(u.shape, gi0, j0, m_ref, n_global),
+                shift_slice, None)
+    u = fill_ghosts(u, gi0, j0, m_ref, n_global, bc, fill_j=tiled_j,
+                    include_clamp=True)
+    interior = _clamp_interior(u.shape, gi0, j0, m_ref, n_global, bc)
+    shift = make_shift(bc, j_in_shift=not tiled_j)
+    refill = None
+    if _needs_refill(bc, fill_j=tiled_j):
+        def refill(v):
+            return fill_ghosts(v, gi0, j0, m_ref, n_global, bc,
+                               fill_j=tiled_j, include_clamp=False)
+    return u, interior, shift, refill
 
 
 def zero_outside_domain(u: jax.Array, gi0, j0, m_ref, n_global: int,
@@ -176,17 +363,16 @@ def stencil3d_kernel(*refs, plan: StencilPlan, bi: int, bj: Optional[int],
         u = _concat_halo(*rows, hi, 0).astype(acc_dtype)
         j0 = j_blk * bj - hj
     gi0 = geom_ref[0] + i_blk * bi - hi
-    u = zero_outside_domain(u, gi0, j0, geom_ref[1], n_global,
-                            plan.spec.radius)
-    interior = _volumetric_interior(u.shape, gi0, j0, geom_ref[1], n_global)
-    u = run_sweeps(u, interior, w, plan, s)
+    u, interior, shift, refill = prepare_strip(u, gi0, j0, geom_ref[1],
+                                               n_global, plan, bj is not None)
+    u = run_sweeps(u, interior, w, plan, s, shift=shift, refill=refill)
     out = u[hi:hi + bi] if bj is None else u[hi:hi + bi, hj:hj + bj]
     o_ref[0] = out.astype(o_ref.dtype)
 
 
 def stencil3d_stream_kernel(*refs, plan: StencilPlan, bi: int,
                             bj: Optional[int], n_global: int, sweeps: int,
-                            acc_dtype):
+                            acc_dtype, wrap_i: bool = False):
     """Plane-streaming fused-sweep volumetric kernel (``path="stream"``).
 
     ``refs`` is ``(*views, geom_ref, w_ref, o_ref, scr_ref)``.  Untiled
@@ -196,8 +382,8 @@ def stencil3d_stream_kernel(*refs, plan: StencilPlan, bi: int,
     the grid is ``(B, nbj, nbi + 1)`` with i innermost, so the stream
     restarts per j-tile.  ``scr_ref`` is VMEM scratch of ``bi + h`` input
     planes (``h = ri * sweeps``) carried across grid steps: planes
-    ``[0, h)`` are the tail of block ``t - 2`` (zeros above the domain),
-    planes ``[h, h + bi)`` are block ``t - 1``.
+    ``[0, h)`` are the tail of the block before the previous one (zeros
+    above the domain), planes ``[h, h + bi)`` are the previous block.
 
     Step 0 primes the window; step ``t >= 1`` assembles the working strip
     ``[scratch | head h planes of block t]`` (at ``t == nbi`` the clamped
@@ -207,6 +393,16 @@ def stencil3d_stream_kernel(*refs, plan: StencilPlan, bi: int,
     semantics), runs the fused sweeps, writes output block ``t - 1`` via
     the lagged output index map, and rotates the window.  Net HBM traffic:
     each input plane read once, each output plane written once.
+
+    ``wrap_i=True`` (the i axis is periodic, realized here rather than by a
+    pre-exchanged shard halo): the stream gains one more lead-in step and
+    walks the *wrapped* block sequence ``nbi-1, 0, 1, ..., nbi-1, 0``
+    (``i_src(t) = (t + nbi - 1) % nbi``).  Step 0 stages only the tail
+    ``h`` planes of the last block (the ghost rows below global row 0),
+    step 1 stages block 0, and step ``t >= 2`` computes output block
+    ``t - 2``; the final step re-fetches block 0's head planes for the tail
+    of the sweep -- the periodic case's only extra HBM traffic (~2 extra
+    block reads per call).
     """
     o_ref, scr_ref = refs[-2], refs[-1]
     geom_ref, w_ref = refs[-4], refs[-3]
@@ -214,6 +410,7 @@ def stencil3d_stream_kernel(*refs, plan: StencilPlan, bi: int,
     ri, rj, _ = plan.spec.radius
     s = sweeps
     hi = ri * s
+    lag = 2 if wrap_i else 1
     w = w_ref[...]
     if bj is None:
         t = pl.program_id(1)
@@ -228,27 +425,39 @@ def stencil3d_stream_kernel(*refs, plan: StencilPlan, bi: int,
         cur = _concat_halo(jm, jc, jp, hj, 1)              # (bi, bj+2hj, P)
         j0 = j_blk * bj - hj
 
-    @pl.when(t == 0)
-    def _prime():
-        # Window for output block 0: block "-1" is above the domain (zeros;
-        # they only ever feed rows the interior mask zeroes), block 0 = cur.
-        if hi:
-            scr_ref[:hi] = jnp.zeros((hi,) + cur.shape[1:], cur.dtype)
-        scr_ref[hi:] = cur
+    if wrap_i:
+        @pl.when(t == 0)
+        def _prime_ghost():
+            # cur is the *last* block: its tail h planes are the wrapped
+            # ghost rows below global row 0.
+            scr_ref[:hi] = cur[bi - hi:bi]
 
-    @pl.when(t > 0)
+        @pl.when(t == 1)
+        def _prime_first():
+            scr_ref[hi:] = cur                             # block 0
+    else:
+        @pl.when(t == 0)
+        def _prime():
+            # Window for output block 0: block "-1" is above the domain
+            # (zeros; the strip fill / interior mask handles them), block
+            # 0 = cur.
+            if hi:
+                scr_ref[:hi] = jnp.zeros((hi,) + cur.shape[1:], cur.dtype)
+            scr_ref[hi:] = cur
+
+    @pl.when(t >= lag)
     def _compute():
         u = (jnp.concatenate([scr_ref[...], cur[:hi]], axis=0) if hi
              else scr_ref[...]).astype(acc_dtype)          # (bi + 2hi, ., P)
-        gi0 = geom_ref[0] + (t - 1) * bi - hi
-        u = zero_outside_domain(u, gi0, j0, geom_ref[1], n_global,
-                                plan.spec.radius)
-        interior = _volumetric_interior(u.shape, gi0, j0, geom_ref[1],
-                                        n_global)
-        u = run_sweeps(u, interior, w, plan, s)
+        gi0 = geom_ref[0] + (t - lag) * bi - hi
+        u, interior, shift, refill = prepare_strip(u, gi0, j0, geom_ref[1],
+                                                   n_global, plan,
+                                                   bj is not None)
+        u = run_sweeps(u, interior, w, plan, s, shift=shift, refill=refill)
         out = u[hi:hi + bi] if bj is None else u[hi:hi + bi, hj:hj + bj]
         o_ref[0] = out.astype(o_ref.dtype)
-        # Rotate the window: new tail = last hi planes of block t - 1.
+        # Rotate the window: new tail = last hi planes of the block the
+        # scratch currently holds.
         if hi:
             tail = scr_ref[bi:bi + hi]
             scr_ref[:hi] = tail
@@ -258,11 +467,18 @@ def stencil3d_stream_kernel(*refs, plan: StencilPlan, bi: int,
 def stencil1d_kernel(a_ref, w_ref, o_ref, *, plan: StencilPlan, sweeps: int,
                      acc_dtype):
     """k-only kernel over ``(block_rows, P)`` blocks; rows are independent,
-    so fused sweeps need no halo at all (shift zero-fill covers any k
-    radius)."""
+    so fused sweeps need no halo at all (the k axis is fully resident and
+    its BC -- wrap / constant / mirror / zero fill -- lives in the shift
+    primitive)."""
     u = a_ref[...].astype(acc_dtype)
     w = w_ref[...]
     p = u.shape[-1]
-    kk = jax.lax.broadcasted_iota(jnp.int32, u.shape, u.ndim - 1)
-    interior = (kk > 0) & (kk < p - 1)
-    o_ref[...] = run_sweeps(u, interior, w, plan, sweeps).astype(o_ref.dtype)
+    klo, khi = plan.spec.bc[2]
+    interior = None
+    if klo.kind == "clamp" or khi.kind == "clamp":
+        kk = jax.lax.broadcasted_iota(jnp.int32, u.shape, u.ndim - 1)
+        interior = ((kk > 0) & (kk < p - 1) if klo.kind == khi.kind
+                    else (kk > 0) if klo.kind == "clamp" else (kk < p - 1))
+    shift = make_shift(plan.spec.bc, j_in_shift=False)
+    o_ref[...] = run_sweeps(u, interior, w, plan, sweeps,
+                            shift=shift).astype(o_ref.dtype)

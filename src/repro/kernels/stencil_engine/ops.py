@@ -32,6 +32,12 @@ from .plan import StencilPlan, compile_plan
 from .spec import StencilSpec, get_stencil
 
 
+def _periodic_axes(spec: StencilSpec):
+    """(i, j) axis periodicity (periodic is validated as paired)."""
+    return (spec.bc[0][0].kind == "periodic",
+            spec.bc[1][0].kind == "periodic")
+
+
 @functools.lru_cache(maxsize=None)
 def default_interpret() -> bool:
     """Resolve ``interpret=None``: interpret the Pallas kernels only when no
@@ -48,14 +54,23 @@ def resolve_interpret(interpret: Optional[bool]) -> bool:
     return default_interpret() if interpret is None else bool(interpret)
 
 
-def _clamped_imap(di: int, dj: int, top_i: int, top_j: int):
+def _edge_index(x, d: int, nb: int, wrap: bool):
+    """A neighbour block index at the domain edge: wrapped for a periodic
+    axis (the halo genuinely comes from the far side), clamped otherwise
+    (the duplicate data lands on positions the kernel's ghost fill /
+    interior mask overwrites)."""
+    if d == 0:
+        return x
+    return (x + d) % nb if wrap else jnp.clip(x + d, 0, nb - 1)
+
+
+def _neighbor_imap(di: int, dj: int, nbi: int, nbj: int,
+                   wrap_i: bool, wrap_j: bool):
     """Index map for the (di, dj) neighbour view of a (1, bi, bj, P) block
-    grid, clamped at the domain edges (the clamped duplicate data lands on
-    positions the kernel's domain zeroing / interior mask kills)."""
+    grid, per-axis wrapped (periodic) or clamped at the domain edges."""
     def f(bb, i, j):
-        ii = i if di == 0 else jnp.clip(i + di, 0, top_i)
-        jj = j if dj == 0 else jnp.clip(j + dj, 0, top_j)
-        return (bb, ii, jj, 0)
+        return (bb, _edge_index(i, di, nbi, wrap_i),
+                _edge_index(j, dj, nbj, wrap_j), 0)
     return f
 
 
@@ -79,7 +94,8 @@ def _validate_blocks(m: int, n: int, bi: int, bj: Optional[int],
 
 def _call_3d_stream(a4: jax.Array, wf: jax.Array, geom: jax.Array,
                     plan: StencilPlan, bi: int, bj: Optional[int],
-                    sweeps: int, interpret: bool) -> jax.Array:
+                    sweeps: int, interpret: bool,
+                    external_i_halo: bool = False) -> jax.Array:
     """Wire the plane-streaming kernel: one pass over the i-blocks with one
     extra grid step, a lagged output index map, and a VMEM scratch window of
     ``bi + ri * sweeps`` input planes carried across steps.  Untiled, the
@@ -87,29 +103,49 @@ def _call_3d_stream(a4: jax.Array, wf: jax.Array, geom: jax.Array,
     HBM exactly once per call (the final clamped step re-presents the last
     block, which Pallas revisiting semantics keep DMA-free); j-tiled, the
     ``2rj + 1`` j-neighbour views stream i within each j-tile (``2rj + 1``
-    fetches per plane vs the replicated path's ``(2ri+1)(2rj+1)``)."""
+    fetches per plane vs the replicated path's ``(2ri+1)(2rj+1)``).
+
+    A periodic i axis (unless ``external_i_halo`` -- the sharded ring
+    already materialized the wrap) adds one more lead-in step and walks the
+    wrapped block sequence ``(t + nbi - 1) % nbi``: the last block's tail
+    planes are staged first (the ghost rows below row 0) and the first
+    block's head planes are re-fetched at the end -- the ``r * sweeps``
+    lead/tail planes are the only re-fetched HBM traffic."""
     b, m, n, p = a4.shape
     nbi = m // bi
     ri, rj, _ = plan.spec.radius
     hi = ri * sweeps
+    per_i, per_j = _periodic_axes(plan.spec)
+    wrap_i = per_i and not external_i_halo and hi > 0
+    steps = nbi + (2 if wrap_i else 1)
+    lag = 2 if wrap_i else 1
     kern = functools.partial(stencil3d_stream_kernel, plan=plan, bi=bi,
                              bj=bj, n_global=n, sweeps=sweeps,
-                             acc_dtype=acc_dtype_for(a4.dtype))
+                             acc_dtype=acc_dtype_for(a4.dtype),
+                             wrap_i=wrap_i)
+    if wrap_i:
+        def imap_t(t):
+            return (t + nbi - 1) % nbi
+    else:
+        def imap_t(t):
+            return jnp.minimum(t, nbi - 1)
+
+    def omap_t(t):
+        return jnp.clip(t - lag, 0, nbi - 1)
+
     if bj is None:
         block = (1, bi, n, p)
         in_specs = [
-            pl.BlockSpec(block, functools.partial(
-                lambda bb, t, top: (bb, jnp.minimum(t, top), 0, 0),
-                top=nbi - 1)),
+            pl.BlockSpec(block, lambda bb, t: (bb, imap_t(t), 0, 0)),
             pl.BlockSpec(geom.shape, lambda bb, t: (0,)),
             pl.BlockSpec(wf.shape, lambda bb, t: (0,)),
         ]
         return pl.pallas_call(
             kern,
-            grid=(b, nbi + 1),
+            grid=(b, steps),
             in_specs=in_specs,
             out_specs=pl.BlockSpec(
-                block, lambda bb, t: (bb, jnp.maximum(t - 1, 0), 0, 0)),
+                block, lambda bb, t: (bb, omap_t(t), 0, 0)),
             out_shape=jax.ShapeDtypeStruct(a4.shape, a4.dtype),
             scratch_shapes=[pltpu.VMEM((bi + hi, n, p), a4.dtype)],
             interpret=interpret,
@@ -121,8 +157,7 @@ def _call_3d_stream(a4: jax.Array, wf: jax.Array, geom: jax.Array,
 
     def jmap(dj: int):
         def f(bb, j, t):
-            jj = j if dj == 0 else jnp.clip(j + dj, 0, nbj - 1)
-            return (bb, jnp.minimum(t, nbi - 1), jj, 0)
+            return (bb, imap_t(t), _edge_index(j, dj, nbj, per_j), 0)
         return f
 
     # The full 2rj+1 j-neighbourhood is staged (the cost model's canonical
@@ -137,10 +172,10 @@ def _call_3d_stream(a4: jax.Array, wf: jax.Array, geom: jax.Array,
                  pl.BlockSpec(wf.shape, lambda bb, j, t: (0,))]
     return pl.pallas_call(
         kern,
-        grid=(b, nbj, nbi + 1),        # i innermost: the stream restarts
+        grid=(b, nbj, steps),          # i innermost: the stream restarts
         in_specs=in_specs,             # (and re-primes) per j-tile
         out_specs=pl.BlockSpec(
-            block, lambda bb, j, t: (bb, jnp.maximum(t - 1, 0), j, 0)),
+            block, lambda bb, j, t: (bb, omap_t(t), j, 0)),
         out_shape=jax.ShapeDtypeStruct(a4.shape, a4.dtype),
         scratch_shapes=[pltpu.VMEM((bi + hi, bj + 2 * hj, p), a4.dtype)],
         interpret=interpret,
@@ -149,29 +184,35 @@ def _call_3d_stream(a4: jax.Array, wf: jax.Array, geom: jax.Array,
 
 def call_3d(a4: jax.Array, wf: jax.Array, geom: jax.Array, plan: StencilPlan,
             bi: int, bj: Optional[int], sweeps: int, interpret: bool,
-            path: str = "stream") -> jax.Array:
+            path: str = "stream", external_i_halo: bool = False) -> jax.Array:
     """Wire a fused volumetric kernel: ``a4`` is ``(B, M, N, P)``.
 
     ``path="stream"`` (default) walks the i-blocks in order and carries the
     halo in VMEM scratch -- each input plane is fetched once.
     ``path="replicate"`` is the stateless parity escape hatch: the i-halo
     comes from passing ``a4`` ``2ri + 1`` times under block-shifted
-    (clamped) index maps (untiled) or the full ``(2ri+1) x (2rj+1)``
-    neighbour views (j-tiled).  Both paths share block geometry: untiled
-    blocks are ``(1, bi, N, P)``; j-tiled blocks ``(1, bi, bj, P)``, so the
-    working slab never exceeds ``(bi + 2*hi)(bj + 2*hj)P`` whatever N is
-    (``h = radius * sweeps``).  ``geom`` = (global row offset, global M)
-    int32.
+    index maps (untiled) or the full ``(2ri+1) x (2rj+1)``
+    neighbour views (j-tiled) -- edge blocks clamp, except on periodic axes
+    where they wrap to the far side.  Both paths share block geometry:
+    untiled blocks are ``(1, bi, N, P)``; j-tiled blocks ``(1, bi, bj, P)``,
+    so the working slab never exceeds ``(bi + 2*hi)(bj + 2*hj)P`` whatever
+    N is (``h = radius * sweeps``).  ``geom`` = (global row offset, global
+    M) int32.  ``external_i_halo=True`` (the sharded path) marks the i-axis
+    halo as already materialized in ``a4`` -- a periodic i BC is then *not*
+    wrapped locally (the ring exchange supplied the wrapped rows).
     """
     b, m, n, p = a4.shape
     _validate_blocks(m, n, bi, bj, sweeps, plan.spec.radius)
     if path == "stream":
-        return _call_3d_stream(a4, wf, geom, plan, bi, bj, sweeps, interpret)
+        return _call_3d_stream(a4, wf, geom, plan, bi, bj, sweeps, interpret,
+                               external_i_halo)
     if path != "replicate":
         raise ValueError(f"unknown path {path!r}; expected 'stream' or "
                          f"'replicate'")
     nbi = m // bi
     ri, rj, _ = plan.spec.radius
+    per_i, per_j = _periodic_axes(plan.spec)
+    wrap_i = per_i and not external_i_halo
     kern = functools.partial(stencil3d_kernel, plan=plan, bi=bi, bj=bj,
                              n_global=n, sweeps=sweeps,
                              acc_dtype=acc_dtype_for(a4.dtype))
@@ -180,8 +221,7 @@ def call_3d(a4: jax.Array, wf: jax.Array, geom: jax.Array, plan: StencilPlan,
 
         def imap_i(di: int):
             def f(bb, i):
-                ii = i if di == 0 else jnp.clip(i + di, 0, nbi - 1)
-                return (bb, ii, 0, 0)
+                return (bb, _edge_index(i, di, nbi, wrap_i), 0, 0)
             return f
 
         # 2ri+1 staged views = the replicated path's canonical per-radius
@@ -204,7 +244,8 @@ def call_3d(a4: jax.Array, wf: jax.Array, geom: jax.Array, plan: StencilPlan,
 
     nbj = n // bj
     block = (1, bi, bj, p)
-    in_specs = [pl.BlockSpec(block, _clamped_imap(di, dj, nbi - 1, nbj - 1))
+    in_specs = [pl.BlockSpec(block,
+                             _neighbor_imap(di, dj, nbi, nbj, wrap_i, per_j))
                 for di in range(-ri, ri + 1) for dj in range(-rj, rj + 1)]
     in_specs += [pl.BlockSpec(geom.shape, lambda bb, i, j: (0,)),
                  pl.BlockSpec(wf.shape, lambda bb, i, j: (0,))]
@@ -238,12 +279,12 @@ def _call_1d(a2: jax.Array, wf: jax.Array, plan: StencilPlan, block_rows: int,
 
 @functools.partial(jax.jit,
                    static_argnames=("stencil", "block_i", "block_j", "plan",
-                                    "sweeps", "path", "interpret"))
+                                    "sweeps", "path", "bc", "interpret"))
 def stencil_apply(a: jax.Array, w: jax.Array,
                   stencil: Union[str, int, StencilSpec] = "stencil27",
                   block_i: Optional[int] = None,
                   block_j: Optional[int] = None, plan: str = "auto",
-                  sweeps: int = 1, path: str = "auto",
+                  sweeps: int = 1, path: str = "auto", bc=None,
                   interpret: Optional[bool] = None) -> jax.Array:
     """Apply a registered stencil: ``sweeps`` fused Jacobi applications.
 
@@ -266,6 +307,12 @@ def stencil_apply(a: jax.Array, w: jax.Array,
     * ``block_i``/``block_j`` (i-block rows / j-tile columns) default to the
       plan-, path-, and radius-aware cost model, which engages j-tiling
       only when the full N x P slab would blow the VMEM budget;
+    * ``bc`` overrides the spec's per-axis-side boundary conditions (any
+      :func:`~.spec.as_boundary` spelling -- a kind string, a
+      :class:`~.spec.BC` / :func:`~.spec.dirichlet` value, or 3 per-axis
+      entries, each optionally a ``(lo, hi)`` pair; hashable forms only,
+      it rides through jit as a static argument).  ``None`` keeps the
+      spec's own BCs (all-clamp for the plain builtins);
     * ``interpret=None`` (default) interprets the kernel only when no
       compiled Pallas backend exists for the platform (CPU/CI) and compiles
       on TPU (the kernels are Mosaic-TPU-shaped; GPU stays interpreted); pass an explicit bool to force either mode.
@@ -276,6 +323,8 @@ def stencil_apply(a: jax.Array, w: jax.Array,
         raise ValueError(f"unknown path {path!r}; expected one of "
                          f"{PATH_KINDS}")
     spec = get_stencil(stencil)
+    if bc is not None:
+        spec = spec.with_bc(bc)
     cplan = compile_plan(spec, plan)
     acc = acc_dtype_for(a.dtype)
     wf = spec.canon_weights(w).astype(acc)

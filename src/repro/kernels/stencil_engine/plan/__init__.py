@@ -33,7 +33,8 @@ from typing import Tuple, Union
 
 from ..spec import StencilSpec, get_stencil
 from .ir import (Builder, PlanOp, StencilPlan, execute_plan,  # noqa: F401
-                 op_sources, peak_live, renumber, shift_slice)
+                 op_sources, peak_live, renumber, shift_slice,
+                 shift_slice_bc)
 from .passes import (PASS_PRESETS, build_direct, cse,  # noqa: F401
                      mirror_factor, mirror_symmetric, order_ops, run_passes)
 

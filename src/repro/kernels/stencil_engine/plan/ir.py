@@ -36,7 +36,7 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..spec import StencilSpec
+from ..spec import Boundary, StencilSpec, bc_labels
 
 Offset = Tuple[int, int, int]
 
@@ -96,6 +96,7 @@ class StencilPlan:
                 "flops": self.flops, "ops": len(self.ops),
                 "peak_live": self.peak_live,
                 "radius": list(self.spec.radius),
+                "bc": list(bc_labels(self.spec.bc)),
                 "pass_list": list(self.passes)}
 
 
@@ -195,6 +196,52 @@ def shift_slice(t: jax.Array, off: Offset) -> jax.Array:
     pad_shape[axis] = k
     pad = jnp.zeros(pad_shape, t.dtype)
     body = t[tuple(src)]
+    return jnp.concatenate([body, pad] if d > 0 else [pad, body], axis=axis)
+
+
+def shift_slice_bc(t: jax.Array, off: Offset, bc: Boundary,
+                   bc_axes: Tuple[bool, bool, bool]) -> jax.Array:
+    """:func:`shift_slice` with the boundary condition realized in the fill.
+
+    Only axes flagged in ``bc_axes`` -- those whose extent in ``t`` *is* the
+    full domain extent (k always; j on untiled volumetric blocks; the 1-D
+    path's k) -- realize their BC here: a positive shift vacates the high
+    side of the axis (reads past the top edge), so the fill block is that
+    side's ghost region: ``periodic`` wraps the opposite edge and
+    ``neumann`` mirrors the edge symmetrically (``ghost[q] = t[n-1-q]``).
+    ``clamp`` keeps the zero fill, and so does ``dirichlet`` -- the plan
+    executor runs on the *offset* field ``u - value`` (whose ghosts are
+    exactly zero; the executor adds ``value * sum(w)`` back, see
+    ``run_sweeps``), because a constant fill would be wrong for shifts of
+    intermediate partial sums.  Axes with a staged halo (i; j when tiled)
+    keep zero fill -- their BC is realized by the kernel's halo/ghost fill
+    instead.  Because the fill runs inside every operator application,
+    fused sweeps re-pad exactly like the per-sweep ``np.pad`` reference.
+    """
+    (idx, d), = [(i, o) for i, o in enumerate(off) if o]
+    axis = t.ndim - 3 + idx
+    n = t.shape[axis]
+    side = bc[idx][1] if d > 0 else bc[idx][0]
+    if not bc_axes[idx] or side.kind in ("clamp", "dirichlet"):
+        return shift_slice(t, off)
+    k = abs(d)
+    if side.kind == "periodic":
+        k = k % n
+        if k == 0:
+            return t
+    elif k >= n:                      # degenerate: whole axis out of domain
+        return jnp.zeros_like(t)
+    src = [slice(None)] * t.ndim
+    src[axis] = slice(k, None) if d > 0 else slice(0, -k)
+    body = t[tuple(src)]
+    ghost = [slice(None)] * t.ndim
+    if side.kind == "periodic":
+        # the vacated positions read the opposite edge
+        ghost[axis] = slice(0, k) if d > 0 else slice(-k, None)
+        pad = t[tuple(ghost)]
+    else:                             # neumann: symmetric mirror of this
+        ghost[axis] = slice(-k, None) if d > 0 else slice(0, k)
+        pad = jnp.flip(t[tuple(ghost)], axis=axis)   # side's own edge
     return jnp.concatenate([body, pad] if d > 0 else [pad, body], axis=axis)
 
 

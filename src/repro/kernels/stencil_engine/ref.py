@@ -7,6 +7,16 @@ given ``plan`` kind the kernel and this reference are bit-identical in f64
 block-boundary-free rounding noise.  Different plan kinds reassociate the
 tap sum and therefore agree only to rounding in floating point (exactly, on
 integer-valued data).
+
+Boundary conditions are realized ``np.pad``-style: each sweep pads the
+field by ``radius`` per axis under the per-axis-side pad mode (``clamp`` ->
+zeros, ``periodic`` -> ``wrap``, ``dirichlet`` -> ``constant`` at the ghost
+value, ``neumann`` -> ``symmetric``), axes in i, j, k order (so at ghost
+*corners* the later-padded axis wins -- the same convention the kernel's
+fill order and in-shift fills produce), runs the plan with plain zero-fill
+shifts on the padded field, crops the centre, and zeroes the one-point ring
+of any remaining ``clamp`` sides.  The all-clamp default skips the pad
+entirely and keeps the historical masked-execution graph byte-for-byte.
 """
 
 from __future__ import annotations
@@ -16,7 +26,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .kernel import acc_dtype_for
+from .kernel import acc_dtype_for, bc_all_clamp
 from .plan import StencilPlan, compile_plan, execute_plan
 from .spec import StencilSpec, get_stencil
 
@@ -30,30 +40,101 @@ def _interior_mask(shape, ndim: int) -> jax.Array:
     return mask
 
 
+_PAD_MODE = {"clamp": "constant", "periodic": "wrap",
+             "neumann": "symmetric"}
+
+
+def _pad_side(u: jax.Array, axis: int, lo_w: int, hi_w: int, bc) -> jax.Array:
+    if lo_w == 0 and hi_w == 0:
+        return u
+    pw = [(0, 0)] * u.ndim
+    pw[axis] = (lo_w, hi_w)
+    if bc.kind == "dirichlet":
+        return jnp.pad(u, pw, mode="constant",
+                       constant_values=jnp.asarray(bc.value, u.dtype))
+    return jnp.pad(u, pw, mode=_PAD_MODE[bc.kind])
+
+
+def pad_bc(u: jax.Array, spec: StencilSpec) -> jax.Array:
+    """One ``np.pad``-equivalent ghost extension of the trailing ``ndim``
+    axes by ``radius`` per side, per-axis-side modes, axes in i, j, k order
+    (a periodic pair pads in one ``wrap`` call; mixed-mode axes pad lo then
+    hi -- each one-sided pad reads only its own edge, so the order within
+    an axis doesn't matter)."""
+    for ax in range(3 - spec.ndim, 3):
+        r = spec.radius[ax]
+        if r == 0:
+            continue
+        axis = u.ndim - 3 + ax
+        lo, hi = spec.bc[ax]
+        if lo.kind == "periodic":           # validated paired
+            u = _pad_side(u, axis, r, r, lo)
+        else:
+            u = _pad_side(u, axis, r, 0, lo)
+            u = _pad_side(u, axis, 0, r, hi)
+    return u
+
+
+def _clamp_ring_mask(shape, spec: StencilSpec):
+    """Boolean mask zeroing the one-point output ring of every clamp side;
+    ``None`` when no side is clamp."""
+    mask = None
+    for ax in range(3 - spec.ndim, 3):
+        axis = len(shape) - 3 + ax
+        lo, hi = spec.bc[ax]
+        if lo.kind != "clamp" and hi.kind != "clamp":
+            continue
+        idx = jax.lax.broadcasted_iota(jnp.int32, shape, axis)
+        if lo.kind == "clamp":
+            t = idx > 0
+            mask = t if mask is None else mask & t
+        if hi.kind == "clamp":
+            t = idx < shape[axis] - 1
+            mask = t if mask is None else mask & t
+    return mask
+
+
 def apply_plan_once(u: jax.Array, w: jax.Array,
                     cplan: StencilPlan) -> jax.Array:
-    """One Dirichlet-masked application of the planned operator, in
-    ``u.dtype``."""
-    mask = _interior_mask(u.shape, cplan.spec.ndim)
-    return jnp.where(mask, execute_plan(cplan, u, w), 0)
+    """One BC-padded application of the planned operator, in ``u.dtype``."""
+    spec = cplan.spec
+    if bc_all_clamp(spec.bc):
+        # historical semantics, historical graph: masked execution on the
+        # unpadded field (zero-fill shifts ARE the clamp ghosts)
+        mask = _interior_mask(u.shape, spec.ndim)
+        return jnp.where(mask, execute_plan(cplan, u, w), 0)
+    up = pad_bc(u, spec)
+    v = execute_plan(cplan, up, w)
+    crop = [slice(None)] * u.ndim
+    for ax in range(3 - spec.ndim, 3):
+        axis = u.ndim - 3 + ax
+        r = spec.radius[ax]
+        crop[axis] = slice(r, r + u.shape[axis])
+    v = v[tuple(crop)]
+    mask = _clamp_ring_mask(u.shape, spec)
+    return v if mask is None else jnp.where(mask, v, 0)
 
 
 def apply_spec_once(u: jax.Array, w: jax.Array, spec: StencilSpec,
                     plan: str = "auto") -> jax.Array:
-    """One Dirichlet-masked application of the operator, in ``u.dtype``."""
+    """One BC-padded application of the operator, in ``u.dtype``."""
     return apply_plan_once(u, w, compile_plan(spec, plan))
 
 
-@functools.partial(jax.jit, static_argnames=("stencil", "sweeps", "plan"))
+@functools.partial(jax.jit, static_argnames=("stencil", "sweeps", "plan",
+                                             "bc"))
 def stencil_ref(a: jax.Array, w: jax.Array, stencil="stencil27",
-                sweeps: int = 1, plan: str = "auto") -> jax.Array:
+                sweeps: int = 1, plan: str = "auto", bc=None) -> jax.Array:
     """Reference for ``stencil_apply``: ``sweeps`` Jacobi applications of the
-    named (or ad-hoc) spec, Dirichlet boundary zeroed each sweep, under the
-    same compiled ``plan`` as the kernel.
+    named (or ad-hoc) spec, re-padded per sweep under the spec's (or the
+    ``bc`` override's) per-axis-side boundary conditions, under the same
+    compiled ``plan`` as the kernel.
 
     Jitted so eager callers see the same XLA rounding (FMA contraction) as
     the Pallas kernel -- that's what makes the f64 parity bit-exact."""
     spec = get_stencil(stencil)
+    if bc is not None:
+        spec = spec.with_bc(bc)
     if a.ndim < spec.ndim:
         raise ValueError(f"{spec.name}: input rank {a.ndim} < {spec.ndim}")
     cplan = compile_plan(spec, plan)

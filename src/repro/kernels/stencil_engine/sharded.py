@@ -2,10 +2,14 @@
 
 The partition plan comes from ``repro.sharding.planner.stencil_halo_sharding``
 (divisibility and halo-depth checks, PlanNote audit trail).  Each shard owns a
-contiguous slab of i-rows, trades ``radius * sweeps`` halo rows with its
-neighbours via ``lax.ppermute`` (edge shards receive zeros -- the Dirichlet
-boundary),
-and then runs the *same* fused plan-compiled Pallas kernel as the
+contiguous slab of i-rows and trades ``radius * sweeps`` halo rows with its
+neighbours via ``lax.ppermute``.  The exchange topology follows the spec's
+i-axis boundary condition: a *chain* for the non-periodic BCs (edge shards
+receive zeros, which the kernel's global-geometry ghost fill then turns into
+the clamp / dirichlet / neumann boundary -- so those BCs materialize only on
+the boundary shards) or a closed *ring* for periodic (shard 0 and shard N-1
+trade wrap-around halos).  Each shard
+then runs the *same* fused plan-compiled Pallas kernel as the
 single-device path -- by default the plane-streaming body, so the shard_map
 body also fetches each local plane from HBM exactly once and carries the
 halo window in VMEM scratch (``path="replicate"`` stays available as the
@@ -63,20 +67,28 @@ def _sharded_fn(cplan: StencilPlan, mesh: Mesh, axis: str, bi: int,
     if fn is not None:
         _SHARDED_CACHE.move_to_end(key)
         return fn
+    periodic_i = cplan.spec.bc[0][0].kind == "periodic"
+    if periodic_i:
+        # ring: shard 0's low halo wraps around from shard n-1 (and vice
+        # versa) -- the periodic BC *is* the wrap-around link
+        lo_perm = [(i, (i + 1) % n_sh) for i in range(n_sh)]
+        hi_perm = [((i + 1) % n_sh, i) for i in range(n_sh)]
+    else:
+        # chain: edge shards get zeros; the kernel's global-geometry ghost
+        # fill turns them into the clamp / dirichlet / neumann boundary
+        # (so non-periodic BCs only materialize on the boundary shards)
+        lo_perm = [(i, i + 1) for i in range(n_sh - 1)]
+        hi_perm = [(i + 1, i) for i in range(n_sh - 1)]
 
     def local_fn(a_loc: jax.Array, wf_: jax.Array) -> jax.Array:
         idx = jax.lax.axis_index(axis)
-        # halo rows from the i-1 / i+1 shards; edge shards get zeros, which
-        # the kernel masks as out-of-domain (Dirichlet).
-        lo = jax.lax.ppermute(a_loc[:, -h:], axis,
-                              [(i, i + 1) for i in range(n_sh - 1)])
-        hi = jax.lax.ppermute(a_loc[:, :h], axis,
-                              [(i + 1, i) for i in range(n_sh - 1)])
+        lo = jax.lax.ppermute(a_loc[:, -h:], axis, lo_perm)
+        hi = jax.lax.ppermute(a_loc[:, :h], axis, hi_perm)
         ext = jnp.concatenate([lo, a_loc, hi], axis=1)
         geom = jnp.stack([idx * m_loc - h,
                           jnp.int32(m)]).astype(jnp.int32)
         out = call_3d(ext, wf_, geom, cplan, bi, bj, sweeps, interpret,
-                      path)
+                      path, external_i_halo=True)
         return out[:, h:h + m_loc]
 
     fn = jax.jit(shard_map(local_fn, mesh=mesh, in_specs=(part, P(None)),
@@ -92,7 +104,7 @@ def stencil_sharded(a: jax.Array, w: jax.Array,
                     mesh: Optional[Mesh] = None, axis: str = "data",
                     block_i: Optional[int] = None,
                     block_j: Optional[int] = None, plan: str = "auto",
-                    sweeps: int = 1, path: str = "auto",
+                    sweeps: int = 1, path: str = "auto", bc=None,
                     interpret: Optional[bool] = None,
                     shard_plan: Optional[StencilShardPlan] = None
                     ) -> jax.Array:
@@ -104,7 +116,11 @@ def stencil_sharded(a: jax.Array, w: jax.Array,
     ``path`` selects the per-shard data-movement strategy exactly as in
     ``stencil_apply`` -- ``"auto"`` streams the halo-extended local slab
     (each local plane fetched once), ``"replicate"`` re-fetches the halo
-    neighbours per block (parity escape hatch).
+    neighbours per block (parity escape hatch).  ``bc`` overrides the
+    spec's boundary conditions exactly as in ``stencil_apply``; a periodic
+    i axis closes the halo exchange into a ring (wrap-around between shard
+    0 and shard ``n-1``) while dirichlet/neumann ghosts materialize only on
+    the boundary shards via the kernel's global-geometry fill.
 
     Note: the kernel runs per shard on the halo-extended local slab, so an
     explicit ``block_i`` must divide ``M / n_shards + 2 * sweeps`` (not M);
@@ -121,6 +137,8 @@ def stencil_sharded(a: jax.Array, w: jax.Array,
         raise ValueError(f"unknown path {path!r}; expected one of "
                          f"{PATH_KINDS}")
     spec = get_stencil(stencil)
+    if bc is not None:
+        spec = spec.with_bc(bc)
     cplan = compile_plan(spec, plan)
     interpret = resolve_interpret(interpret)
     if spec.ndim != 3:
@@ -132,9 +150,10 @@ def stencil_sharded(a: jax.Array, w: jax.Array,
         mesh = jax.make_mesh((jax.device_count(),), (axis,))
     m, n, p = a.shape[-3:]
     ri = spec.radius[0]
+    periodic_i = spec.bc[0][0].kind == "periodic"
     if shard_plan is None:
         shard_plan = stencil_halo_sharding(m, mesh, axis=axis, sweeps=sweeps,
-                                           radius=ri)
+                                           radius=ri, periodic=periodic_i)
     if shard_plan.n_shards > 1 and shard_plan.halo < ri * sweeps:
         raise ValueError(
             f"shard_plan.halo={shard_plan.halo} rows/side cannot cover "

@@ -25,6 +25,145 @@ import numpy as np
 Offset = Tuple[int, int, int]
 Radius = Tuple[int, int, int]
 
+BC_KINDS = ("clamp", "periodic", "dirichlet", "neumann")
+
+
+@dataclasses.dataclass(frozen=True)
+class BC:
+    """One boundary condition on one side of one axis.
+
+    ``clamp``
+        The engine's historical semantics (and the default): out-of-domain
+        reads are zeros and the one-point boundary ring of the *output* is
+        zeroed every sweep -- a homogeneous-Dirichlet solve where the ring
+        itself is the held boundary.
+    ``periodic``
+        Out-of-domain reads wrap around the axis (``np.pad`` mode
+        ``"wrap"``); the operator is applied at every point.  Must be paired
+        -- periodic on one side of an axis requires periodic on the other.
+    ``dirichlet``
+        Out-of-domain (ghost) reads are the constant ``value`` (``np.pad``
+        mode ``"constant"``); the operator is applied at every point.
+    ``neumann``
+        Zero-flux: out-of-domain reads mirror the domain edge-inclusively
+        (ghost ``u[-1-q] = u[q]``; ``np.pad`` mode ``"symmetric"``); the
+        operator is applied at every point.
+    """
+
+    kind: str
+    value: float = 0.0            # dirichlet ghost value; ignored otherwise
+
+    def __post_init__(self):
+        if self.kind not in BC_KINDS:
+            raise ValueError(f"unknown BC kind {self.kind!r}; expected one "
+                             f"of {BC_KINDS}")
+        if self.kind != "dirichlet" and self.value != 0.0:
+            raise ValueError(f"BC value is only meaningful for dirichlet, "
+                             f"got {self.kind}({self.value})")
+
+    def label(self) -> str:
+        if self.kind == "dirichlet":
+            return f"dirichlet({self.value:g})"
+        return self.kind
+
+
+CLAMP = BC("clamp")
+PERIODIC = BC("periodic")
+NEUMANN = BC("neumann")
+
+
+def dirichlet(value: float = 0.0) -> BC:
+    """The constant-ghost boundary condition ``u_ghost = value``."""
+    return BC("dirichlet", float(value))
+
+
+# (lo, hi) per axis, axes in (i, j, k) order.
+Boundary = Tuple[Tuple[BC, BC], Tuple[BC, BC], Tuple[BC, BC]]
+
+CLAMP_ALL: Boundary = ((CLAMP, CLAMP), (CLAMP, CLAMP), (CLAMP, CLAMP))
+
+
+def _as_bc(x) -> BC:
+    if isinstance(x, BC):
+        return x
+    if isinstance(x, str):
+        return BC(x)
+    raise TypeError(f"cannot interpret {x!r} as a BC (use a kind string, a "
+                    f"BC, or dirichlet(value))")
+
+
+def _as_axis_bc(x) -> Tuple[BC, BC]:
+    if isinstance(x, (BC, str)):
+        b = _as_bc(x)
+        return (b, b)
+    if isinstance(x, (tuple, list)) and len(x) == 2:
+        return (_as_bc(x[0]), _as_bc(x[1]))
+    raise TypeError(f"cannot interpret {x!r} as a per-axis BC (use one "
+                    f"kind/BC for both sides or a (lo, hi) pair)")
+
+
+def as_boundary(bc) -> Boundary:
+    """Canonicalize a boundary-condition spelling to the per-axis-side form.
+
+    Accepts ``None`` (all clamp, the default), one kind string or :class:`BC`
+    (applied to every side), or a 3-sequence of per-axis entries where each
+    entry is itself a kind/:class:`BC` (both sides) or a ``(lo, hi)`` pair.
+    The result is a hashable nested tuple, so a spec carrying it still rides
+    through ``jax.jit`` as a static argument.
+    """
+    if bc is None:
+        return CLAMP_ALL
+    if isinstance(bc, (BC, str)):
+        b = _as_bc(bc)
+        return ((b, b), (b, b), (b, b))
+    if isinstance(bc, (tuple, list)) and len(bc) == 3:
+        return tuple(_as_axis_bc(ax) for ax in bc)  # type: ignore[return-value]
+    raise TypeError(f"cannot interpret {bc!r} as boundary conditions (use a "
+                    f"kind, a BC, or 3 per-axis entries)")
+
+
+def _validate_boundary(bc: Boundary, ndim: int,
+                       radius: Radius = (1, 1, 1)) -> None:
+    for ax, (lo, hi) in enumerate(bc):
+        if (lo.kind == "periodic") != (hi.kind == "periodic"):
+            raise ValueError(
+                f"axis {ax}: periodic must be paired -- lo={lo.label()} "
+                f"hi={hi.label()} (a one-sided wrap has no meaning)")
+    if ndim == 1 and any(s.kind != "clamp" for ax in bc[:2] for s in ax):
+        raise ValueError("ndim=1 specs may only carry k-axis boundary "
+                         "conditions; i/j sides must stay clamp")
+    values = {s.value for ax in bc for s in ax if s.kind == "dirichlet"}
+    if len(values) > 1:
+        raise ValueError(
+            f"multiple distinct dirichlet values {sorted(values)}: corner "
+            f"ghost cells would depend on the plan's shift order; use one "
+            f"value for every dirichlet side")
+    # A nonzero dirichlet ghost value is realized by linearity
+    # (``stencil(u) = stencil(u - v) + v * sum(w)``, ghosts of the offset
+    # field all zero) -- which requires every *other* ghost kind to be zero
+    # under the offset too.  Clamp ghosts stay raw zeros (offset ghost
+    # ``-v``), so any point that genuinely reads a clamp ghost -- an
+    # interior point at distance >= 2 from a radius->=2 clamp edge -- would
+    # be off by ``v * w``.  At radius 1 clamp ghosts only feed ring-masked
+    # outputs, so the mix is well-defined there (and dirichlet(0) always
+    # agrees with clamp's zero ghosts).
+    if any(v != 0.0 for v in values):
+        for ax, sides in enumerate(bc):
+            if radius[ax] >= 2 and any(s.kind == "clamp" for s in sides):
+                raise ValueError(
+                    f"dirichlet with a nonzero ghost value cannot combine "
+                    f"with a clamp side on a radius-{radius[ax]} axis "
+                    f"(axis {ax}): clamp ghosts stay zero under the "
+                    f"dirichlet offset identity and are genuinely read at "
+                    f"radius >= 2; use dirichlet(0) or a non-clamp BC on "
+                    f"that axis")
+
+
+def bc_labels(bc: Boundary) -> Tuple[str, str, str]:
+    """Compact per-axis labels (``describe()`` / benchmark form)."""
+    return tuple(lo.label() if lo == hi else f"{lo.label()}|{hi.label()}"
+                 for lo, hi in bc)  # type: ignore[return-value]
+
 
 @dataclasses.dataclass(frozen=True)
 class StencilSpec:
@@ -37,7 +176,10 @@ class StencilSpec:
     ``radius`` bounds per-axis offsets (``|di| <= ri`` etc.) and drives every
     geometry decision downstream: halo width is ``radius * sweeps``, the
     replicated path stages ``2r + 1`` neighbour views, the streaming scratch
-    window carries ``block_i + ri * sweeps`` planes.
+    window carries ``block_i + ri * sweeps`` planes.  ``bc`` is the per-axis-
+    side boundary condition (:class:`BC`; default all-clamp, the historical
+    semantics) -- part of the frozen spec, so plan memoization, jit static
+    hashing, and ``describe()`` all distinguish BC variants for free.
     """
 
     name: str
@@ -47,6 +189,7 @@ class StencilSpec:
     n_weights: int                   # number of unique coefficients
     w_shape: Tuple[int, ...]         # user-facing weight array shape
     radius: Radius = (1, 1, 1)       # per-axis (ri, rj, rk) offset bound
+    bc: Boundary = CLAMP_ALL         # per-axis (lo, hi) boundary conditions
 
     @property
     def taps(self) -> int:
@@ -80,6 +223,20 @@ class StencilSpec:
             raise ValueError("offsets must be in lexicographic order")
         if self.w_index and max(self.w_index) >= self.n_weights:
             raise ValueError("w_index refers past n_weights")
+        # canonicalize any as_boundary spelling in place (idempotent on the
+        # canonical nested-tuple form)
+        object.__setattr__(self, "bc", as_boundary(self.bc))
+        _validate_boundary(self.bc, self.ndim, self.radius)
+
+    def with_bc(self, bc, name: str = None) -> "StencilSpec":
+        """The same stencil under different boundary conditions.
+
+        ``bc`` takes any :func:`as_boundary` spelling; ``name`` defaults to
+        the current name (specs hash on their full value including ``bc``,
+        so same-named BC variants still compile and memoize separately).
+        """
+        return dataclasses.replace(self, bc=as_boundary(bc),
+                                   name=self.name if name is None else name)
 
 
 _REGISTRY: Dict[str, StencilSpec] = {}
@@ -105,7 +262,7 @@ def list_stencils() -> Dict[str, StencilSpec]:
     return dict(_REGISTRY)
 
 
-def spec_from_mask(name: str, mask, ndim: int = 3) -> StencilSpec:
+def spec_from_mask(name: str, mask, ndim: int = 3, bc=None) -> StencilSpec:
     """Build a spec from an odd-shaped coefficient-index mask.
 
     ``mask`` has shape ``(2*ri + 1, 2*rj + 1, 2*rk + 1)`` (every extent odd;
@@ -151,7 +308,7 @@ def spec_from_mask(name: str, mask, ndim: int = 3) -> StencilSpec:
         n_w = used[-1] + 1 if used else 0
     return StencilSpec(name=name, ndim=ndim, offsets=tuple(offsets),
                        w_index=tuple(w_index), n_weights=n_w, w_shape=(n_w,),
-                       radius=(ri, rj, rk))
+                       radius=(ri, rj, rk), bc=as_boundary(bc))
 
 
 def _builtin_specs() -> None:
@@ -211,4 +368,20 @@ def _builtin_specs() -> None:
         aliases=("125",))
 
 
+def _builtin_bc_variants() -> None:
+    """BC-suffixed registry aliases: every builtin under each non-default
+    boundary condition (``dirichlet`` at the homogeneous value 0; pass an
+    explicit ``spec.with_bc(dirichlet(v))`` for inhomogeneous ghosts).  For
+    the k-only ``stencil3`` the BC applies to the k axis alone (i/j sides of
+    a 1-D spec must stay clamp)."""
+    for base in ("stencil3", "stencil7", "stencil27", "star13", "box125"):
+        spec = _REGISTRY[base]
+        for tag, b in (("periodic", PERIODIC), ("neumann", NEUMANN),
+                       ("dirichlet", dirichlet(0.0))):
+            bc = (((CLAMP, CLAMP), (CLAMP, CLAMP), (b, b))
+                  if spec.ndim == 1 else b)
+            register_stencil(spec.with_bc(bc, name=f"{base}_{tag}"))
+
+
 _builtin_specs()
+_builtin_bc_variants()

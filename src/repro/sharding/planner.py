@@ -176,25 +176,33 @@ class StencilShardPlan:
 
     ``n_shards == 1`` means "don't shard" (indivisible M or shards too thin
     for the halo) -- callers fall back to single-device execution; the
-    reason is recorded as a PlanNote, Table-2 style."""
+    reason is recorded as a PlanNote, Table-2 style.  ``periodic`` turns
+    the halo exchange into a ring: shard 0's low halo wraps around from
+    shard ``n-1`` (and vice versa) instead of arriving as zeros."""
     axis: str
     n_shards: int
     halo: int                 # rows exchanged per side == radius * sweeps
     local_rows: int
     spec: Any                 # PartitionSpec for a (B, M, N, P) operand
     notes: List[PlanNote]
+    periodic: bool = False    # i-axis BC is periodic: ring, not chain
 
 
 def stencil_halo_sharding(m: int, mesh: Mesh, axis: str = "data",
-                          sweeps: int = 1, radius: int = 1
-                          ) -> StencilShardPlan:
+                          sweeps: int = 1, radius: int = 1,
+                          periodic: bool = False) -> StencilShardPlan:
     """Plan i-axis halo-exchange sharding for an (..., M, N, P) stencil grid.
 
     Each shard owns ``M / n`` contiguous i-rows and exchanges ``radius *
     sweeps`` halo rows with each neighbour per fused call (a radius-R
-    operator applied ``sweeps`` times needs ``R`` rows per sweep).  Falls
-    back to an unsharded plan -- with the reason noted -- when M doesn't
-    divide or local rows couldn't cover the halo."""
+    operator applied ``sweeps`` times needs ``R`` rows per sweep).
+    ``periodic=True`` (the i-axis boundary condition is periodic) closes
+    the exchange into a ring with wrap-around links between shard 0 and
+    shard ``n - 1``; non-periodic edge BCs never travel -- dirichlet /
+    neumann ghosts materialize only on the boundary shards, from the
+    kernel's global-geometry fill.  Falls back to an unsharded plan -- with
+    the reason noted -- when M doesn't divide or local rows couldn't cover
+    the halo."""
     n = _mesh_axis_size(mesh, axis)
     halo = radius * sweeps
     notes: List[PlanNote] = []
@@ -202,7 +210,7 @@ def stencil_halo_sharding(m: int, mesh: Mesh, axis: str = "data",
     def fallback(reason: str) -> StencilShardPlan:
         notes.append(PlanNote("stencil/i-axis", (m,), None, reason))
         return StencilShardPlan(axis, 1, halo, m, P(None, None, None, None),
-                                notes)
+                                notes, periodic)
 
     if n <= 1:
         return fallback(f"axis {axis!r} has size {n}; running unsharded")
@@ -211,12 +219,15 @@ def stencil_halo_sharding(m: int, mesh: Mesh, axis: str = "data",
     local = m // n
     if local < halo:
         return fallback(f"local rows {local} < halo {halo}; replicating")
+    topo = ("ring (periodic wrap between shard 0 and shard "
+            f"{n - 1})" if periodic else
+            "chain (edge shards take boundary ghosts locally)")
     notes.append(PlanNote(
         "stencil/i-axis", (m,), P(None, axis, None, None),
         f"i-axis split {n} ways x {local} rows, halo {halo}/side "
-        f"(radius {radius} x sweeps {sweeps})"))
+        f"(radius {radius} x sweeps {sweeps}), {topo}"))
     return StencilShardPlan(axis, n, halo, local,
-                            P(None, axis, None, None), notes)
+                            P(None, axis, None, None), notes, periodic)
 
 
 def plan_summary(notes: List[PlanNote], max_rows: int = 12) -> str:
