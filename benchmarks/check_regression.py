@@ -5,10 +5,15 @@ Usage::
     python benchmarks/check_regression.py BASELINE.json FRESH.json [--tol 0.05]
 
 Compares the *modeled* quantities the engine's perf claims rest on -- the
-per-path ``bytes_per_point_*`` keys and the per-spec plan op counts
-(``shifts``, ``flops``, ``ops``, ``peak_live``) under every plan kind --
-and fails (exit 1) when any fresh value regresses more than ``tol`` (5%
-default) above the committed baseline, or when a baseline key disappeared.
+per-path ``bytes_per_point_*`` keys, the per-spec plan op counts
+(``shifts``, ``flops``, ``ops``, ``peak_live``) under every plan kind, and
+(schema v4) the cost-driven ``selection`` table: each spec's chosen plan
+must not regress its modeled cycles/point by more than ``tol``, and a
+selection that *flips* to a different ``(kind, unroll)`` must be justified
+by the fresh cost table (the new choice modeled no slower than the
+baseline's choice costs now) -- and fails (exit 1) when any fresh value
+regresses more than ``tol`` (5% default) above the committed baseline, or
+when a baseline key disappeared.
 Timing rows are deliberately ignored (CI runners are too noisy to gate on
 wall clock); the modeled numbers are deterministic, so any drift is a real
 code change that must be justified by refreshing the committed baseline in
@@ -41,11 +46,57 @@ def _flatten(doc: Dict) -> Dict[str, float]:
     return flat
 
 
+def _selection_checks(baseline: Dict, fresh: Dict,
+                      tol: float) -> Tuple[List[str], List[str]]:
+    """Gate the cost-driven selection table (schema v4).
+
+    Two failure modes per spec: the chosen plan's modeled cycles/point
+    regressed beyond ``tol``, or the selection flipped to a ``(kind,
+    unroll)`` that the *fresh* cost table rates slower than what the
+    baseline's choice costs now (a flip the model itself argues against --
+    a selection-logic bug, not a model change)."""
+    failures, notes = [], []
+    bsel = baseline.get("selection") or {}
+    fsel = fresh.get("selection") or {}
+    for name, b in sorted(bsel.items()):
+        f = fsel.get(name)
+        if f is None:
+            failures.append(f"selection/{name}: present in baseline but "
+                            f"missing from the fresh run")
+            continue
+        b_cpp, f_cpp = b["cycles_per_point"], f["cycles_per_point"]
+        if f_cpp > b_cpp * (1.0 + tol) + 1e-12:
+            failures.append(
+                f"selection/{name}: chosen plan's modeled cycles/point "
+                f"{b_cpp:g} -> {f_cpp:g} (+{(f_cpp / b_cpp - 1) * 100:.1f}%, "
+                f"limit +{tol:.0%})")
+        elif f_cpp < b_cpp:
+            notes.append(f"selection/{name}: modeled cycles/point improved "
+                         f"{b_cpp:g} -> {f_cpp:g}")
+        b_choice = (b["kind"], b["unroll"])
+        f_choice = (f["kind"], f["unroll"])
+        if f_choice != b_choice:
+            old_now = next((c["cycles_per_point"] for c in f["candidates"]
+                            if (c["kind"], c["unroll"]) == b_choice), None)
+            if old_now is not None and f_cpp > old_now + 1e-6:
+                failures.append(
+                    f"selection/{name}: flipped {b_choice} -> {f_choice} "
+                    f"but the fresh cost table rates the old choice faster "
+                    f"({old_now:g} vs {f_cpp:g} cycles/point)")
+            else:
+                notes.append(f"selection/{name}: choice moved {b_choice} -> "
+                             f"{f_choice} (consistent with the fresh cost "
+                             f"table)")
+    for name in sorted(set(fsel) - set(bsel)):
+        notes.append(f"selection/{name}: new spec, not gated yet")
+    return failures, notes
+
+
 def compare(baseline: Dict, fresh: Dict,
             tol: float) -> Tuple[List[str], List[str]]:
     """Returns (failures, notes)."""
     base, new = _flatten(baseline), _flatten(fresh)
-    failures, notes = [], []
+    failures, notes = _selection_checks(baseline, fresh, tol)
     if not base:
         failures.append("baseline has no gated keys (paths/plans sections "
                         "missing?) -- refusing to vacuously pass")

@@ -21,9 +21,12 @@ single-device view).
 
 Besides the ``name,us_per_call,derived`` text rows, every measurement is
 recorded as a dict and the whole run is dumped to ``BENCH_stencil.json``
-(path overridable via ``$BENCH_STENCIL_JSON``; schema v3: per-spec plan op
+(path overridable via ``$BENCH_STENCIL_JSON``; schema v4: per-spec plan op
 counts with ``radius`` + ``pass_list`` columns, per-path modeled
-bytes/point at radius 1 and 2) -- which CI uploads as an artifact.
+bytes/point at radius 1 and 2, and a per-spec ``selection`` section
+recording the cost-driven compiler's chosen ``(pass_list, unroll)``, its
+modeled cycles/point, and the losing candidates -- including a
+variable-coefficient variant) -- which CI uploads as an artifact.
 
 ``python benchmarks/stencil_throughput.py --quick`` runs only the
 streamed-vs-replicated rows plus the cost-model gate (exit 1 if the
@@ -73,22 +76,45 @@ def _time(fn, *args, reps: int = 5) -> float:
     return best
 
 
+SELECTION_SPECS = ("stencil3", "stencil7", "stencil27", "star13", "box125",
+                   "stencil27_var")
+
+
+def _selection_doc(name: str) -> Dict:
+    """The cost-driven compiler's choice for one spec (``_var`` suffix:
+    the variable-coefficient spelling): chosen kind + pass list + unroll,
+    its modeled cycles/point (and which core model produced it), and the
+    full candidate table it beat."""
+    from repro.kernels import get_stencil
+    spec = get_stencil(name[:-len("_var")]).with_coef("var") \
+        if name.endswith("_var") else get_stencil(name)
+    cplan = compile_plan(spec)
+    d = cplan.describe()
+    return {"kind": cplan.kind, "unroll": cplan.unroll,
+            "pass_list": d["pass_list"], "coef": cplan.spec.coef,
+            "cycles_per_point": d["selection"]["cycles_per_point"],
+            "source": d["selection"]["source"],
+            "candidates": d["selection"]["candidates"]}
+
+
 def write_json(path: Optional[str] = None,
                default: str = "BENCH_stencil.json") -> str:
     """Dump the recorded rows + per-spec plan op counts (with ``radius``,
     ``pass_list``, and ``bc`` columns) + per-path modeled bytes/point at
-    radius 1 and 2 to ``path``.  ``default`` is the fallback when neither
-    ``path`` nor ``$BENCH_STENCIL_JSON`` is set: the full run refreshes the
-    committed ``BENCH_stencil.json`` regression baseline; the quick gate
-    writes the gitignored ``BENCH_stencil.quick.json`` so a local
-    ``--quick`` can't silently clobber the baseline with a partial record
-    set."""
+    radius 1 and 2 + the per-spec cost-driven ``selection`` table to
+    ``path``.  ``default`` is the fallback when neither ``path`` nor
+    ``$BENCH_STENCIL_JSON`` is set: the full run refreshes the committed
+    ``BENCH_stencil.json`` regression baseline; the quick gate writes the
+    gitignored ``BENCH_stencil.quick.json`` so a local ``--quick`` can't
+    silently clobber the baseline with a partial record set."""
     path = path or os.environ.get("BENCH_STENCIL_JSON", default)
     doc = {
-        "schema": "bench_stencil/v3",
+        "schema": "bench_stencil/v4",
         "plans": {name: {kind: compile_plan(name, kind).describe()
                          for kind in ("direct", "cse", "factored")}
                   for name in ("stencil27", "star13", "box125")},
+        "selection": {name: _selection_doc(name)
+                      for name in SELECTION_SPECS},
         "paths": {p: {"bytes_per_point_f32": bytes_per_point(p, 4),
                       "bytes_per_point_f32_jtiled":
                           bytes_per_point(p, 4, j_tiled=True),

@@ -1,7 +1,7 @@
 """Back-compat shim: the shared stencil machinery moved to
 ``repro.kernels.stencil_engine`` (``common`` for the Pallas plumbing,
-``autotune`` for block selection)."""
+``autotune`` for block selection); ``repro.kernels._compat`` hosts the
+re-export table."""
 
-from .stencil_engine.autotune import pick_block_i  # noqa: F401
-from .stencil_engine.common import (interior_mask, shifted_planes,  # noqa: F401
-                                    stencil_pallas_call)
+from ._compat import (pick_block_i, interior_mask,  # noqa: F401
+                      shifted_planes, stencil_pallas_call)

@@ -1,4 +1,4 @@
 """Thin shim: the 27-point stencil lives in ``repro.kernels.stencil_engine``
-(registry name ``"stencil27"``)."""
+(registry name ``"stencil27"``; wrapper built in ``repro.kernels._compat``)."""
 
-from ..stencil_engine.compat import stencil27, stencil27_ref  # noqa: F401
+from .._compat import stencil27, stencil27_ref  # noqa: F401

@@ -1,4 +1,4 @@
 """Thin shim: the 3-point stencil lives in ``repro.kernels.stencil_engine``
-(registry name ``"stencil3"``)."""
+(registry name ``"stencil3"``; wrapper built in ``repro.kernels._compat``)."""
 
-from ..stencil_engine.compat import stencil3, stencil3_ref  # noqa: F401
+from .._compat import stencil3, stencil3_ref  # noqa: F401

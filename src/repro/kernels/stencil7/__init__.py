@@ -1,4 +1,4 @@
 """Thin shim: the 7-point stencil lives in ``repro.kernels.stencil_engine``
-(registry name ``"stencil7"``)."""
+(registry name ``"stencil7"``; wrapper built in ``repro.kernels._compat``)."""
 
-from ..stencil_engine.compat import stencil7, stencil7_ref  # noqa: F401
+from .._compat import stencil7, stencil7_ref  # noqa: F401

@@ -78,6 +78,16 @@ def _plan_ops(plan, taps: int) -> Tuple[int, int]:
     return 0, 2 * taps
 
 
+def _plan_var_weights(plan) -> int:
+    """Coefficient planes staged per input view: ``n_weights`` for a
+    variable-coefficient plan (its weights are domain-shaped fields that
+    ride the same block walk as the input), 0 for constant coefficients
+    (register/VMEM-resident, no per-block traffic)."""
+    if plan is not None and plan.spec.coef == "var":
+        return plan.spec.n_weights
+    return 0
+
+
 def _views(j_tiled: bool, path: str, ri: int = 1, rj: int = 1) -> int:
     """Input views staged per grid step: the streaming path fetches each
     block once (plus the ``2rj + 1`` j-neighbour tiles when j-tiled); the
@@ -99,7 +109,8 @@ def _geometry(bi: int, bj: Optional[int], n: int, sweeps: int,
 
 
 def bytes_per_point(path: str, itemsize: int, j_tiled: bool = False,
-                    sweeps: int = 1, radius: RadiusLike = None) -> float:
+                    sweeps: int = 1, radius: RadiusLike = None,
+                    coef: str = "const", n_weights: int = 0) -> float:
     """Modeled HBM bytes moved per output point per call (reads + the one
     write), amortized over ``sweeps`` fused applications.
 
@@ -109,20 +120,33 @@ def bytes_per_point(path: str, itemsize: int, j_tiled: bool = False,
     ``2ri + 2`` untiled, ``(2ri+1)(2rj+1) + 1`` j-tiled (4 and 10 at
     radius 1, 6 and 26 at radius 2).  Streaming j-tiled re-reads along j
     only (``2rj + 2``).
+
+    ``coef="var"`` adds the coefficient traffic: ``n_weights`` planes ride
+    every staged input view (co-streamed / replicated exactly like the
+    field), so e.g. streaming untiled moves ``2 + n_weights`` transfers
+    per point.  Constant coefficients stay resident and move nothing.
     """
     if path not in ("stream", "replicate"):
         raise ValueError(f"unknown path {path!r}; expected 'stream' or "
                          f"'replicate'")
     ri, rj, _ = _radius3(radius)
-    return (_views(j_tiled, path, ri, rj) + 1) * itemsize / sweeps
+    nv = _views(j_tiled, path, ri, rj)
+    wv = nv * n_weights if coef == "var" else 0
+    return (nv + wv + 1) * itemsize / sweeps
 
 
 def _step_time(bi: int, bj: Optional[int], n: int, p: int, itemsize: int,
                sweeps: int, shifts: int, flops: int,
                path: str = "replicate",
-               radius: Tuple[int, int, int] = (1, 1, 1)) -> float:
+               radius: Tuple[int, int, int] = (1, 1, 1),
+               var_weights: int = 0) -> float:
+    """``var_weights`` > 0 (a variable-coefficient plan) charges that many
+    coefficient planes of DMA per staged input view -- modeled at the input
+    itemsize (the coefficient dtype is the accumulation dtype; the model is
+    only consumed relatively, per spec)."""
     wj, ej, views = _geometry(bi, bj, n, sweeps, path, radius)
-    dma = (views + 1.0) * bi * wj * p * itemsize / HBM_BW
+    dma = ((views * (1 + var_weights) + 1.0) * bi * wj * p * itemsize
+           / HBM_BW)
     vpu = ((flops + shifts) * sweeps * (bi + 2 * radius[0] * sweeps) * ej * p
            / VPU_FLOPS)
     return max(dma, vpu) / (bi * wj * p * sweeps)  # per output point-sweep
@@ -131,12 +155,20 @@ def _step_time(bi: int, bj: Optional[int], n: int, p: int, itemsize: int,
 def _fits(bi: int, bj: Optional[int], n: int, p: int, itemsize: int,
           sweeps: int, acc_itemsize: int, vmem_budget: int,
           path: str = "replicate",
-          radius: Tuple[int, int, int] = (1, 1, 1)) -> bool:
+          radius: Tuple[int, int, int] = (1, 1, 1),
+          var_weights: int = 0) -> bool:
     wj, ej, views = _geometry(bi, bj, n, sweeps, path, radius)
+    hi = radius[0] * sweeps
     io_tiles = (views + 1) * bi * wj * p * itemsize
-    scratch = ((bi + radius[0] * sweeps) * ej * p * itemsize
-               if path == "stream" else 0)
-    working = 2 * (bi + 2 * radius[0] * sweeps) * ej * p * acc_itemsize
+    scratch = (bi + hi) * ej * p * itemsize if path == "stream" else 0
+    working = 2 * (bi + 2 * hi) * ej * p * acc_itemsize
+    if var_weights:
+        # staged coefficient views + co-rotating scratch + assembled strip,
+        # all in the accumulation dtype
+        io_tiles += views * var_weights * bi * wj * p * acc_itemsize
+        if path == "stream":
+            scratch += var_weights * (bi + hi) * ej * p * acc_itemsize
+        working += var_weights * (bi + 2 * hi) * ej * p * acc_itemsize
     return io_tiles + scratch + working <= vmem_budget
 
 
@@ -160,6 +192,7 @@ def autotune_blocks(m: int, n: int, p: int, itemsize: int,
     applies.
     """
     shifts, flops = _plan_ops(plan, taps)
+    var_w = _plan_var_weights(plan)
     rad = _radius3(radius, plan)
     min_bi = max(1, rad[0] * sweeps)
     min_bj = max(1, rad[1] * sweeps)
@@ -167,14 +200,14 @@ def autotune_blocks(m: int, n: int, p: int, itemsize: int,
 
     def key(bi: int, bj: Optional[int]):
         return (_step_time(bi, bj, n, p, itemsize, sweeps, shifts, flops,
-                           path, rad),
+                           path, rad, var_w),
                 0 if (bi % 8 == 0 or bi < 8) else 1,
                 -bi * (bj if bj is not None else n))
 
     if block_j is None:
         feasible = [bi for bi in cands_i
                     if _fits(bi, None, n, p, itemsize, sweeps, acc_itemsize,
-                             vmem_budget, path, rad)]
+                             vmem_budget, path, rad, var_w)]
         if feasible:
             return min(feasible, key=lambda bi: key(bi, None)), None
         if not allow_j_tiling:      # nothing fits: smallest legal block
@@ -184,7 +217,7 @@ def autotune_blocks(m: int, n: int, p: int, itemsize: int,
         cands_j = [block_j]
     pairs = [(bi, bj) for bi in cands_i for bj in cands_j
              if _fits(bi, bj, n, p, itemsize, sweeps, acc_itemsize,
-                      vmem_budget, path, rad)]
+                      vmem_budget, path, rad, var_w)]
     if pairs:
         return min(pairs, key=lambda bb: key(*bb))
     return cands_i[0], cands_j[0]   # nothing fits: smallest legal tile
@@ -211,6 +244,7 @@ def autotune_engine(m: int, n: int, p: int, itemsize: int,
         raise ValueError(f"unknown path {path!r}; expected one of "
                          f"{PATH_KINDS}")
     shifts, flops = _plan_ops(plan, taps)
+    var_w = _plan_var_weights(plan)
     rad = _radius3(radius, plan)
     cands = ("stream", "replicate") if path == "auto" else (path,)
     best = None
@@ -220,9 +254,9 @@ def autotune_engine(m: int, n: int, p: int, itemsize: int,
                                  vmem_budget=vmem_budget, block_j=block_j,
                                  path=cand, radius=rad)
         feasible = _fits(bi, bj, n, p, itemsize, sweeps, acc_itemsize,
-                         vmem_budget, cand, rad)
+                         vmem_budget, cand, rad, var_w)
         t = _step_time(bi, bj, n, p, itemsize, sweeps, shifts, flops, cand,
-                       rad)
+                       rad, var_w)
         # infeasible blockings only ever win when nothing fits anywhere;
         # the streaming path wins exact ties (strictly fewer HBM bytes).
         rank = (0 if feasible else 1, t, 0 if cand == "stream" else 1)

@@ -1,58 +1,14 @@
 """Legacy per-stencil entry points, now thin wrappers over the engine.
 
 ``repro.kernels.stencil{3,7,27}`` re-export these so seed-era call sites
-(benchmarks, examples, tests) keep their signatures and semantics.  The one
-deliberate change: ``interpret`` now defaults to ``None`` ("interpret only
-when no compiled Pallas backend exists"), so the same call site runs
-compiled on TPU and interpreted on CPU/GPU/CI (the engine's VMEM scratch
-windows are Mosaic-TPU-only).
+(benchmarks, examples, tests) keep their signatures and semantics.  The
+wrapper bodies themselves are built by the parametrized factories in
+:mod:`repro.kernels._compat` (one shim generator instead of three
+copy-pasted packages); see there for the one deliberate behavior change
+(``interpret`` defaults to ``None``).
 """
 
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
-import jax
-
-from .ops import stencil_apply
-from .ref import stencil_ref
-
-
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def stencil3(a: jax.Array, w: jax.Array, block_rows: Optional[int] = None,
-             interpret: Optional[bool] = None) -> jax.Array:
-    """Symmetric 3-point stencil along the last axis; ``w = (w_edge, w_center)``."""
-    return stencil_apply(a, w, "stencil3", block_i=block_rows,
-                         interpret=interpret)
-
-
-@functools.partial(jax.jit, static_argnames=("block_i", "interpret"))
-def stencil7(a: jax.Array, w: jax.Array, block_i: Optional[int] = None,
-             interpret: Optional[bool] = None) -> jax.Array:
-    """Symmetric 7-point stencil; ``w = (wc, wk, wj, wi)``."""
-    return stencil_apply(a, w, "stencil7", block_i=block_i,
-                         interpret=interpret)
-
-
-@functools.partial(jax.jit, static_argnames=("block_i", "interpret"))
-def stencil27(a: jax.Array, w: jax.Array, block_i: Optional[int] = None,
-              interpret: Optional[bool] = None) -> jax.Array:
-    """Symmetric 27-point stencil; ``w`` has shape (2, 2, 2)."""
-    return stencil_apply(a, w, "stencil27", block_i=block_i,
-                         interpret=interpret)
-
-
-def stencil3_ref(a, w):
-    """Pure-jnp oracle for the 3-point stencil (engine-backed)."""
-    return stencil_ref(a, w, "stencil3")
-
-
-def stencil7_ref(a, w):
-    """Pure-jnp oracle for the 7-point stencil (engine-backed)."""
-    return stencil_ref(a, w, "stencil7")
-
-
-def stencil27_ref(a, w):
-    """Pure-jnp oracle for the 27-point stencil (engine-backed)."""
-    return stencil_ref(a, w, "stencil27")
+from .._compat import (stencil3, stencil3_ref, stencil7,  # noqa: F401
+                       stencil7_ref, stencil27, stencil27_ref)

@@ -133,6 +133,8 @@ def run_sweeps(u: jax.Array, interior: Optional[jax.Array], w: jax.Array,
     runs on the offset field ``u - v`` (whose dirichlet ghosts are exactly
     the shifts' zero fill) and ``v * sum(w)`` is added back -- a constant
     fill inside the shifts would be wrong for intermediate partial sums.
+    The correction is elementwise: on a variable-coefficient spec ``w[k]``
+    is a strip-shaped coefficient plane stack and ``v * sum(w)`` a field.
     The valid region shrinks ``radius`` planes per sweep from the extended
     edges, so the central block is exact after ``sweeps`` applications
     under the ``h = radius * sweeps`` halo."""
@@ -323,6 +325,29 @@ def _concat_halo(prev, cur, nxt, h: int, axis: int) -> jax.Array:
                            axis=axis)
 
 
+def _assemble_strip(tiles, ri: int, rj: int, hi: int, hj: int,
+                    bj: Optional[int], ax: int) -> jax.Array:
+    """Build the halo-extended working strip from staged neighbour tiles.
+
+    ``tiles`` is the flat ``2ri + 1`` (untiled) or row-major ``(2ri + 1) x
+    (2rj + 1)`` (j-tiled) view list with block axes already stripped; ``ax``
+    is the position of the i axis within each tile (0 for the field, 1 for
+    a coefficient stack with its leading weight axis)."""
+    if bj is None:
+        prev, cur, nxt = (tiles[ri + d] if hi else tiles[ri]
+                          for d in (-1, 0, 1))
+        return _concat_halo(prev, cur, nxt, hi, ax)
+    nj = 2 * rj + 1
+
+    def jrow(ii: int) -> jax.Array:
+        row = [tiles[ii * nj + rj + (d if hj else 0)] for d in (-1, 0, 1)]
+        return _concat_halo(*row, hj, ax + 1)
+
+    mid = jrow(ri)
+    rows = (jrow(ri - 1), mid, jrow(ri + 1)) if hi else (mid, mid, mid)
+    return _concat_halo(*rows, hi, ax)
+
+
 def stencil3d_kernel(*refs, plan: StencilPlan, bi: int, bj: Optional[int],
                      n_global: int, sweeps: int, acc_dtype):
     """Replicated-halo fused-sweep volumetric kernel (``path="replicate"``).
@@ -333,35 +358,40 @@ def stencil3d_kernel(*refs, plan: StencilPlan, bi: int, bj: Optional[int],
     ``(di, dj)`` order (j-tiled, blocks ``(1, bi, bj, P)``).  ``geom_ref`` =
     (global row of this array's row 0, global M) -- both 0 and the local M
     for the single-device path; shard-dependent under shard_map.
+
+    Variable-coefficient specs replace the single resident ``w_ref`` with a
+    full parallel set of coefficient views (``refs`` becomes ``(*blocks,
+    geom_ref, *wblocks, o_ref)``, blocks ``(n_weights, bi, ., P)`` under the
+    same index maps), and the coefficient strip is assembled exactly like the
+    field strip -- coefficients are evaluated at the *output* point, so every
+    in-domain strip position sees its true coefficients; out-of-domain
+    positions only feed outputs the ghost fill / interior mask overwrites.
     """
+    var = plan.spec.coef == "var"
     o_ref = refs[-1]
-    geom_ref, w_ref = refs[-3], refs[-2]
-    blocks = refs[:-3]
+    if var:
+        nv = (len(refs) - 2) // 2
+        blocks, geom_ref, wblocks = refs[:nv], refs[nv], refs[nv + 1:-1]
+    else:
+        geom_ref, w_ref = refs[-3], refs[-2]
+        blocks = refs[:-3]
     ri, rj, _ = plan.spec.radius
     i_blk = pl.program_id(1)
     s = sweeps
     hi = ri * s
-    w = w_ref[...]
+    hj = rj * s
     if bj is None:
-        prev, cur, nxt = (blocks[ri + d][0] if hi else blocks[ri][0]
-                          for d in (-1, 0, 1))
-        u = _concat_halo(prev, cur, nxt, hi, 0).astype(acc_dtype)
         j0 = 0
     else:
-        hj = rj * s
         j_blk = pl.program_id(2)
-        nj = 2 * rj + 1
-
-        def jrow(ii: int) -> jax.Array:
-            tiles = [blocks[ii * nj + rj + (d if hj else 0)][0]
-                     for d in (-1, 0, 1)]
-            return _concat_halo(*tiles, hj, 1)     # (bi, bj + 2hj, P)
-
-        mid = jrow(ri)
-        rows = ((jrow(ri - 1), mid, jrow(ri + 1)) if hi
-                else (mid, mid, mid))
-        u = _concat_halo(*rows, hi, 0).astype(acc_dtype)
         j0 = j_blk * bj - hj
+    u = _assemble_strip([blk[0] for blk in blocks], ri, rj, hi, hj, bj,
+                        0).astype(acc_dtype)
+    if var:
+        w = _assemble_strip([wb[...] for wb in wblocks], ri, rj, hi, hj,
+                            bj, 1)
+    else:
+        w = w_ref[...]
     gi0 = geom_ref[0] + i_blk * bi - hi
     u, interior, shift, refill = prepare_strip(u, gi0, j0, geom_ref[1],
                                                n_global, plan, bj is not None)
@@ -403,18 +433,36 @@ def stencil3d_stream_kernel(*refs, plan: StencilPlan, bi: int,
     ``t - 2``; the final step re-fetches block 0's head planes for the tail
     of the sweep -- the periodic case's only extra HBM traffic (~2 extra
     block reads per call).
+
+    Variable-coefficient specs co-stream the coefficient planes: ``refs``
+    becomes ``(*views, geom_ref, *wviews, o_ref, scr_ref, wscr_ref)`` with
+    the coefficient views ``(n_weights, bi, ., P)`` walking the same block
+    sequence as the field views, and ``wscr_ref`` a second VMEM rotating
+    window ``(n_weights, bi + h, ., P)`` primed and rotated in lockstep with
+    ``scr_ref`` -- so coefficient planes, like field planes, are fetched
+    from HBM exactly once per call.  Coefficients are evaluated at the
+    *output* point; the above-domain lead-in planes are zero-primed and
+    only ever feed discarded ghost outputs.
     """
-    o_ref, scr_ref = refs[-2], refs[-1]
-    geom_ref, w_ref = refs[-4], refs[-3]
-    views = refs[:-4]
+    var = plan.spec.coef == "var"
+    if var:
+        o_ref, scr_ref, wscr_ref = refs[-3], refs[-2], refs[-1]
+        nv = (len(refs) - 4) // 2
+        views, geom_ref = refs[:nv], refs[nv]
+        wviews = refs[nv + 1:nv + 1 + nv]
+    else:
+        o_ref, scr_ref = refs[-2], refs[-1]
+        geom_ref, w_ref = refs[-4], refs[-3]
+        views = refs[:-4]
     ri, rj, _ = plan.spec.radius
     s = sweeps
     hi = ri * s
     lag = 2 if wrap_i else 1
-    w = w_ref[...]
     if bj is None:
         t = pl.program_id(1)
         cur = views[0][0]                                  # (bi, N, P)
+        if var:
+            wcur = wviews[0][...]                          # (nw, bi, N, P)
         j0 = 0
     else:
         hj = rj * s
@@ -423,6 +471,10 @@ def stencil3d_stream_kernel(*refs, plan: StencilPlan, bi: int,
         jm, jc, jp = (views[rj + d][0] if hj else views[rj][0]
                       for d in (-1, 0, 1))
         cur = _concat_halo(jm, jc, jp, hj, 1)              # (bi, bj+2hj, P)
+        if var:
+            wjm, wjc, wjp = (wviews[rj + d][...] if hj else wviews[rj][...]
+                             for d in (-1, 0, 1))
+            wcur = _concat_halo(wjm, wjc, wjp, hj, 2)      # (nw, bi, bj+2hj, P)
         j0 = j_blk * bj - hj
 
     if wrap_i:
@@ -431,10 +483,14 @@ def stencil3d_stream_kernel(*refs, plan: StencilPlan, bi: int,
             # cur is the *last* block: its tail h planes are the wrapped
             # ghost rows below global row 0.
             scr_ref[:hi] = cur[bi - hi:bi]
+            if var:
+                wscr_ref[:, :hi] = wcur[:, bi - hi:bi]
 
         @pl.when(t == 1)
         def _prime_first():
             scr_ref[hi:] = cur                             # block 0
+            if var:
+                wscr_ref[:, hi:] = wcur
     else:
         @pl.when(t == 0)
         def _prime():
@@ -443,12 +499,22 @@ def stencil3d_stream_kernel(*refs, plan: StencilPlan, bi: int,
             # 0 = cur.
             if hi:
                 scr_ref[:hi] = jnp.zeros((hi,) + cur.shape[1:], cur.dtype)
+                if var:
+                    wscr_ref[:, :hi] = jnp.zeros(
+                        wcur.shape[:1] + (hi,) + wcur.shape[2:], wcur.dtype)
             scr_ref[hi:] = cur
+            if var:
+                wscr_ref[:, hi:] = wcur
 
     @pl.when(t >= lag)
     def _compute():
         u = (jnp.concatenate([scr_ref[...], cur[:hi]], axis=0) if hi
              else scr_ref[...]).astype(acc_dtype)          # (bi + 2hi, ., P)
+        if var:
+            w = (jnp.concatenate([wscr_ref[...], wcur[:, :hi]], axis=1)
+                 if hi else wscr_ref[...])                 # (nw, bi + 2hi, ., P)
+        else:
+            w = w_ref[...]
         gi0 = geom_ref[0] + (t - lag) * bi - hi
         u, interior, shift, refill = prepare_strip(u, gi0, j0, geom_ref[1],
                                                    n_global, plan,
@@ -461,7 +527,12 @@ def stencil3d_stream_kernel(*refs, plan: StencilPlan, bi: int,
         if hi:
             tail = scr_ref[bi:bi + hi]
             scr_ref[:hi] = tail
+            if var:
+                wtail = wscr_ref[:, bi:bi + hi]
+                wscr_ref[:, :hi] = wtail
         scr_ref[hi:] = cur
+        if var:
+            wscr_ref[:, hi:] = wcur
 
 
 def stencil1d_kernel(a_ref, w_ref, o_ref, *, plan: StencilPlan, sweeps: int,

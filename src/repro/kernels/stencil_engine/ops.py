@@ -110,11 +110,17 @@ def _call_3d_stream(a4: jax.Array, wf: jax.Array, geom: jax.Array,
     wrapped block sequence ``(t + nbi - 1) % nbi``: the last block's tail
     planes are staged first (the ghost rows below row 0) and the first
     block's head planes are re-fetched at the end -- the ``r * sweeps``
-    lead/tail planes are the only re-fetched HBM traffic."""
+    lead/tail planes are the only re-fetched HBM traffic.
+
+    Variable-coefficient specs (``wf`` is ``(n_weights, M, N, P)``) add a
+    parallel set of coefficient views under the *same* block walk plus a
+    second co-rotating VMEM scratch window, so coefficient planes stream
+    exactly like field planes -- fetched once per call."""
     b, m, n, p = a4.shape
     nbi = m // bi
     ri, rj, _ = plan.spec.radius
     hi = ri * sweeps
+    var = plan.spec.coef == "var"
     per_i, per_j = _periodic_axes(plan.spec)
     wrap_i = per_i and not external_i_halo and hi > 0
     steps = nbi + (2 if wrap_i else 1)
@@ -138,8 +144,14 @@ def _call_3d_stream(a4: jax.Array, wf: jax.Array, geom: jax.Array,
         in_specs = [
             pl.BlockSpec(block, lambda bb, t: (bb, imap_t(t), 0, 0)),
             pl.BlockSpec(geom.shape, lambda bb, t: (0,)),
-            pl.BlockSpec(wf.shape, lambda bb, t: (0,)),
         ]
+        scratch = [pltpu.VMEM((bi + hi, n, p), a4.dtype)]
+        if var:
+            in_specs.append(pl.BlockSpec((wf.shape[0], bi, n, p),
+                                         lambda bb, t: (0, imap_t(t), 0, 0)))
+            scratch.append(pltpu.VMEM((wf.shape[0], bi + hi, n, p), wf.dtype))
+        else:
+            in_specs.append(pl.BlockSpec(wf.shape, lambda bb, t: (0,)))
         return pl.pallas_call(
             kern,
             grid=(b, steps),
@@ -147,7 +159,7 @@ def _call_3d_stream(a4: jax.Array, wf: jax.Array, geom: jax.Array,
             out_specs=pl.BlockSpec(
                 block, lambda bb, t: (bb, omap_t(t), 0, 0)),
             out_shape=jax.ShapeDtypeStruct(a4.shape, a4.dtype),
-            scratch_shapes=[pltpu.VMEM((bi + hi, n, p), a4.dtype)],
+            scratch_shapes=scratch,
             interpret=interpret,
         )(a4, geom, wf)
 
@@ -160,6 +172,11 @@ def _call_3d_stream(a4: jax.Array, wf: jax.Array, geom: jax.Array,
             return (bb, imap_t(t), _edge_index(j, dj, nbj, per_j), 0)
         return f
 
+    def wjmap(dj: int):
+        def f(bb, j, t):
+            return (0, imap_t(t), _edge_index(j, dj, nbj, per_j), 0)
+        return f
+
     # The full 2rj+1 j-neighbourhood is staged (the cost model's canonical
     # j-tiled streaming traffic, (2rj+2) bytes/pt); with bj >= rj*sweeps
     # validated, the kernel body only reads the +-1 tiles' halo slices --
@@ -168,8 +185,17 @@ def _call_3d_stream(a4: jax.Array, wf: jax.Array, geom: jax.Array,
     # radius-canonical accounting.
     in_specs = [pl.BlockSpec(block, jmap(dj))
                 for dj in range(-rj, rj + 1)]
-    in_specs += [pl.BlockSpec(geom.shape, lambda bb, j, t: (0,)),
-                 pl.BlockSpec(wf.shape, lambda bb, j, t: (0,))]
+    in_specs += [pl.BlockSpec(geom.shape, lambda bb, j, t: (0,))]
+    scratch = [pltpu.VMEM((bi + hi, bj + 2 * hj, p), a4.dtype)]
+    if var:
+        in_specs += [pl.BlockSpec((wf.shape[0], bi, bj, p), wjmap(dj))
+                     for dj in range(-rj, rj + 1)]
+        scratch.append(pltpu.VMEM((wf.shape[0], bi + hi, bj + 2 * hj, p),
+                                  wf.dtype))
+        w_args = [wf] * (2 * rj + 1)
+    else:
+        in_specs += [pl.BlockSpec(wf.shape, lambda bb, j, t: (0,))]
+        w_args = [wf]
     return pl.pallas_call(
         kern,
         grid=(b, nbj, steps),          # i innermost: the stream restarts
@@ -177,9 +203,9 @@ def _call_3d_stream(a4: jax.Array, wf: jax.Array, geom: jax.Array,
         out_specs=pl.BlockSpec(
             block, lambda bb, j, t: (bb, omap_t(t), j, 0)),
         out_shape=jax.ShapeDtypeStruct(a4.shape, a4.dtype),
-        scratch_shapes=[pltpu.VMEM((bi + hi, bj + 2 * hj, p), a4.dtype)],
+        scratch_shapes=scratch,
         interpret=interpret,
-    )(*([a4] * (2 * rj + 1)), geom, wf)
+    )(*([a4] * (2 * rj + 1)), geom, *w_args)
 
 
 def call_3d(a4: jax.Array, wf: jax.Array, geom: jax.Array, plan: StencilPlan,
@@ -211,6 +237,7 @@ def call_3d(a4: jax.Array, wf: jax.Array, geom: jax.Array, plan: StencilPlan,
                          f"'replicate'")
     nbi = m // bi
     ri, rj, _ = plan.spec.radius
+    var = plan.spec.coef == "var"
     per_i, per_j = _periodic_axes(plan.spec)
     wrap_i = per_i and not external_i_halo
     kern = functools.partial(stencil3d_kernel, plan=plan, bi=bi, bj=bj,
@@ -219,9 +246,10 @@ def call_3d(a4: jax.Array, wf: jax.Array, geom: jax.Array, plan: StencilPlan,
     if bj is None:
         block = (1, bi, n, p)
 
-        def imap_i(di: int):
+        def imap_i(di: int, lead: Optional[int] = None):
             def f(bb, i):
-                return (bb, _edge_index(i, di, nbi, wrap_i), 0, 0)
+                return (bb if lead is None else lead,
+                        _edge_index(i, di, nbi, wrap_i), 0, 0)
             return f
 
         # 2ri+1 staged views = the replicated path's canonical per-radius
@@ -229,10 +257,16 @@ def call_3d(a4: jax.Array, wf: jax.Array, geom: jax.Array, plan: StencilPlan,
         # honest); only the +-1 views' halo slices are read by the body.
         in_specs = [pl.BlockSpec(block, imap_i(di))
                     for di in range(-ri, ri + 1)]
-        in_specs += [
-            pl.BlockSpec(geom.shape, lambda bb, i: (0,)),
-            pl.BlockSpec(wf.shape, lambda bb, i: (0,)),
-        ]
+        in_specs += [pl.BlockSpec(geom.shape, lambda bb, i: (0,))]
+        if var:
+            # a full parallel set of coefficient views under the same walk
+            in_specs += [pl.BlockSpec((wf.shape[0], bi, n, p),
+                                      imap_i(di, lead=0))
+                         for di in range(-ri, ri + 1)]
+            w_args = [wf] * (2 * ri + 1)
+        else:
+            in_specs += [pl.BlockSpec(wf.shape, lambda bb, i: (0,))]
+            w_args = [wf]
         return pl.pallas_call(
             kern,
             grid=(b, nbi),
@@ -240,16 +274,30 @@ def call_3d(a4: jax.Array, wf: jax.Array, geom: jax.Array, plan: StencilPlan,
             out_specs=pl.BlockSpec(block, lambda bb, i: (bb, i, 0, 0)),
             out_shape=jax.ShapeDtypeStruct(a4.shape, a4.dtype),
             interpret=interpret,
-        )(*([a4] * (2 * ri + 1)), geom, wf)
+        )(*([a4] * (2 * ri + 1)), geom, *w_args)
 
     nbj = n // bj
     block = (1, bi, bj, p)
     in_specs = [pl.BlockSpec(block,
                              _neighbor_imap(di, dj, nbi, nbj, wrap_i, per_j))
                 for di in range(-ri, ri + 1) for dj in range(-rj, rj + 1)]
-    in_specs += [pl.BlockSpec(geom.shape, lambda bb, i, j: (0,)),
-                 pl.BlockSpec(wf.shape, lambda bb, i, j: (0,))]
+    in_specs += [pl.BlockSpec(geom.shape, lambda bb, i, j: (0,))]
     n_views = (2 * ri + 1) * (2 * rj + 1)
+    if var:
+        def wmap(di: int, dj: int):
+            inner = _neighbor_imap(di, dj, nbi, nbj, wrap_i, per_j)
+
+            def f(bb, i, j):
+                return (0,) + inner(bb, i, j)[1:]
+            return f
+
+        in_specs += [pl.BlockSpec((wf.shape[0], bi, bj, p), wmap(di, dj))
+                     for di in range(-ri, ri + 1)
+                     for dj in range(-rj, rj + 1)]
+        w_args = [wf] * n_views
+    else:
+        in_specs += [pl.BlockSpec(wf.shape, lambda bb, i, j: (0,))]
+        w_args = [wf]
     return pl.pallas_call(
         kern,
         grid=(b, nbi, nbj),
@@ -257,7 +305,7 @@ def call_3d(a4: jax.Array, wf: jax.Array, geom: jax.Array, plan: StencilPlan,
         out_specs=pl.BlockSpec(block, lambda bb, i, j: (bb, i, j, 0)),
         out_shape=jax.ShapeDtypeStruct(a4.shape, a4.dtype),
         interpret=interpret,
-    )(*([a4] * n_views), geom, wf)
+    )(*([a4] * n_views), geom, *w_args)
 
 
 def _call_1d(a2: jax.Array, wf: jax.Array, plan: StencilPlan, block_rows: int,
@@ -270,7 +318,8 @@ def _call_1d(a2: jax.Array, wf: jax.Array, plan: StencilPlan, block_rows: int,
                           acc_dtype=acc_dtype_for(a2.dtype)),
         grid=(rows // block_rows,),
         in_specs=[pl.BlockSpec((block_rows, p), lambda i: (i, 0)),
-                  pl.BlockSpec(wf.shape, lambda i: (0,))],
+                  pl.BlockSpec(wf.shape,
+                               lambda i: (0,) * wf.ndim)],
         out_specs=pl.BlockSpec((block_rows, p), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(a2.shape, a2.dtype),
         interpret=interpret,
@@ -290,6 +339,12 @@ def stencil_apply(a: jax.Array, w: jax.Array,
 
     * volumetric specs: ``a`` is ``(..., M, N, P)`` -- leading dims batch;
     * k-only specs: ``a`` is ``(..., P)`` -- leading dims are rows;
+    * variable-coefficient specs (``spec.coef == "var"``): ``w`` carries a
+      leading ``(n_weights,)`` axis with trailing dims broadcast over the
+      domain (``out[x] = sum_t w_t(x) * u[x + off_t]``, coefficients
+      evaluated at the output point); the coefficient planes ride the same
+      staging as the field -- co-streamed through a second VMEM rotating
+      window on the streaming path, replicated views on the other;
     * bf16/f32 inputs accumulate in f32, f64 stays f64 (reference path);
     * ``plan`` picks the execution schedule (``auto`` -> ``factored`` for
       mirror-symmetric specs, ``cse`` otherwise; ``direct`` is the naive
@@ -327,12 +382,13 @@ def stencil_apply(a: jax.Array, w: jax.Array,
         spec = spec.with_bc(bc)
     cplan = compile_plan(spec, plan)
     acc = acc_dtype_for(a.dtype)
-    wf = spec.canon_weights(w).astype(acc)
+    var = spec.coef == "var"
     interp = resolve_interpret(interpret)
 
     if spec.ndim == 1:
         if a.ndim < 2:
             raise ValueError(f"{spec.name}: need (..., rows, P), got {a.shape}")
+        wf = spec.canon_weights(w, a.shape[-1:] if var else None).astype(acc)
         rows = int(np.prod(a.shape[:-1]))
         a2 = a.reshape(rows, a.shape[-1])
         br = block_i or pick_block_rows(rows, a.shape[-1], a.dtype.itemsize)
@@ -341,6 +397,7 @@ def stencil_apply(a: jax.Array, w: jax.Array,
     if a.ndim < 3:
         raise ValueError(f"{spec.name}: need (..., M, N, P), got {a.shape}")
     m, n, p = a.shape[-3:]
+    wf = spec.canon_weights(w, (m, n, p) if var else None).astype(acc)
     batch = int(np.prod(a.shape[:-3])) if a.ndim > 3 else 1
     a4 = a.reshape(batch, m, n, p)
     bi, bj, rpath = block_i, block_j, path

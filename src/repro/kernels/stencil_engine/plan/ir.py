@@ -69,6 +69,15 @@ class StencilPlan:
     SSA values while executing the schedule in order -- the paper's
     register-pressure constraint recast as the VMEM working-set the executor
     carries.
+
+    ``unroll`` is the innermost-sweep unroll factor chosen by the
+    ``unroll[k]`` pass: the executor splits the trailing (k) axis into
+    ``unroll`` independent chunks whose arithmetic interleaves, the paper's
+    register-level unroll recast at trace level.  ``modeled`` carries the
+    chosen variant's :class:`~.cost.PlanCost` and ``candidates`` the full
+    ``(kind, unroll, cycles_per_point)`` table the cost-driven compiler
+    selected from (both hashable, so plans still ride through jit static
+    args and cache keys).
     """
 
     spec: StencilSpec
@@ -76,6 +85,9 @@ class StencilPlan:
     ops: Tuple[PlanOp, ...]
     out: int
     passes: Tuple[str, ...] = ()
+    unroll: int = 1
+    modeled: Optional[object] = None            # cost.PlanCost of the choice
+    candidates: Tuple[Tuple[str, int, float], ...] = ()
 
     @property
     def shifts(self) -> int:
@@ -91,13 +103,31 @@ class StencilPlan:
         return peak_live(self)
 
     def describe(self) -> Dict[str, object]:
-        """Machine-readable op counts (benchmark / JSON artifact form)."""
-        return {"taps": self.spec.taps, "shifts": self.shifts,
-                "flops": self.flops, "ops": len(self.ops),
-                "peak_live": self.peak_live,
-                "radius": list(self.spec.radius),
-                "bc": list(bc_labels(self.spec.bc)),
-                "pass_list": list(self.passes)}
+        """Machine-readable op counts (benchmark / JSON artifact form).
+
+        When the plan came out of the cost-driven compiler, ``selection``
+        records the choice: the chosen ``(pass_list, unroll)``, its modeled
+        cycles/point (and which core model produced the number), and the
+        losing ``(kind, unroll, cycles_per_point)`` candidates.
+        """
+        d = {"taps": self.spec.taps, "shifts": self.shifts,
+             "flops": self.flops, "ops": len(self.ops),
+             "peak_live": self.peak_live,
+             "radius": list(self.spec.radius),
+             "bc": list(bc_labels(self.spec.bc)),
+             "coef": self.spec.coef,
+             "unroll": self.unroll,
+             "pass_list": list(self.passes)}
+        if self.modeled is not None:
+            d["selection"] = {
+                "kind": self.kind, "unroll": self.unroll,
+                "cycles_per_point": self.modeled.cycles_per_point,
+                "source": self.modeled.source,
+                "candidates": [
+                    {"kind": k, "unroll": u, "cycles_per_point": c}
+                    for k, u, c in self.candidates],
+            }
+        return d
 
 
 class Builder:
@@ -249,11 +279,24 @@ def execute_plan(cplan: StencilPlan, u: jax.Array, w: jax.Array,
                  shift=shift_slice) -> jax.Array:
     """Interpret the plan at trace time.  ``u`` must already carry the
     accumulation dtype; ``w`` is the canonical flat weight vector in the same
-    dtype.  Both the Pallas kernel and the jnp reference call this -- one op
-    walk, identical arithmetic (see the module docstring for what that
-    guarantees bitwise)."""
+    dtype -- or, for a variable-coefficient spec, the canonical
+    ``(n_weights, *strip)`` coefficient field whose trailing dims match
+    ``u``'s (coefficients are evaluated at the *output* point, so ``w`` is
+    indexed, never shifted).  Both the Pallas kernel and the jnp reference
+    call this -- one op walk, identical arithmetic (see the module docstring
+    for what that guarantees bitwise).
+
+    A plan with ``unroll > 1`` executes the arithmetic ops on ``unroll``
+    independent trailing-axis chunks (shifts stay full-width); slicing
+    commutes with elementwise arithmetic, so the chunked walk computes the
+    same per-element op sequence.  When the trailing extent does not divide,
+    the plan falls back to the single-chunk walk.
+    """
     if cplan.out < 0:
         return jnp.zeros_like(u)
+    n = cplan.unroll
+    if n > 1 and u.shape[-1] % n == 0 and u.shape[-1] >= n:
+        return _execute_chunked(cplan, u, w, shift, n)
     vals = [u]
     for op in cplan.ops:
         if op.kind == "shift":
@@ -266,3 +309,50 @@ def execute_plan(cplan: StencilPlan, u: jax.Array, w: jax.Array,
             v = vals[op.b] + w[op.w_idx] * vals[op.a]
         vals.append(v)
     return vals[cplan.out]
+
+
+def _execute_chunked(cplan: StencilPlan, u: jax.Array, w: jax.Array,
+                     shift, n: int) -> jax.Array:
+    """The ``unroll`` executor: arithmetic per trailing-axis chunk, shifts
+    full-width.  Values live either as a full array (shift results, the
+    input) or as a chunk list (arithmetic results); conversions happen
+    lazily, only when a shift consumes an arithmetic result or the output
+    is assembled."""
+    var = cplan.spec.coef == "var"
+    c = u.shape[-1] // n
+
+    def split(v):
+        return [v[..., q * c:(q + 1) * c] for q in range(n)]
+
+    wq = split(w) if var else None
+    full: Dict[int, jax.Array] = {0: u}
+    chunks: Dict[int, List[jax.Array]] = {}
+
+    def as_chunks(i):
+        if i not in chunks:
+            chunks[i] = split(full[i])
+        return chunks[i]
+
+    def as_full(i):
+        if i not in full:
+            full[i] = jnp.concatenate(chunks[i], axis=-1)
+        return full[i]
+
+    def wsel(q, w_idx):
+        return wq[q][w_idx] if var else w[w_idx]
+
+    for k, op in enumerate(cplan.ops):
+        vid = k + 1
+        if op.kind == "shift":
+            full[vid] = shift(as_full(op.a), op.off)
+        elif op.kind == "scale":
+            a = as_chunks(op.a)
+            chunks[vid] = [wsel(q, op.w_idx) * a[q] for q in range(n)]
+        elif op.kind == "add":
+            a, bv = as_chunks(op.a), as_chunks(op.b)
+            chunks[vid] = [a[q] + bv[q] for q in range(n)]
+        else:                                     # fma
+            a, bv = as_chunks(op.a), as_chunks(op.b)
+            chunks[vid] = [bv[q] + wsel(q, op.w_idx) * a[q]
+                           for q in range(n)]
+    return as_full(cplan.out)

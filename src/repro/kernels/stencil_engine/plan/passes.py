@@ -29,6 +29,14 @@ invariants.  The passes:
     then across i -- 8 shifts + 19 flop-ops for stencil27, 12 + 19 for the
     radius-2 star13, 20 + 63 for box125.  A no-op on asymmetric specs.
 
+``unroll[k]``
+    Records an innermost-sweep unroll factor ``k`` in the plan IR: the
+    executor splits the trailing axis into ``k`` independent chunks whose
+    arithmetic interleaves -- the paper's register-level unroll (sect. 4.2,
+    the 1xU / 2xU configurations) recast at trace level.  Inserted by the
+    cost-driven compiler when the modeled PPC450 schedule says breaking the
+    latency-5 FPU dependence chain pays for the extra live values.
+
 ``order_ops``
     Pure reordering: builds the plan's SSA dependence DAG (shift ops on
     the LSU, arithmetic on the FPU) and list-schedules it greedily for
@@ -107,6 +115,7 @@ def cse(plan: StencilPlan) -> StencilPlan:
     spec = plan.spec
     if not spec.offsets:
         return _mark(plan, "cse", kind="cse")
+    var = spec.coef == "var"
     b = Builder()
     by_di: Dict[int, List[Tuple[int, int, int]]] = {}
     for (di, dj, dk), wi in zip(spec.offsets, spec.w_index):
@@ -122,9 +131,13 @@ def cse(plan: StencilPlan) -> StencilPlan:
     out = None
     for di in sorted(by_di):
         group = sorted(by_di[di])
-        if di and len(group) == 1:
-            dj, dk, wi = group[0]
-            out = b.acc(wi, b.shift(plane[(dj, dk)], 0, di), out)
+        if di and (len(group) == 1 or var):
+            # Variable coefficients are evaluated at the *output* point, so
+            # a scaled partial sum must never be shifted: keep each tap's
+            # i-shift on the unweighted plane and scale at the output (the
+            # same hoist a single-tap group always used).
+            for dj, dk, wi in group:
+                out = b.acc(wi, b.shift(plane[(dj, dk)], 0, di), out)
             continue
         acc = None
         for dj, dk, wi in group:
@@ -144,6 +157,7 @@ def mirror_factor(plan: StencilPlan) -> StencilPlan:
     spec = plan.spec
     if not spec.offsets or not mirror_symmetric(spec):
         return plan
+    var = spec.coef == "var"
     b = Builder()
     classes: Dict[Tuple[int, int, int], int] = {}
     for off, wi in zip(spec.offsets, spec.w_index):
@@ -165,14 +179,18 @@ def mirror_factor(plan: StencilPlan) -> StencilPlan:
             for bb, c in group:
                 acc = b.acc(classes[(0, bb, c)], j_sum[(bb, c)], acc)
             out = acc
-        elif len(group) == 1:
-            # a single |di|=a class would shift a bare product; hoist the
+        elif len(group) == 1 or var:
+            # A single |di|=a class would shift a bare product; hoist the
             # scale past the i-pair sum (same op counts -- determinism
-            # invariant)
-            bb, c = group[0]
-            pair = b.add(b.shift(j_sum[(bb, c)], 0, -a),
-                         b.shift(j_sum[(bb, c)], 0, a))
-            out = b.acc(classes[(a, bb, c)], pair, out)
+            # invariant).  Variable-coefficient specs take this branch for
+            # *every* class -- the partial factoring: the unweighted k- and
+            # j-pair sums stay shared (pure shifts of u), each class gets
+            # its own i-pair sum, and the per-point weight lands at the
+            # output, where the coefficient field is evaluated.
+            for bb, c in group:
+                pair = b.add(b.shift(j_sum[(bb, c)], 0, -a),
+                             b.shift(j_sum[(bb, c)], 0, a))
+                out = b.acc(classes[(a, bb, c)], pair, out)
         else:
             acc = None
             for bb, c in group:
@@ -181,6 +199,38 @@ def mirror_factor(plan: StencilPlan) -> StencilPlan:
             out = pair if out is None else b.add(out, pair)
     return _mark(plan, "mirror_factor", kind="factored", ops=tuple(b.ops),
                  out=out)
+
+
+def unroll(plan: StencilPlan, factor: int) -> StencilPlan:
+    """Record an innermost-sweep unroll factor in the plan IR.
+
+    The executor realizes it by splitting the trailing (k) axis into
+    ``factor`` independent chunks whose arithmetic interleaves -- the
+    paper's register-level unroll (sect. 4.2) recast at trace level, and
+    the knob the cost model turns to break the latency-5 FPU dependence
+    chain.  ``factor=1`` is the identity (no marker recorded); the op list
+    itself is untouched either way, so every op-count/liveness invariant
+    is preserved by construction.
+    """
+    if factor < 1:
+        raise ValueError(f"unroll factor must be >= 1, got {factor}")
+    if factor == 1:
+        return plan
+    return dataclasses.replace(plan, unroll=factor,
+                               passes=plan.passes + (f"unroll[{factor}]",))
+
+
+def preset_with_unroll(kind: str, factor: int) -> Tuple[str, ...]:
+    """The ``PASS_PRESETS[kind]`` pass list with ``unroll[factor]`` spliced
+    in (before the trailing ``order_ops`` so the liveness-ordering pass
+    stays last; a factor of 1 leaves the preset untouched)."""
+    names = PASS_PRESETS[kind]
+    if factor <= 1:
+        return names
+    tag = f"unroll[{factor}]"
+    if names and names[-1] == "order_ops":
+        return names[:-1] + (tag, "order_ops")
+    return names + (tag,)
 
 
 def order_ops(plan: StencilPlan) -> StencilPlan:
@@ -261,14 +311,22 @@ _PASSES: Dict[str, PassFn] = {
 def run_passes(spec: StencilSpec, pass_names: Tuple[str, ...]) -> StencilPlan:
     """Run an ordered pass list over ``spec``.  The first pass must be
     ``build_direct`` (the seed); every subsequent name indexes a
-    ``StencilPlan -> StencilPlan`` rewrite."""
+    ``StencilPlan -> StencilPlan`` rewrite.  The parametrized spelling
+    ``unroll[k]`` records an unroll factor ``k`` (see :func:`unroll`)."""
     if not pass_names or pass_names[0] != "build_direct":
         raise ValueError(f"pass list must start with 'build_direct', got "
                          f"{pass_names!r}")
     plan = build_direct(spec)
     for name in pass_names[1:]:
+        if name.startswith("unroll[") and name.endswith("]"):
+            try:
+                factor = int(name[len("unroll["):-1])
+            except ValueError:
+                raise ValueError(f"bad unroll factor in pass name {name!r}")
+            plan = unroll(plan, factor)
+            continue
         if name not in _PASSES:
             raise ValueError(f"unknown pass {name!r}; available: "
-                             f"{sorted(_PASSES)}")
+                             f"{sorted(_PASSES) + ['unroll[<k>]']}")
         plan = _PASSES[name](plan)
     return plan

@@ -96,7 +96,13 @@ def _clamp_ring_mask(shape, spec: StencilSpec):
 
 def apply_plan_once(u: jax.Array, w: jax.Array,
                     cplan: StencilPlan) -> jax.Array:
-    """One BC-padded application of the planned operator, in ``u.dtype``."""
+    """One BC-padded application of the planned operator, in ``u.dtype``.
+
+    Variable-coefficient specs (``w`` canonicalized to ``(n_weights,
+    *domain)``) have their coefficient planes zero-extended to the padded
+    field's shape: coefficients are evaluated at the *output* point, and
+    every ghost-position output is cropped (and re-padded from fresh ghosts
+    next sweep), so the extension value is never observed."""
     spec = cplan.spec
     if bc_all_clamp(spec.bc):
         # historical semantics, historical graph: masked execution on the
@@ -104,7 +110,12 @@ def apply_plan_once(u: jax.Array, w: jax.Array,
         mask = _interior_mask(u.shape, spec.ndim)
         return jnp.where(mask, execute_plan(cplan, u, w), 0)
     up = pad_bc(u, spec)
-    v = execute_plan(cplan, up, w)
+    wp = w
+    if spec.coef == "var":
+        pw = [(0, 0)] + [(spec.radius[ax], spec.radius[ax])
+                         for ax in range(3 - spec.ndim, 3)]
+        wp = jnp.pad(w, pw)
+    v = execute_plan(cplan, up, wp)
     crop = [slice(None)] * u.ndim
     for ax in range(3 - spec.ndim, 3):
         axis = u.ndim - 3 + ax
@@ -140,7 +151,8 @@ def stencil_ref(a: jax.Array, w: jax.Array, stencil="stencil27",
     cplan = compile_plan(spec, plan)
     acc = acc_dtype_for(a.dtype)
     u = a.astype(acc)
-    wf = spec.canon_weights(w).astype(acc)
+    dom = a.shape[-spec.ndim:] if spec.coef == "var" else None
+    wf = spec.canon_weights(w, dom).astype(acc)
     for _ in range(sweeps):
         u = apply_plan_once(u, wf, cplan)
     return u.astype(a.dtype)

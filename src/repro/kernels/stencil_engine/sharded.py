@@ -80,18 +80,28 @@ def _sharded_fn(cplan: StencilPlan, mesh: Mesh, axis: str, bi: int,
         lo_perm = [(i, i + 1) for i in range(n_sh - 1)]
         hi_perm = [(i + 1, i) for i in range(n_sh - 1)]
 
+    var = cplan.spec.coef == "var"
+
+    def _halo_ext(x: jax.Array) -> jax.Array:
+        # x is (lead, M_loc, N, P): the i axis sits at axis 1 for both the
+        # batched field (lead = batch) and the canonicalized coefficient
+        # stack (lead = n_weights), so one exchange serves both.
+        lo = jax.lax.ppermute(x[:, -h:], axis, lo_perm)
+        hi = jax.lax.ppermute(x[:, :h], axis, hi_perm)
+        return jnp.concatenate([lo, x, hi], axis=1)
+
     def local_fn(a_loc: jax.Array, wf_: jax.Array) -> jax.Array:
         idx = jax.lax.axis_index(axis)
-        lo = jax.lax.ppermute(a_loc[:, -h:], axis, lo_perm)
-        hi = jax.lax.ppermute(a_loc[:, :h], axis, hi_perm)
-        ext = jnp.concatenate([lo, a_loc, hi], axis=1)
+        ext = _halo_ext(a_loc)
+        wx = _halo_ext(wf_) if var else wf_
         geom = jnp.stack([idx * m_loc - h,
                           jnp.int32(m)]).astype(jnp.int32)
-        out = call_3d(ext, wf_, geom, cplan, bi, bj, sweeps, interpret,
+        out = call_3d(ext, wx, geom, cplan, bi, bj, sweeps, interpret,
                       path, external_i_halo=True)
         return out[:, h:h + m_loc]
 
-    fn = jax.jit(shard_map(local_fn, mesh=mesh, in_specs=(part, P(None)),
+    w_spec = part if var else P(None)
+    fn = jax.jit(shard_map(local_fn, mesh=mesh, in_specs=(part, w_spec),
                            out_specs=part, check_rep=False))
     _SHARDED_CACHE[key] = fn
     while len(_SHARDED_CACHE) > _SHARDED_CACHE_MAX:
@@ -169,7 +179,10 @@ def stencil_sharded(a: jax.Array, w: jax.Array,
     batch = int(np.prod(a.shape[:-3])) if a.ndim > 3 else 1
     a4 = a.reshape(batch, m, n, p)
     acc = acc_dtype_for(a.dtype)
-    wf = spec.canon_weights(w).astype(acc)
+    # var weights canonicalize to (n_weights, M, N, P) and shard with the
+    # domain (same PartitionSpec: the i axis sits at axis 1 either way)
+    dom = (m, n, p) if spec.coef == "var" else None
+    wf = spec.canon_weights(w, dom).astype(acc)
     h, m_loc, n_sh = shard_plan.halo, shard_plan.local_rows, shard_plan.n_shards
     m_ext = m_loc + 2 * h
     if block_i is not None and m_ext % block_i != 0:

@@ -26,6 +26,7 @@ Offset = Tuple[int, int, int]
 Radius = Tuple[int, int, int]
 
 BC_KINDS = ("clamp", "periodic", "dirichlet", "neumann")
+COEF_KINDS = ("const", "var")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -190,14 +191,53 @@ class StencilSpec:
     w_shape: Tuple[int, ...]         # user-facing weight array shape
     radius: Radius = (1, 1, 1)       # per-axis (ri, rj, rk) offset bound
     bc: Boundary = CLAMP_ALL         # per-axis (lo, hi) boundary conditions
+    coef: str = "const"              # "const" scalars | "var" per-point arrays
 
     @property
     def taps(self) -> int:
         return len(self.offsets)
 
-    def canon_weights(self, w: jax.Array) -> jax.Array:
-        """Flatten a user weight array to the ``(n_weights,)`` canonical form."""
+    def canon_weights(self, w: jax.Array, domain_shape=None) -> jax.Array:
+        """Canonicalize a user weight array.
+
+        ``coef="const"``: flatten to the ``(n_weights,)`` form.
+        ``coef="var"``: the weights are per-point coefficient fields evaluated
+        at the *output* point -- accept ``(n_weights, ...)`` (or the
+        ``w_shape``-shaped leading block) with trailing dims broadcastable
+        over the domain, and return ``(n_weights, *domain_shape)``.
+        ``domain_shape`` is the trailing spatial shape the operator runs on
+        (``(M, N, P)`` volumetric, ``(P,)`` for k-only specs) and is required
+        for variable coefficients.
+        """
         w = jnp.asarray(w)
+        if self.coef == "var":
+            if domain_shape is None:
+                raise ValueError(
+                    f"{self.name}: variable-coefficient weights need the "
+                    f"domain shape to canonicalize against")
+            domain_shape = tuple(int(s) for s in domain_shape)
+            lead = len(self.w_shape)
+            if w.shape[:lead] == tuple(self.w_shape):
+                w = w.reshape((self.n_weights,) + w.shape[lead:])
+            if w.ndim == 0 or w.shape[0] != self.n_weights:
+                raise ValueError(
+                    f"{self.name}: variable-coefficient weights must carry a "
+                    f"leading ({self.n_weights},) (or {self.w_shape}) "
+                    f"coefficient axis, got shape {w.shape}")
+            tail = w.shape[1:]
+            try:
+                full = jnp.broadcast_shapes(tail, domain_shape)
+            except ValueError:
+                full = None
+            if full != domain_shape:
+                raise ValueError(
+                    f"{self.name}: variable-coefficient weights with trailing "
+                    f"shape {tail} do not broadcast over the domain "
+                    f"{domain_shape}")
+            return jnp.broadcast_to(
+                w.reshape((self.n_weights,) + (1,) * (len(domain_shape)
+                                                      - len(tail)) + tail),
+                (self.n_weights,) + domain_shape)
         if int(np.prod(w.shape)) != int(np.prod(self.w_shape)):
             raise ValueError(
                 f"{self.name}: weights shape {w.shape} incompatible with "
@@ -223,6 +263,9 @@ class StencilSpec:
             raise ValueError("offsets must be in lexicographic order")
         if self.w_index and max(self.w_index) >= self.n_weights:
             raise ValueError("w_index refers past n_weights")
+        if self.coef not in COEF_KINDS:
+            raise ValueError(f"unknown coef kind {self.coef!r}; expected one "
+                             f"of {COEF_KINDS}")
         # canonicalize any as_boundary spelling in place (idempotent on the
         # canonical nested-tuple form)
         object.__setattr__(self, "bc", as_boundary(self.bc))
@@ -236,6 +279,18 @@ class StencilSpec:
         so same-named BC variants still compile and memoize separately).
         """
         return dataclasses.replace(self, bc=as_boundary(bc),
+                                   name=self.name if name is None else name)
+
+    def with_coef(self, coef: str, name: str = None) -> "StencilSpec":
+        """The same tap set with a different coefficient kind.
+
+        ``coef="var"`` makes the weights per-point arrays evaluated at the
+        output point (``out[x] = sum_t w_t(x) * u[x + off_t]``); specs hash
+        on their full value including ``coef``, so the plan memo, jit static
+        hashing, and ``describe()`` distinguish variable-coefficient variants
+        from the constant-coefficient original for free.
+        """
+        return dataclasses.replace(self, coef=coef,
                                    name=self.name if name is None else name)
 
 

@@ -1,0 +1,99 @@
+"""Cost-model fidelity: the plan compiler's cycles/point estimates ARE the
+core PPC450 scheduler + in-order simulator numbers (re-derived here
+independently for every enumerated radius-1 candidate), the cost-driven
+selection never picks a variant modeled slower than the ``direct`` baseline,
+and the plan memo never shares entries across variable- vs
+constant-coefficient spellings of one tap set."""
+
+import pytest
+
+from repro.core.dag import build_dag
+from repro.core.scheduler import greedy_schedule
+from repro.core.simulator import simulate_inorder
+from repro.kernels.stencil_engine.plan import compile_plan
+from repro.kernels.stencil_engine.plan.cost import (SIM_INSTR_LIMIT,
+                                                    SIM_ITERS, estimate_plan,
+                                                    lower_plan)
+from repro.kernels.stencil_engine.spec import get_stencil
+
+RADIUS1 = ["stencil3", "stencil7", "stencil27"]
+
+
+def _resimulate(plan) -> float:
+    """Independent replay of the cost model's pipeline: lower, greedy
+    list-schedule over the RAW-only DAG, in-order simulate, divide by the
+    unroll factor (one output point per unrolled copy)."""
+    instrs = lower_plan(plan, plan.unroll)
+    sched = greedy_schedule(instrs, build_dag(instrs, war=False))
+    ordered = [instrs[i] for i in sched.order]
+    timing = simulate_inorder(ordered, n_iters=SIM_ITERS)
+    return timing.per_iter_cycles / plan.unroll
+
+
+@pytest.mark.parametrize("name", RADIUS1)
+@pytest.mark.parametrize("coef", ["const", "var"])
+def test_estimates_are_simulator_cycles(name, coef):
+    """Every enumerated (kind, unroll) candidate of a radius-1 builtin fits
+    under SIM_INSTR_LIMIT, so its recorded cycles/point must come from the
+    in-order simulator -- and must equal an independent re-simulation."""
+    spec = get_stencil(name).with_coef(coef)
+    auto = compile_plan(spec)
+    assert auto.candidates, "cost-driven compiler records its candidates"
+    for kind, u, cpp in auto.candidates:
+        plan = compile_plan(spec, kind, unroll=u)
+        assert plan.modeled is not None
+        assert plan.modeled.cycles_per_point == cpp
+        assert plan.modeled.n_instrs <= SIM_INSTR_LIMIT
+        assert plan.modeled.source == "simulator"
+        assert plan.modeled.cycles_per_point == pytest.approx(
+            _resimulate(plan)), (name, coef, kind, u)
+
+
+@pytest.mark.parametrize("name", RADIUS1 + ["star13", "box125"])
+@pytest.mark.parametrize("coef", ["const", "var"])
+def test_selection_never_slower_than_direct(name, coef):
+    """The chosen variant is modeled no slower than the untouched-naive
+    ``direct`` baseline (and no slower than any enumerated candidate)."""
+    spec = get_stencil(name).with_coef(coef)
+    auto = compile_plan(spec)
+    chosen = auto.modeled.cycles_per_point
+    rows = dict(((k, u), c) for k, u, c in auto.candidates)
+    assert ("direct", 1) in rows
+    assert chosen <= rows[("direct", 1)] + 1e-6
+    assert chosen <= min(rows.values()) + 1e-6
+    sel = auto.describe()["selection"]
+    assert sel["kind"] == auto.kind and sel["unroll"] == auto.unroll
+    assert sel["cycles_per_point"] == chosen
+    assert len(sel["candidates"]) == len(auto.candidates)
+
+
+def test_unroll_estimate_matches_explicit_argument():
+    """estimate_plan(plan, u) and the plan's own baked-in unroll agree."""
+    plan = compile_plan("stencil27", "factored", unroll=2)
+    assert plan.unroll == 2
+    assert estimate_plan(plan).cycles_per_point == pytest.approx(
+        estimate_plan(plan, 2).cycles_per_point)
+
+
+def test_memo_not_shared_across_coefficient_kinds():
+    """Regression: the compile memo keys on the full spec value including
+    ``coef``, so var and const spellings of one tap set never share a plan
+    object, a cost table, or a modeled cost."""
+    spec = get_stencil("stencil27")
+    vspec = spec.with_coef("var")
+    pc, pv = compile_plan(spec), compile_plan(vspec)
+    # memoized within a spelling...
+    assert pc is compile_plan(spec)
+    assert pv is compile_plan(vspec)
+    assert pc is compile_plan(get_stencil("stencil27"))
+    # ...never across coefficient kinds, even at a pinned (kind, unroll)
+    assert pc is not pv
+    assert pc.spec.coef == "const" and pv.spec.coef == "var"
+    k, u = pv.kind, pv.unroll
+    same_kind_const = compile_plan(spec, k, unroll=u)
+    assert same_kind_const is not compile_plan(vspec, k, unroll=u)
+    # the var variant pays per-point weight loads: strictly more instructions
+    # and a strictly larger modeled cost at the same (kind, unroll)
+    assert pv.modeled.n_instrs > same_kind_const.modeled.n_instrs
+    assert (pv.modeled.cycles_per_point
+            > same_kind_const.modeled.cycles_per_point)
