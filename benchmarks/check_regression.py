@@ -7,13 +7,18 @@ Usage::
 Compares the *modeled* quantities the engine's perf claims rest on -- the
 per-path ``bytes_per_point_*`` keys, the per-spec plan op counts
 (``shifts``, ``flops``, ``ops``, ``peak_live``) under every plan kind, and
-(schema v4) the cost-driven ``selection`` table: each spec's chosen plan
-must not regress its modeled cycles/point by more than ``tol``, and a
-selection that *flips* to a different ``(kind, unroll)`` must be justified
-by the fresh cost table (the new choice modeled no slower than the
-baseline's choice costs now) -- and fails (exit 1) when any fresh value
-regresses more than ``tol`` (5% default) above the committed baseline, or
-when a baseline key disappeared.
+the cost-driven ``selection`` table: each spec's chosen plan must not
+regress its modeled cycles/point by more than ``tol``, and a selection
+that *flips* to a different ``(kind, unroll)`` must be justified by the
+fresh cost table (the new choice modeled no slower than the baseline's
+choice costs now), and (schema v5) the sweeps-aware ``sweeps`` table: the
+chosen (fused / wavefront / chained) mode's modeled bytes/point must not
+regress beyond ``tol`` and a mode flip must be consistent with the fresh
+race (feasibility, then bytes, then time) -- and fails (exit 1) when any
+fresh value regresses more than ``tol`` (5% default) above the committed
+baseline, or when a baseline key disappeared.  Rows present only in the
+fresh run (new specs, new sweep configurations) are reported as "new, not
+gated yet" notes, never failures -- growth is not a regression.
 Timing rows are deliberately ignored (CI runners are too noisy to gate on
 wall clock); the modeled numbers are deterministic, so any drift is a real
 code change that must be justified by refreshing the committed baseline in
@@ -92,11 +97,70 @@ def _selection_checks(baseline: Dict, fresh: Dict,
     return failures, notes
 
 
+def _sweeps_checks(baseline: Dict, fresh: Dict,
+                   tol: float) -> Tuple[List[str], List[str]]:
+    """Gate the sweeps-aware mode-selection table (schema v5).
+
+    Per ``spec/s`` entry: the chosen (fused / wavefront / chained) mode's
+    modeled bytes/point must not regress beyond ``tol``, and a *mode flip*
+    must be one the fresh race itself argues for -- the old mode, priced by
+    the fresh candidate table, must not beat the new choice on (bytes,
+    time).  Fresh-only entries (new specs / new ``s``) are notes, not
+    failures."""
+    failures, notes = [], []
+    bsw = baseline.get("sweeps") or {}
+    fsw = fresh.get("sweeps") or {}
+    for name, b in sorted(bsw.items()):
+        f = fsw.get(name)
+        if f is None:
+            failures.append(f"sweeps/{name}: present in baseline but "
+                            f"missing from the fresh run")
+            continue
+        b_bpp, f_bpp = b.get("bytes_per_point"), f.get("bytes_per_point")
+        if isinstance(b_bpp, (int, float)) and isinstance(f_bpp, (int, float)):
+            if f_bpp > b_bpp * (1.0 + tol) + 1e-12:
+                failures.append(
+                    f"sweeps/{name}: chosen mode's modeled bytes/point "
+                    f"{b_bpp:g} -> {f_bpp:g} "
+                    f"(+{(f_bpp / b_bpp - 1) * 100:.1f}%, limit +{tol:.0%})")
+            elif f_bpp < b_bpp:
+                notes.append(f"sweeps/{name}: modeled bytes/point improved "
+                             f"{b_bpp:g} -> {f_bpp:g}")
+        if f.get("mode") != b.get("mode"):
+            old = next((c for c in f.get("candidates") or []
+                        if c.get("mode") == b.get("mode")), None)
+            worse = False
+            if old is not None and f_bpp is not None:
+                o_bpp = old.get("bytes_per_point")
+                o_tpp = old.get("time_per_point")
+                f_tpp = f.get("time_per_point")
+                worse = (o_bpp is not None and f_bpp > o_bpp + 1e-12) or (
+                    o_bpp is not None and abs(f_bpp - o_bpp) <= 1e-12
+                    and o_tpp is not None and f_tpp is not None
+                    and f_tpp > o_tpp + 1e-15)
+            if worse:
+                failures.append(
+                    f"sweeps/{name}: flipped {b.get('mode')} -> "
+                    f"{f.get('mode')} but the fresh race rates the old "
+                    f"mode better ({o_bpp:g} B/pt vs {f_bpp:g})")
+            else:
+                notes.append(f"sweeps/{name}: mode moved {b.get('mode')} "
+                             f"-> {f.get('mode')} (consistent with the "
+                             f"fresh race)")
+    for name in sorted(set(fsw) - set(bsw)):
+        notes.append(f"sweeps/{name}: new sweep configuration, not gated "
+                     f"yet")
+    return failures, notes
+
+
 def compare(baseline: Dict, fresh: Dict,
             tol: float) -> Tuple[List[str], List[str]]:
     """Returns (failures, notes)."""
     base, new = _flatten(baseline), _flatten(fresh)
     failures, notes = _selection_checks(baseline, fresh, tol)
+    sw_fail, sw_notes = _sweeps_checks(baseline, fresh, tol)
+    failures.extend(sw_fail)
+    notes.extend(sw_notes)
     if not base:
         failures.append("baseline has no gated keys (paths/plans sections "
                         "missing?) -- refusing to vacuously pass")

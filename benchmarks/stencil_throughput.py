@@ -21,18 +21,23 @@ single-device view).
 
 Besides the ``name,us_per_call,derived`` text rows, every measurement is
 recorded as a dict and the whole run is dumped to ``BENCH_stencil.json``
-(path overridable via ``$BENCH_STENCIL_JSON``; schema v4: per-spec plan op
+(path overridable via ``$BENCH_STENCIL_JSON``; schema v5: per-spec plan op
 counts with ``radius`` + ``pass_list`` columns, per-path modeled
-bytes/point at radius 1 and 2, and a per-spec ``selection`` section
-recording the cost-driven compiler's chosen ``(pass_list, unroll)``, its
-modeled cycles/point, and the losing candidates -- including a
-variable-coefficient variant) -- which CI uploads as an artifact.
+bytes/point at radius 1 and 2, a per-spec ``selection`` section recording
+the cost-driven compiler's chosen ``(pass_list, unroll)``, its modeled
+cycles/point, and the losing candidates -- including a
+variable-coefficient variant -- and a ``sweeps`` section recording the
+sweeps-aware autotuner's (fused / wavefront / chained) verdict per
+``(spec, s)`` with each mode's modeled bytes/point and time) -- which CI
+uploads as an artifact.
 
 ``python benchmarks/stencil_throughput.py --quick`` runs only the
-streamed-vs-replicated rows plus the cost-model gate (exit 1 if the
+streamed-vs-replicated rows plus the cost-model gates (exit 1 if the
 streamed path's modeled bytes/point exceeds 2.5 x itemsize -- at radius 1
 *and* radius 2 -- or regresses above the replicated path, for the
-reference 27-point and star13 configurations) -- the fast CI guard.
+reference 27-point and star13 configurations; or if the temporal
+wavefront's modeled bytes/point exceeds ``1.25 * 2 * itemsize / s`` for
+stencil27 at s=4) -- the fast CI guard.
 """
 
 from __future__ import annotations
@@ -50,8 +55,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.perfmodel import streaming_roofline
-from repro.kernels import (autotune_engine, bytes_per_point, compile_plan,
-                           stencil_apply, stencil_ref, stencil3_ref,
+from repro.kernels import (autotune_engine, autotune_sweeps,
+                           bytes_per_point, compile_plan, stencil_apply,
+                           stencil_ref, stencil_sweep_driver, stencil3_ref,
                            stencil7_ref, stencil27, stencil27_ref)
 from repro.kernels.stencil_engine.autotune import HBM_BW, VPU_FLOPS
 
@@ -78,6 +84,21 @@ def _time(fn, *args, reps: int = 5) -> float:
 
 SELECTION_SPECS = ("stencil3", "stencil7", "stencil27", "star13", "box125",
                    "stencil27_var")
+
+# (spec, s) configurations recorded in the ``sweeps`` section: the
+# sweeps-aware autotuner's (fused / wavefront / chained) race at the
+# reference shape, including a radius-2 and a red-black entrant.
+SWEEPS_CONFIGS = (("stencil27", 2), ("stencil27", 4), ("star13", 4),
+                  ("stencil27_redblack", 2))
+
+
+def _sweeps_doc(name: str, s: int) -> Dict:
+    """The sweeps-aware autotuner's verdict for ``(name, s)`` at the
+    reference shape: chosen mode/path/blocks, its modeled bytes/point and
+    time/point per sweep, and the full candidate table it beat."""
+    m, n, p, itemsize = (REF_CONFIG[k] for k in ("m", "n", "p", "itemsize"))
+    sel = autotune_sweeps(m, n, p, itemsize, s, compile_plan(name))
+    return sel.describe()["selection"]
 
 
 def _selection_doc(name: str) -> Dict:
@@ -109,12 +130,14 @@ def write_json(path: Optional[str] = None,
     silently clobber the baseline with a partial record set."""
     path = path or os.environ.get("BENCH_STENCIL_JSON", default)
     doc = {
-        "schema": "bench_stencil/v4",
+        "schema": "bench_stencil/v5",
         "plans": {name: {kind: compile_plan(name, kind).describe()
                          for kind in ("direct", "cse", "factored")}
                   for name in ("stencil27", "star13", "box125")},
         "selection": {name: _selection_doc(name)
                       for name in SELECTION_SPECS},
+        "sweeps": {f"{name}/s{s}": _sweeps_doc(name, s)
+                   for name, s in SWEEPS_CONFIGS},
         "paths": {p: {"bytes_per_point_f32": bytes_per_point(p, 4),
                       "bytes_per_point_f32_jtiled":
                           bytes_per_point(p, 4, j_tiled=True),
@@ -183,6 +206,7 @@ def run() -> List[str]:
     rows.extend(_engine_rows(rng))
     rows.extend(_plan_rows(rng))
     rows.extend(_path_rows(rng))
+    rows.extend(_sweeps_rows(rng))
     rows.extend(_radius_rows(rng))
     rows.extend(_bc_rows(rng))
     rows.append(_jtiled_row(rng))
@@ -192,12 +216,13 @@ def run() -> List[str]:
 
 
 def run_quick() -> List[str]:
-    """CI guard: only the streamed-vs-replicated rows + the cost-model gate
-    (no size sweep, no subprocess sharding)."""
+    """CI guard: only the streamed-vs-replicated rows + the cost-model and
+    wavefront gates (no size sweep, no subprocess sharding)."""
     _RECORDS.clear()
     rng = np.random.default_rng(0)
     rows = _path_rows(rng)
     rows.extend(check_stream_model())
+    rows.extend(check_wavefront_model())
     write_json(default="BENCH_stencil.quick.json")
     return rows
 
@@ -374,6 +399,77 @@ def _path_rows(rng) -> List[str]:
                 mstencil_per_s=sweeps * st / t / 1e6,
                 speedup_vs_replicate=base / t, max_err=err,
                 ok=bool(err < 1e-4)))
+    return rows
+
+
+def _sweeps_rows(rng) -> List[str]:
+    """Temporal-integration modes for ``s`` sweeps of stencil27: ``s``
+    chained single-sweep calls (one HBM round-trip each) vs one fused
+    ``sweeps=s`` call vs the temporal-wavefront pipeline, with each mode's
+    modeled bytes/point, verified against the reference -- plus a
+    red-black Gauss-Seidel run through the driver."""
+    rows: List[str] = []
+    m, n, p, itemsize = (REF_CONFIG[k] for k in ("m", "n", "p", "itemsize"))
+    w = jnp.asarray(rng.uniform(0.1, 1, (2, 2, 2)), jnp.float32)
+    a = jnp.asarray(rng.standard_normal((m, n, p)), jnp.float32)
+    s = 4
+    st = (m - 2) * (n - 2) * (p - 2)
+    ref = stencil_ref(a, w, "stencil27", sweeps=s)
+    for mode in ("chained", "fused", "wavefront"):
+        bpp = (2.0 * itemsize if mode == "chained"
+               else 2.0 * itemsize / s)
+        t = _time(lambda x, mo=mode: stencil_sweep_driver(
+            x, w, "stencil27", sweeps=s, mode=mo), a, reps=3)
+        err = float(jnp.max(jnp.abs(stencil_sweep_driver(
+            a, w, "stencil27", sweeps=s, mode=mode) - ref)))
+        rows.append(_row(
+            f"engine27.sweeps_{mode}_s{s}.{m}x{n}x{p}", t * 1e6,
+            f"{s*st/t/1e6:.2f} Mstencil/s bytes_per_pt={bpp:.1f} "
+            f"max_err={err:.2e} ok={err < 1e-4}",
+            mode=mode, sweeps=s, bytes_per_point=bpp,
+            mstencil_per_s=s * st / t / 1e6, max_err=err,
+            ok=bool(err < 1e-4)))
+    # red-black Gauss-Seidel ordering through the auto-raced driver
+    t = _time(lambda x: stencil_sweep_driver(
+        x, w, "stencil27_redblack", sweeps=2), a, reps=3)
+    err = float(jnp.max(jnp.abs(
+        stencil_sweep_driver(a, w, "stencil27_redblack", sweeps=2)
+        - stencil_ref(a, w, "stencil27_redblack", sweeps=2))))
+    rows.append(_row(
+        f"engine27.sweeps_redblack_s2.{m}x{n}x{p}", t * 1e6,
+        f"{2*st/t/1e6:.2f} Mstencil/s ordering=redblack max_err={err:.2e} "
+        f"ok={err < 1e-4}",
+        ordering="redblack", sweeps=2, mstencil_per_s=2 * st / t / 1e6,
+        max_err=err, ok=bool(err < 1e-4)))
+    return rows
+
+
+def check_wavefront_model() -> List[str]:
+    """The CI gate (satellite): the temporal wavefront for stencil27 at
+    s=4 must model bytes/point within 1.25 x of the ideal
+    ``2 * itemsize / s`` and the sweeps-aware autotuner must not fall back
+    to the chained per-sweep round-trip.  Appends a gate row; raises
+    ``SystemExit(1)`` on violation so the workflow fails."""
+    itemsize = REF_CONFIG["itemsize"]
+    m, n, p = (REF_CONFIG[k] for k in ("m", "n", "p"))
+    s = 4
+    sel = autotune_sweeps(m, n, p, itemsize, s, compile_plan("stencil27"))
+    wf = [c for c in sel.candidates if c[0] == "wavefront"]
+    wf_bpp = wf[0][4] if wf else float("inf")
+    limit = 1.25 * (2 * itemsize / s)
+    ok = wf_bpp <= limit and sel.mode != "chained"
+    rows = [_row("engine27.wavefront_gate", 0.0,
+                 f"wavefront={wf_bpp:.2f} B/pt limit={limit:.2f} s={s} "
+                 f"auto_mode={sel.mode} ok={ok}",
+                 wavefront_bytes_per_point=wf_bpp, limit=limit, sweeps=s,
+                 auto_mode=sel.mode, ok=bool(ok))]
+    if not ok:
+        print("\n".join(rows))
+        write_json(default="BENCH_stencil.quick.json")
+        raise SystemExit(
+            f"stencil wavefront gate failed: stencil27 s={s} wavefront "
+            f"modeled {wf_bpp} bytes/point (limit {limit}), auto mode "
+            f"{sel.mode!r}")
     return rows
 
 

@@ -88,14 +88,42 @@ Boundary conditions -- ``spec.with_bc`` / ``stencil_apply(..., bc=...)``
     (re-fetching only the first ``radius * sweeps`` planes), the sharded
     path turns the halo exchange into a ring.
 
+Temporal wavefront tiling -- :func:`stencil_sweep_driver` (:mod:`.sweeps`)
+    The streaming ideal extended through *time*: ``s`` pipelined sweep
+    stages ride one pass over the i-blocks (stage ``t`` consuming planes
+    stage ``t-1`` produced one block earlier), so each input plane is
+    fetched from HBM once per ``s`` sweeps -- modeled ``2 * itemsize / s``
+    bytes/point like the fused call, but every stage carries only the
+    *single-sweep* halo ``radius * sweep_apps`` instead of the fused
+    ``radius * s * sweep_apps`` window and matching VPU-redundant strip.
+    :func:`autotune_sweeps` races (fused, wavefront, chained) per
+    ``(spec, shape, s)`` -- feasibility, then fewest modeled bytes/point,
+    then modeled time -- and records the verdict in
+    ``SweepSelection.describe()["selection"]``; all three modes are
+    bit-exact on integer-valued data.  A periodic i axis runs via a
+    caller-side HBM pre-extension of the ``radius * sweep_apps * s`` deep
+    halo.
+
+Red-black Gauss-Seidel -- ``spec.with_ordering("redblack")``
+    Plan-level ordering property: each sweep updates the red checkerboard
+    half (global ``(i + j + k)`` parity) in place, then the black half
+    reading the fresh red values -- masked in ``run_sweeps`` from the
+    kernel's global geometry, mirrored exactly in the NumPy oracle, and
+    registered as ``*_redblack`` builtins.  The effective halo per sweep
+    doubles (``sweep_apps == 2``), which the cost model, the fused/
+    wavefront kernels, and the sharded halo depth all account for.
+
 Sharded execution -- :func:`stencil_sharded`
     ``shard_map`` over the i-axis: the partition plan (divisibility, halo
     depth, PlanNotes) comes from
     ``repro.sharding.planner.stencil_halo_sharding``; shards exchange
-    ``radius * sweeps`` halo rows via ``lax.ppermute`` -- a chain whose
-    edge shards take their boundary ghosts locally, or a closed ring when
-    the i axis is periodic -- and run the same fused kernel,
-    with global-geometry masking keeping shard seams exact.  Compiled
+    ``radius * sweep_apps * sweeps`` halo rows via ``lax.ppermute`` --
+    a chain whose edge shards take their boundary ghosts locally, or a
+    closed ring when the i axis is periodic -- and run the same fused
+    kernel (or, with ``mode="wavefront"``, the temporal-wavefront
+    pipeline) *once*: ``s`` sweeps cost one exchange round, shard-edge
+    strips redundantly recomputed from the deep halo, with
+    global-geometry masking keeping shard seams exact.  Compiled
     shard_map programs are memoized keyed on device ids + axis names (not
     ``Mesh`` objects) in a bounded cache.
 
@@ -104,9 +132,10 @@ Tier-1 verify: ``PYTHONPATH=src python -m pytest -x -q``
 property tests in ``tests/test_stencil_plan.py``).
 """
 
-from .autotune import (PATH_KINDS, autotune_block_i,  # noqa: F401
-                       autotune_blocks, autotune_engine, bytes_per_point,
-                       pick_block_i, pick_block_rows)
+from .autotune import (PATH_KINDS, SWEEP_MODES, SweepSelection,  # noqa: F401
+                       autotune_block_i, autotune_blocks, autotune_engine,
+                       autotune_sweeps, bytes_per_point, pick_block_i,
+                       pick_block_rows, wavefront_block_i)
 from .compat import (stencil3, stencil3_ref, stencil7, stencil7_ref,  # noqa: F401
                      stencil27, stencil27_ref)
 from .common import DEFAULT_VMEM_BUDGET  # noqa: F401
@@ -117,7 +146,8 @@ from .plan import (PASS_PRESETS, PLAN_KINDS, PlanOp,  # noqa: F401
                    shift_slice_bc)
 from .ref import stencil_ref  # noqa: F401
 from .sharded import stencil_sharded  # noqa: F401
-from .spec import (BC, BC_KINDS, CLAMP, NEUMANN, PERIODIC,  # noqa: F401
-                   StencilSpec, as_boundary, bc_labels, dirichlet,
-                   get_stencil, list_stencils, register_stencil,
-                   spec_from_mask)
+from .spec import (BC, BC_KINDS, CLAMP, NEUMANN,  # noqa: F401
+                   ORDERING_KINDS, PERIODIC, StencilSpec, as_boundary,
+                   bc_labels, dirichlet, get_stencil, list_stencils,
+                   register_stencil, spec_from_mask)
+from .sweeps import stencil_sweep_driver, stencil_wavefront  # noqa: F401

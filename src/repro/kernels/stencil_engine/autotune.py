@@ -42,7 +42,8 @@ streaming scratch window itself overflows VMEM.
 
 from __future__ import annotations
 
-from typing import Optional, Tuple, Union
+import dataclasses
+from typing import Dict, Optional, Tuple, Union
 
 from .common import DEFAULT_VMEM_BUDGET, divisors as _divisors
 
@@ -51,6 +52,12 @@ HBM_BW = 819e9          # bytes/s
 VPU_FLOPS = 3e12        # f32 elementwise flop/s
 
 PATH_KINDS = ("auto", "stream", "replicate")
+
+# Time-integration execution modes for ``s`` sweeps (see autotune_sweeps):
+# one fused pallas_call with a radius*s-deep halo, s pipelined wavefront
+# stages each carrying the single-sweep halo, or s chained single-sweep
+# calls (one HBM round-trip per sweep -- the bit-exact baseline).
+SWEEP_MODES = ("auto", "fused", "wavefront", "chained")
 
 RadiusLike = Union[int, Tuple[int, int, int], None]
 
@@ -78,6 +85,15 @@ def _plan_ops(plan, taps: int) -> Tuple[int, int]:
     return 0, 2 * taps
 
 
+def _plan_apps(plan) -> int:
+    """Operator applications per sweep: ``spec.sweep_apps`` (2 for red-black
+    Gauss-Seidel, whose fused halo and VPU work both double), 1 without a
+    plan (legacy Jacobi callers)."""
+    if plan is not None:
+        return plan.spec.sweep_apps
+    return 1
+
+
 def _plan_var_weights(plan) -> int:
     """Coefficient planes staged per input view: ``n_weights`` for a
     variable-coefficient plan (its weights are domain-shaped fields that
@@ -100,12 +116,12 @@ def _views(j_tiled: bool, path: str, ri: int = 1, rj: int = 1) -> int:
 
 def _geometry(bi: int, bj: Optional[int], n: int, sweeps: int,
               path: str = "replicate",
-              radius: Tuple[int, int, int] = (1, 1, 1)):
+              radius: Tuple[int, int, int] = (1, 1, 1), apps: int = 1):
     """(output columns, extended columns, staged input views) per step."""
     ri, rj, _ = radius
     if bj is None:
         return n, n, _views(False, path, ri, rj)
-    return bj, bj + 2 * rj * sweeps, _views(True, path, ri, rj)
+    return bj, bj + 2 * rj * sweeps * apps, _views(True, path, ri, rj)
 
 
 def bytes_per_point(path: str, itemsize: int, j_tiled: bool = False,
@@ -125,10 +141,24 @@ def bytes_per_point(path: str, itemsize: int, j_tiled: bool = False,
     every staged input view (co-streamed / replicated exactly like the
     field), so e.g. streaming untiled moves ``2 + n_weights`` transfers
     per point.  Constant coefficients stay resident and move nothing.
+
+    ``path="wavefront"`` is the temporal-wavefront pipeline (untiled,
+    constant coefficients): one read + one write amortized over ``sweeps``
+    pipelined stages -- ``2 * itemsize / sweeps``, the paper's streaming
+    ideal extended through time.  (A periodic i axis re-reads its
+    ``2 * radius * sweep_apps * sweeps`` pre-extension rows on top of
+    this canonical figure; see ``autotune_sweeps`` for the shape-aware
+    number.)
     """
+    if path == "wavefront":
+        if j_tiled:
+            raise ValueError("the wavefront path is untiled (full-N blocks)")
+        if coef == "var":
+            raise ValueError("the wavefront path needs constant coefficients")
+        return 2 * itemsize / sweeps
     if path not in ("stream", "replicate"):
-        raise ValueError(f"unknown path {path!r}; expected 'stream' or "
-                         f"'replicate'")
+        raise ValueError(f"unknown path {path!r}; expected 'stream', "
+                         f"'replicate', or 'wavefront'")
     ri, rj, _ = _radius3(radius)
     nv = _views(j_tiled, path, ri, rj)
     wv = nv * n_weights if coef == "var" else 0
@@ -139,16 +169,18 @@ def _step_time(bi: int, bj: Optional[int], n: int, p: int, itemsize: int,
                sweeps: int, shifts: int, flops: int,
                path: str = "replicate",
                radius: Tuple[int, int, int] = (1, 1, 1),
-               var_weights: int = 0) -> float:
+               var_weights: int = 0, apps: int = 1) -> float:
     """``var_weights`` > 0 (a variable-coefficient plan) charges that many
     coefficient planes of DMA per staged input view -- modeled at the input
     itemsize (the coefficient dtype is the accumulation dtype; the model is
-    only consumed relatively, per spec)."""
-    wj, ej, views = _geometry(bi, bj, n, sweeps, path, radius)
+    only consumed relatively, per spec).  ``apps`` scales the VPU work and
+    the halo-redundant strip extent (red-black runs 2 masked applications
+    per sweep)."""
+    wj, ej, views = _geometry(bi, bj, n, sweeps, path, radius, apps)
     dma = ((views * (1 + var_weights) + 1.0) * bi * wj * p * itemsize
            / HBM_BW)
-    vpu = ((flops + shifts) * sweeps * (bi + 2 * radius[0] * sweeps) * ej * p
-           / VPU_FLOPS)
+    vpu = ((flops + shifts) * apps * sweeps
+           * (bi + 2 * radius[0] * sweeps * apps) * ej * p / VPU_FLOPS)
     return max(dma, vpu) / (bi * wj * p * sweeps)  # per output point-sweep
 
 
@@ -156,9 +188,9 @@ def _fits(bi: int, bj: Optional[int], n: int, p: int, itemsize: int,
           sweeps: int, acc_itemsize: int, vmem_budget: int,
           path: str = "replicate",
           radius: Tuple[int, int, int] = (1, 1, 1),
-          var_weights: int = 0) -> bool:
-    wj, ej, views = _geometry(bi, bj, n, sweeps, path, radius)
-    hi = radius[0] * sweeps
+          var_weights: int = 0, apps: int = 1) -> bool:
+    wj, ej, views = _geometry(bi, bj, n, sweeps, path, radius, apps)
+    hi = radius[0] * sweeps * apps
     io_tiles = (views + 1) * bi * wj * p * itemsize
     scratch = (bi + hi) * ej * p * itemsize if path == "stream" else 0
     working = 2 * (bi + 2 * hi) * ej * p * acc_itemsize
@@ -193,21 +225,22 @@ def autotune_blocks(m: int, n: int, p: int, itemsize: int,
     """
     shifts, flops = _plan_ops(plan, taps)
     var_w = _plan_var_weights(plan)
+    apps = _plan_apps(plan)
     rad = _radius3(radius, plan)
-    min_bi = max(1, rad[0] * sweeps)
-    min_bj = max(1, rad[1] * sweeps)
+    min_bi = max(1, rad[0] * sweeps * apps)
+    min_bj = max(1, rad[1] * sweeps * apps)
     cands_i = [bi for bi in _divisors(m) if bi >= min_bi] or [m]
 
     def key(bi: int, bj: Optional[int]):
         return (_step_time(bi, bj, n, p, itemsize, sweeps, shifts, flops,
-                           path, rad, var_w),
+                           path, rad, var_w, apps),
                 0 if (bi % 8 == 0 or bi < 8) else 1,
                 -bi * (bj if bj is not None else n))
 
     if block_j is None:
         feasible = [bi for bi in cands_i
                     if _fits(bi, None, n, p, itemsize, sweeps, acc_itemsize,
-                             vmem_budget, path, rad, var_w)]
+                             vmem_budget, path, rad, var_w, apps)]
         if feasible:
             return min(feasible, key=lambda bi: key(bi, None)), None
         if not allow_j_tiling:      # nothing fits: smallest legal block
@@ -217,7 +250,7 @@ def autotune_blocks(m: int, n: int, p: int, itemsize: int,
         cands_j = [block_j]
     pairs = [(bi, bj) for bi in cands_i for bj in cands_j
              if _fits(bi, bj, n, p, itemsize, sweeps, acc_itemsize,
-                      vmem_budget, path, rad, var_w)]
+                      vmem_budget, path, rad, var_w, apps)]
     if pairs:
         return min(pairs, key=lambda bb: key(*bb))
     return cands_i[0], cands_j[0]   # nothing fits: smallest legal tile
@@ -245,6 +278,7 @@ def autotune_engine(m: int, n: int, p: int, itemsize: int,
                          f"{PATH_KINDS}")
     shifts, flops = _plan_ops(plan, taps)
     var_w = _plan_var_weights(plan)
+    apps = _plan_apps(plan)
     rad = _radius3(radius, plan)
     cands = ("stream", "replicate") if path == "auto" else (path,)
     best = None
@@ -254,9 +288,9 @@ def autotune_engine(m: int, n: int, p: int, itemsize: int,
                                  vmem_budget=vmem_budget, block_j=block_j,
                                  path=cand, radius=rad)
         feasible = _fits(bi, bj, n, p, itemsize, sweeps, acc_itemsize,
-                         vmem_budget, cand, rad, var_w)
+                         vmem_budget, cand, rad, var_w, apps)
         t = _step_time(bi, bj, n, p, itemsize, sweeps, shifts, flops, cand,
-                       rad, var_w)
+                       rad, var_w, apps)
         # infeasible blockings only ever win when nothing fits anywhere;
         # the streaming path wins exact ties (strictly fewer HBM bytes).
         rank = (0 if feasible else 1, t, 0 if cand == "stream" else 1)
@@ -296,3 +330,188 @@ def pick_block_rows(rows: int, p: int, itemsize: int,
         if cand * p * itemsize <= vmem_budget:
             return cand
     return 1
+
+
+# ---------------------------------------------------------------------------
+# Temporal wavefront tiling: the sweeps-aware roofline race.
+# ---------------------------------------------------------------------------
+
+def _fits_wavefront(bi: int, n: int, p: int, itemsize: int, sweeps: int,
+                    acc_itemsize: int, vmem_budget: int, ha: int) -> bool:
+    """VMEM residency of the wavefront pipeline at block ``bi``: the staged
+    input view + output block, ``sweeps`` rotating stage windows of
+    ``bi + ha`` planes (stage 1 input dtype, the rest accumulation dtype),
+    and one working strip + accumulator per concurrently-live stage compute
+    (stages run sequentially within a step, so two strips bound the live
+    set)."""
+    io = 2 * bi * n * p * itemsize
+    scratch = ((bi + ha) * n * p * itemsize
+               + (sweeps - 1) * (bi + ha) * n * p * acc_itemsize)
+    working = 2 * (bi + 2 * ha) * n * p * acc_itemsize
+    return io + scratch + working <= vmem_budget
+
+
+def _wavefront_step_time(bi: int, n: int, p: int, itemsize: int, sweeps: int,
+                         shifts: int, flops: int, ha: int, apps: int,
+                         read_factor: float = 1.0) -> float:
+    """Modeled seconds per output point-sweep of the wavefront pipeline:
+    one input-block read (scaled by ``read_factor`` -- ``m_ext / m`` for a
+    periodic pre-extension, 1 otherwise) + one output-block write per step
+    against ``sweeps`` stage computations, each over the ``bi + 2 * ha``
+    single-sweep strip (the wavefront's VPU advantage: the fused path's
+    strip is ``bi + 2 * radius * sweeps * apps`` wide)."""
+    dma = (read_factor + 1.0) * bi * n * p * itemsize / HBM_BW
+    vpu = ((flops + shifts) * apps * sweeps * (bi + 2 * ha) * n * p
+           / VPU_FLOPS)
+    return max(dma, vpu) / (bi * n * p * sweeps)
+
+
+def wavefront_block_i(m: int, n: int, p: int, itemsize: int, sweeps: int,
+                      plan, acc_itemsize: int = 4,
+                      vmem_budget: int = DEFAULT_VMEM_BUDGET) -> int:
+    """Best modeled i-block for the wavefront pipeline over divisors of
+    ``m`` (the *run* extent -- pre-extended for periodic) with
+    ``bi >= ha``; the smallest legal block when nothing fits the budget
+    (mirroring :func:`autotune_blocks`)."""
+    shifts, flops = _plan_ops(plan, plan.spec.taps)
+    apps = _plan_apps(plan)
+    ha = plan.spec.radius[0] * apps
+    cands = [bi for bi in _divisors(m) if bi >= ha] or [m]
+
+    def key(bi: int):
+        return (_wavefront_step_time(bi, n, p, itemsize, sweeps, shifts,
+                                     flops, ha, apps),
+                0 if (bi % 8 == 0 or bi < 8) else 1, -bi)
+
+    feasible = [bi for bi in cands
+                if _fits_wavefront(bi, n, p, itemsize, sweeps, acc_itemsize,
+                                   vmem_budget, ha)]
+    if feasible:
+        return min(feasible, key=key)
+    return cands[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSelection:
+    """The sweeps-aware autotuner's verdict for one ``(spec, shape, s)``.
+
+    ``mode`` is the chosen time-integration strategy (fused / wavefront /
+    chained), ``path`` the spatial data-movement path underneath it
+    (``"wavefront"`` for the wavefront pipeline; stream/replicate
+    otherwise), and ``candidates`` the full race table --
+    ``(mode, path, block_i, block_j, bytes_per_point, time_per_point,
+    feasible)`` per entrant -- which is what lets the regression gate
+    judge whether a selection flip is consistent with the fresh model.
+    """
+
+    sweeps: int
+    mode: str
+    path: str
+    block_i: int
+    block_j: Optional[int]
+    bytes_per_point: float          # modeled HBM bytes per point per sweep
+    time_per_point: float           # modeled seconds per point per sweep
+    candidates: Tuple[Tuple[str, str, int, Optional[int], float, float,
+                            bool], ...] = ()
+
+    def describe(self) -> Dict[str, object]:
+        """Machine-readable selection record (benchmark / JSON form)."""
+        return {"selection": {
+            "sweeps": self.sweeps, "mode": self.mode, "path": self.path,
+            "block_i": self.block_i, "block_j": self.block_j,
+            "bytes_per_point": self.bytes_per_point,
+            "time_per_point": self.time_per_point,
+            "candidates": [
+                {"mode": mo, "path": pa, "block_i": bi, "block_j": bj,
+                 "bytes_per_point": bpp, "time_per_point": tpp,
+                 "feasible": fe}
+                for mo, pa, bi, bj, bpp, tpp, fe in self.candidates],
+        }}
+
+
+def autotune_sweeps(m: int, n: int, p: int, itemsize: int, sweeps: int,
+                    plan, acc_itemsize: int = 4,
+                    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+                    block_j: Optional[int] = None, mode: str = "auto",
+                    path: str = "auto",
+                    external_i_halo: bool = False) -> SweepSelection:
+    """Race the three ways to run ``sweeps`` applications -- one *fused*
+    call (halo ``radius * sweeps * apps``), the *wavefront* pipeline (each
+    plane fetched once per ``sweeps``, per-stage halo ``radius * apps``),
+    and ``sweeps`` *chained* single-sweep calls -- on a sweeps-aware
+    roofline, per ``(spec, shape, s)``.
+
+    Ranking follows the paper's accounting: feasible entrants first, then
+    *fewest modeled HBM bytes/point* (these kernels are memory-bound by
+    thesis -- traffic is the resource being optimized), with modeled time
+    per point-sweep breaking byte ties.  The fused stream and the
+    wavefront both model ``2 * itemsize / sweeps`` vs ``2 * itemsize``
+    chained, so the byte tie between them is broken by VPU redundancy
+    (the fused strip is ``2 * radius * sweeps * apps`` wider than the
+    output block, the wavefront strip only ``2 * radius * apps``) and,
+    before that, by VMEM residency (the deep fused halo is exactly what
+    stops large ``s``).  Exact ties break toward the wavefront at
+    ``sweeps > 1`` and toward the fused call at ``sweeps == 1`` (they
+    are the same program there; fused is the bit-exact escape hatch).  The wavefront entrant is infeasible for
+    variable coefficients, j-tiled shapes, and 1-D specs; a periodic i
+    axis (unless ``external_i_halo``) charges its pre-extension re-read
+    (``m + 2 * radius * apps * sweeps`` rows read per ``m`` written).
+    """
+    if mode not in SWEEP_MODES:
+        raise ValueError(f"unknown sweep mode {mode!r}; expected one of "
+                         f"{SWEEP_MODES}")
+    if sweeps < 1:
+        raise ValueError(f"sweeps must be >= 1, got {sweeps}")
+    spec = plan.spec
+    shifts, flops = _plan_ops(plan, spec.taps)
+    var_w = _plan_var_weights(plan)
+    apps = _plan_apps(plan)
+    rad = _radius3(None, plan)
+    modes = ("fused", "wavefront", "chained") if mode == "auto" else (mode,)
+    pref = ({"wavefront": 0, "fused": 1, "chained": 2} if sweeps > 1
+            else {"fused": 0, "wavefront": 1, "chained": 2})
+    rows = []
+    for cand in modes:
+        if cand == "wavefront":
+            ha = rad[0] * apps
+            per_i = spec.bc[0][0].kind == "periodic" and not external_i_halo
+            h = ha * sweeps
+            m_wf = m + 2 * h if (per_i and h) else m
+            kind_ok = (spec.ndim == 3 and spec.coef == "const"
+                       and block_j is None and not (per_i and h > m))
+            if not kind_ok:
+                if mode != "auto":
+                    raise ValueError(
+                        f"{spec.name}: wavefront mode needs a volumetric "
+                        f"constant-coefficient spec, untiled j, and (for "
+                        f"periodic i) halo {h} <= M={m}")
+                continue
+            bi = wavefront_block_i(m_wf, n, p, itemsize, sweeps, plan,
+                                   acc_itemsize, vmem_budget)
+            feasible = _fits_wavefront(bi, n, p, itemsize, sweeps,
+                                       acc_itemsize, vmem_budget, ha)
+            read_f = m_wf / m
+            bpp = (read_f + 1.0) * itemsize / sweeps
+            tpp = _wavefront_step_time(bi, n, p, itemsize, sweeps, shifts,
+                                       flops, ha, apps, read_f)
+            rows.append((cand, "wavefront", bi, None, bpp, tpp, feasible))
+        else:
+            s_eff = sweeps if cand == "fused" else 1
+            rpath, bi, bj = autotune_engine(
+                m, n, p, itemsize, sweeps=s_eff, plan=plan,
+                acc_itemsize=acc_itemsize, vmem_budget=vmem_budget,
+                block_j=block_j, path=path)
+            feasible = _fits(bi, bj, n, p, itemsize, s_eff, acc_itemsize,
+                             vmem_budget, rpath, rad, var_w, apps)
+            bpp = bytes_per_point(rpath, itemsize, bj is not None, s_eff,
+                                  rad, spec.coef, spec.n_weights)
+            tpp = _step_time(bi, bj, n, p, itemsize, s_eff, shifts, flops,
+                             rpath, rad, var_w, apps)
+            rows.append((cand, rpath, bi, bj, bpp, tpp, feasible))
+    if not rows:
+        raise ValueError(f"{spec.name}: no feasible sweep mode candidates")
+    best = min(rows, key=lambda r: (not r[6], r[4], r[5], pref[r[0]]))
+    return SweepSelection(sweeps=sweeps, mode=best[0], path=best[1],
+                          block_i=best[2], block_j=best[3],
+                          bytes_per_point=best[4], time_per_point=best[5],
+                          candidates=tuple(rows))

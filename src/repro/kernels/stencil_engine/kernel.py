@@ -119,7 +119,8 @@ def ghost_offset(bc: Boundary) -> float:
 
 def run_sweeps(u: jax.Array, interior: Optional[jax.Array], w: jax.Array,
                plan: StencilPlan, sweeps: int, shift: Callable = shift_slice,
-               refill: Optional[Callable] = None) -> jax.Array:
+               refill: Optional[Callable] = None,
+               parity: Optional[jax.Array] = None) -> jax.Array:
     """Fused Jacobi sweep loop with the loop-invariant clamp-ring select
     hoisted: the interior mask *and* the zero fill it selects against are
     materialized once and reused by every unrolled sweep.  ``interior`` is
@@ -135,9 +136,17 @@ def run_sweeps(u: jax.Array, interior: Optional[jax.Array], w: jax.Array,
     fill inside the shifts would be wrong for intermediate partial sums.
     The correction is elementwise: on a variable-coefficient spec ``w[k]``
     is a strip-shaped coefficient plane stack and ``v * sum(w)`` a field.
-    The valid region shrinks ``radius`` planes per sweep from the extended
-    edges, so the central block is exact after ``sweeps`` applications
-    under the ``h = radius * sweeps`` halo."""
+    A red-black (Gauss-Seidel) spec supplies ``parity`` -- the *global*
+    checkerboard ``(i + j + k) % 2 == 0`` of the strip (built once in
+    :func:`prepare_strip`) -- and every sweep becomes two masked
+    half-applications: the operator is applied and merged at the red
+    parity first, then at the black parity reading the red-updated field.
+    Information therefore propagates ``2 * radius`` planes per sweep, and
+    the halo depth is ``radius * sweeps * spec.sweep_apps``.
+
+    The valid region shrinks ``radius`` planes per application from the
+    extended edges, so the central block is exact after ``sweeps``
+    applications under the ``h = radius * sweeps * sweep_apps`` halo."""
     zero = None if interior is None else jnp.zeros(u.shape, u.dtype)
     v = ghost_offset(plan.spec.bc)
     off = corr = None
@@ -149,15 +158,27 @@ def run_sweeps(u: jax.Array, interior: Optional[jax.Array], w: jax.Array,
         sumw = sum((w[k] * c for k, c in sorted(counts.items())),
                    jnp.zeros((), u.dtype))
         corr = off * sumw
-    for _ in range(sweeps):
+
+    def apply_once(x):
         if off is None:
-            u = execute_plan(plan, u, w, shift=shift)
+            x = execute_plan(plan, x, w, shift=shift)
         else:
-            u = execute_plan(plan, u - off, w, shift=shift) + corr
+            x = execute_plan(plan, x - off, w, shift=shift) + corr
         if interior is not None:
-            u = jnp.where(interior, u, zero)
-        if refill is not None:
-            u = refill(u)
+            x = jnp.where(interior, x, zero)
+        return x
+
+    halves = None if parity is None else (parity, ~parity)
+    for _ in range(sweeps):
+        if halves is None:
+            u = apply_once(u)
+            if refill is not None:
+                u = refill(u)
+        else:
+            for half in halves:
+                u = jnp.where(half, apply_once(u), u)
+                if refill is not None:
+                    u = refill(u)
     return u
 
 
@@ -262,20 +283,35 @@ def _needs_refill(bc: Boundary, fill_j: bool) -> bool:
                for ax in axes for side in (0, 1))
 
 
+def _strip_parity(ext, gi0, j0) -> jax.Array:
+    """Global checkerboard parity ``(i + j + k) % 2 == 0`` ("red") of a
+    volumetric working strip whose row 0 sits at global row ``gi0`` and
+    column 0 at global column ``j0`` (k is always fully resident, so local
+    k *is* global k).  Built once per grid step and shared by both
+    half-applications of every red-black sweep."""
+    gi = gi0 + jax.lax.broadcasted_iota(jnp.int32, ext, 0)
+    jj = j0 + jax.lax.broadcasted_iota(jnp.int32, ext, 1)
+    kk = jax.lax.broadcasted_iota(jnp.int32, ext, 2)
+    return ((gi + jj + kk) % 2) == 0
+
+
 def prepare_strip(u: jax.Array, gi0, j0, m_ref, n_global: int,
                   plan: StencilPlan, tiled_j: bool):
     """Shared BC set-up for the volumetric kernel bodies: fill the assembled
     strip's out-of-domain ghosts, and return the per-sweep machinery
-    ``(u, interior, shift, refill)`` for :func:`run_sweeps`.  All-clamp
-    specs take the exact legacy path (zero fill at radius >= 2 only, the
-    ring mask, plain zero-fill shifts) so default-BC programs stay
-    byte-identical."""
+    ``(u, interior, shift, refill, parity)`` for :func:`run_sweeps`
+    (``parity`` is the global red checkerboard for red-black specs, else
+    ``None``).  All-clamp specs take the exact legacy path (zero fill at
+    radius >= 2 only, the ring mask, plain zero-fill shifts) so default-BC
+    programs stay byte-identical."""
     bc = plan.spec.bc
+    parity = (_strip_parity(u.shape, gi0, j0)
+              if plan.spec.ordering == "redblack" else None)
     if bc_all_clamp(bc):
         u = zero_outside_domain(u, gi0, j0, m_ref, n_global,
                                 plan.spec.radius)
         return (u, _volumetric_interior(u.shape, gi0, j0, m_ref, n_global),
-                shift_slice, None)
+                shift_slice, None, parity)
     u = fill_ghosts(u, gi0, j0, m_ref, n_global, bc, fill_j=tiled_j,
                     include_clamp=True)
     interior = _clamp_interior(u.shape, gi0, j0, m_ref, n_global, bc)
@@ -285,7 +321,7 @@ def prepare_strip(u: jax.Array, gi0, j0, m_ref, n_global: int,
         def refill(v):
             return fill_ghosts(v, gi0, j0, m_ref, n_global, bc,
                                fill_j=tiled_j, include_clamp=False)
-    return u, interior, shift, refill
+    return u, interior, shift, refill, parity
 
 
 def zero_outside_domain(u: jax.Array, gi0, j0, m_ref, n_global: int,
@@ -378,8 +414,9 @@ def stencil3d_kernel(*refs, plan: StencilPlan, bi: int, bj: Optional[int],
     ri, rj, _ = plan.spec.radius
     i_blk = pl.program_id(1)
     s = sweeps
-    hi = ri * s
-    hj = rj * s
+    apps = plan.spec.sweep_apps
+    hi = ri * s * apps
+    hj = rj * s * apps
     if bj is None:
         j0 = 0
     else:
@@ -393,9 +430,10 @@ def stencil3d_kernel(*refs, plan: StencilPlan, bi: int, bj: Optional[int],
     else:
         w = w_ref[...]
     gi0 = geom_ref[0] + i_blk * bi - hi
-    u, interior, shift, refill = prepare_strip(u, gi0, j0, geom_ref[1],
-                                               n_global, plan, bj is not None)
-    u = run_sweeps(u, interior, w, plan, s, shift=shift, refill=refill)
+    u, interior, shift, refill, parity = prepare_strip(
+        u, gi0, j0, geom_ref[1], n_global, plan, bj is not None)
+    u = run_sweeps(u, interior, w, plan, s, shift=shift, refill=refill,
+                   parity=parity)
     out = u[hi:hi + bi] if bj is None else u[hi:hi + bi, hj:hj + bj]
     o_ref[0] = out.astype(o_ref.dtype)
 
@@ -456,7 +494,8 @@ def stencil3d_stream_kernel(*refs, plan: StencilPlan, bi: int,
         views = refs[:-4]
     ri, rj, _ = plan.spec.radius
     s = sweeps
-    hi = ri * s
+    apps = plan.spec.sweep_apps
+    hi = ri * s * apps
     lag = 2 if wrap_i else 1
     if bj is None:
         t = pl.program_id(1)
@@ -465,7 +504,7 @@ def stencil3d_stream_kernel(*refs, plan: StencilPlan, bi: int,
             wcur = wviews[0][...]                          # (nw, bi, N, P)
         j0 = 0
     else:
-        hj = rj * s
+        hj = rj * s * apps
         t = pl.program_id(2)
         j_blk = pl.program_id(1)
         jm, jc, jp = (views[rj + d][0] if hj else views[rj][0]
@@ -516,10 +555,10 @@ def stencil3d_stream_kernel(*refs, plan: StencilPlan, bi: int,
         else:
             w = w_ref[...]
         gi0 = geom_ref[0] + (t - lag) * bi - hi
-        u, interior, shift, refill = prepare_strip(u, gi0, j0, geom_ref[1],
-                                                   n_global, plan,
-                                                   bj is not None)
-        u = run_sweeps(u, interior, w, plan, s, shift=shift, refill=refill)
+        u, interior, shift, refill, parity = prepare_strip(
+            u, gi0, j0, geom_ref[1], n_global, plan, bj is not None)
+        u = run_sweeps(u, interior, w, plan, s, shift=shift, refill=refill,
+                       parity=parity)
         out = u[hi:hi + bi] if bj is None else u[hi:hi + bi, hj:hj + bj]
         o_ref[0] = out.astype(o_ref.dtype)
         # Rotate the window: new tail = last hi planes of the block the
@@ -533,6 +572,85 @@ def stencil3d_stream_kernel(*refs, plan: StencilPlan, bi: int,
         scr_ref[hi:] = cur
         if var:
             wscr_ref[:, hi:] = wcur
+
+
+def stencil3d_wavefront_kernel(*refs, plan: StencilPlan, bi: int,
+                               n_global: int, sweeps: int, acc_dtype):
+    """Temporal wavefront-tiled volumetric kernel: ``s = sweeps`` *pipelined*
+    sweep stages ride one pass over the i-blocks, each input plane fetched
+    from HBM once per ``s`` sweeps (vs once per sweep chained, and vs a
+    ``radius * s``-deep fused halo).
+
+    ``refs`` is ``(view, geom_ref, w_ref, o_ref, scr_in, *stage_scrs)``:
+    one identity-mapped input block ``(1, bi, N, P)`` on a grid of
+    ``nbi + s`` steps, plus ``s`` rotating VMEM windows of ``bi + ha``
+    planes each (``ha = radius * sweep_apps``, the *single-sweep* halo --
+    the wavefront's VMEM advantage over the fused path's ``radius * s``).
+    ``scr_in`` holds input-dtype planes for stage 1; ``stage_scrs[q-2]``
+    holds stage ``q-1``'s accumulation-dtype output planes for stage ``q``.
+
+    The pipeline is *skewed*: at step ``t``, stage ``q`` computes its block
+    ``t - q`` from ``[window | head ha planes of stage q-1's block
+    t - q + 1]`` -- stage ``q`` consumes planes stage ``q - 1`` produced
+    exactly one step (= ``bi`` >= ``ha`` planes) earlier, so every stage
+    runs the full single-sweep BC machinery (:func:`prepare_strip` +
+    :func:`run_sweeps`) at its own global geometry and the final stage's
+    central block is exact.  Blocks with out-of-domain indices (the ``s``
+    pipeline fill/drain steps) only ever produce planes at out-of-domain
+    global rows, which the ghost fill / clamp masking of the *consuming*
+    stage overwrites -- the same shrink argument as the fused halo, applied
+    per stage.  The lagged output map writes stage ``s``'s block ``t - s``;
+    steps ``t < s`` write pipeline-fill garbage that is overwritten at
+    ``t = s`` before the block index advances (Pallas revisiting
+    semantics, the same trick as the streaming kernel's lead-in).
+
+    A periodic i axis is handled by the *caller* (HBM pre-extension with
+    ``radius * sweep_apps * s`` wrapped rows and external-halo geometry --
+    see :func:`~.sweeps.stencil_wavefront`), so this body never wraps;
+    variable-coefficient specs take the fused/chained paths instead (their
+    coefficient planes would need an ``s``-block-deep window here).
+    """
+    view, geom_ref, w_ref, o_ref, scr_in = refs[:5]
+    stage_scrs = refs[5:]
+    ri, _, _ = plan.spec.radius
+    ha = ri * plan.spec.sweep_apps
+    s = sweeps
+    t = pl.program_id(1)
+    cur = view[0]                                          # (bi, N, P)
+
+    @pl.when(t == 0)
+    def _prime():
+        # Stage 1's window for block 0: block "-1" is above the domain
+        # (zeros; strip fill / interior mask of every stage handles them).
+        if ha:
+            scr_in[:ha] = jnp.zeros((ha,) + cur.shape[1:], cur.dtype)
+        scr_in[ha:] = cur
+
+    @pl.when(t >= 1)
+    def _compute():
+        w = w_ref[...]
+
+        def stage(win_ref, nxt, blk):
+            u = (jnp.concatenate([win_ref[...], nxt[:ha]], axis=0) if ha
+                 else win_ref[...]).astype(acc_dtype)      # (bi + 2ha, N, P)
+            gi0 = geom_ref[0] + blk * bi - ha
+            u, interior, shift, refill, parity = prepare_strip(
+                u, gi0, 0, geom_ref[1], n_global, plan, False)
+            u = run_sweeps(u, interior, w, plan, 1, shift=shift,
+                           refill=refill, parity=parity)
+            return u[ha:ha + bi]
+
+        nxt = cur            # stage q's "next block" = stage q-1's block t-q+1
+        for q in range(1, s + 1):
+            win = scr_in if q == 1 else stage_scrs[q - 2]
+            val = stage(win, nxt, t - q)
+            # rotate window q-1 forward with its freshly arrived block
+            if ha:
+                tail = win[bi:bi + ha]
+                win[:ha] = tail
+            win[ha:] = nxt
+            nxt = val
+        o_ref[0] = nxt.astype(o_ref.dtype)
 
 
 def stencil1d_kernel(a_ref, w_ref, o_ref, *, plan: StencilPlan, sweeps: int,
@@ -550,6 +668,10 @@ def stencil1d_kernel(a_ref, w_ref, o_ref, *, plan: StencilPlan, sweeps: int,
         kk = jax.lax.broadcasted_iota(jnp.int32, u.shape, u.ndim - 1)
         interior = ((kk > 0) & (kk < p - 1) if klo.kind == khi.kind
                     else (kk > 0) if klo.kind == "clamp" else (kk < p - 1))
+    parity = None
+    if plan.spec.ordering == "redblack":
+        kk = jax.lax.broadcasted_iota(jnp.int32, u.shape, u.ndim - 1)
+        parity = (kk % 2) == 0       # rows are independent: parity is k-only
     shift = make_shift(plan.spec.bc, j_in_shift=False)
-    o_ref[...] = run_sweeps(u, interior, w, plan, sweeps,
-                            shift=shift).astype(o_ref.dtype)
+    o_ref[...] = run_sweeps(u, interior, w, plan, sweeps, shift=shift,
+                            parity=parity).astype(o_ref.dtype)

@@ -27,7 +27,7 @@ from jax.experimental.pallas import tpu as pltpu
 from .autotune import (PATH_KINDS, autotune_blocks, autotune_engine,
                        pick_block_rows)
 from .kernel import (acc_dtype_for, stencil1d_kernel, stencil3d_kernel,
-                     stencil3d_stream_kernel)
+                     stencil3d_stream_kernel, stencil3d_wavefront_kernel)
 from .plan import StencilPlan, compile_plan
 from .spec import StencilSpec, get_stencil
 
@@ -75,21 +75,23 @@ def _neighbor_imap(di: int, dj: int, nbi: int, nbj: int,
 
 
 def _validate_blocks(m: int, n: int, bi: int, bj: Optional[int],
-                     sweeps: int, radius) -> None:
+                     sweeps: int, radius, apps: int = 1) -> None:
+    """``apps`` is the spec's applications per sweep (2 for red-black
+    Gauss-Seidel) -- the carried halo is ``radius * sweeps * apps`` deep."""
     ri, rj, _ = radius
     if m % bi != 0:
         raise ValueError(f"block size {bi} must divide M={m}")
-    if ri * sweeps > bi:
+    if ri * sweeps * apps > bi:
         raise ValueError(f"fused sweeps={sweeps} exceed the carried halo; "
-                         f"need block_i >= sweeps*r_i "
-                         f"(block_i={bi}, r_i={ri})")
+                         f"need block_i >= sweeps*r_i*sweep_apps "
+                         f"(block_i={bi}, r_i={ri}, sweep_apps={apps})")
     if bj is not None:
         if n % bj != 0:
             raise ValueError(f"block size {bj} must divide N={n}")
-        if rj * sweeps > bj:
+        if rj * sweeps * apps > bj:
             raise ValueError(f"fused sweeps={sweeps} exceed the carried "
-                             f"halo; need block_j >= sweeps*r_j "
-                             f"(block_j={bj}, r_j={rj})")
+                             f"halo; need block_j >= sweeps*r_j*sweep_apps "
+                             f"(block_j={bj}, r_j={rj}, sweep_apps={apps})")
 
 
 def _call_3d_stream(a4: jax.Array, wf: jax.Array, geom: jax.Array,
@@ -119,7 +121,7 @@ def _call_3d_stream(a4: jax.Array, wf: jax.Array, geom: jax.Array,
     b, m, n, p = a4.shape
     nbi = m // bi
     ri, rj, _ = plan.spec.radius
-    hi = ri * sweeps
+    hi = ri * sweeps * plan.spec.sweep_apps
     var = plan.spec.coef == "var"
     per_i, per_j = _periodic_axes(plan.spec)
     wrap_i = per_i and not external_i_halo and hi > 0
@@ -164,7 +166,7 @@ def _call_3d_stream(a4: jax.Array, wf: jax.Array, geom: jax.Array,
         )(a4, geom, wf)
 
     nbj = n // bj
-    hj = rj * sweeps
+    hj = rj * sweeps * plan.spec.sweep_apps
     block = (1, bi, bj, p)
 
     def jmap(dj: int):
@@ -228,7 +230,8 @@ def call_3d(a4: jax.Array, wf: jax.Array, geom: jax.Array, plan: StencilPlan,
     wrapped locally (the ring exchange supplied the wrapped rows).
     """
     b, m, n, p = a4.shape
-    _validate_blocks(m, n, bi, bj, sweeps, plan.spec.radius)
+    _validate_blocks(m, n, bi, bj, sweeps, plan.spec.radius,
+                     plan.spec.sweep_apps)
     if path == "stream":
         return _call_3d_stream(a4, wf, geom, plan, bi, bj, sweeps, interpret,
                                external_i_halo)
@@ -306,6 +309,64 @@ def call_3d(a4: jax.Array, wf: jax.Array, geom: jax.Array, plan: StencilPlan,
         out_shape=jax.ShapeDtypeStruct(a4.shape, a4.dtype),
         interpret=interpret,
     )(*([a4] * n_views), geom, *w_args)
+
+
+def call_3d_wavefront(a4: jax.Array, wf: jax.Array, geom: jax.Array,
+                      plan: StencilPlan, bi: int, sweeps: int,
+                      interpret: bool) -> jax.Array:
+    """Wire the temporal-wavefront kernel: ``sweeps`` pipelined sweep stages
+    ride one pass over the i-blocks on a grid of ``nbi + sweeps`` steps with
+    an ``s``-lagged output map, so each input plane is fetched from HBM once
+    per ``sweeps`` applications (~``2 / sweeps`` transfers per point) while
+    every stage carries only the *single-sweep* halo ``ha = radius *
+    sweep_apps`` in its rotating VMEM window -- ``sweeps`` windows of
+    ``bi + ha`` planes (stage 1 in the input dtype, later stages in the
+    accumulation dtype) instead of the fused path's one ``bi + radius *
+    sweeps * sweep_apps`` window and matching VPU-redundant strip.
+
+    Untiled (full-N blocks), constant coefficients only.  A periodic i axis
+    must arrive pre-extended (``radius * sweep_apps * sweeps`` wrapped rows
+    per side + external-halo ``geom``); :func:`~.sweeps.stencil_wavefront`
+    and the sharded deep-halo exchange both do exactly that.
+    """
+    b, m, n, p = a4.shape
+    spec = plan.spec
+    if spec.coef == "var":
+        raise ValueError(
+            f"{spec.name}: the wavefront path needs constant coefficients "
+            f"(variable-coefficient planes would need an s-block-deep "
+            f"window); use the fused or chained mode")
+    ri = spec.radius[0]
+    ha = ri * spec.sweep_apps
+    if m % bi != 0:
+        raise ValueError(f"wavefront block size {bi} must divide M={m}")
+    if ha > bi:
+        raise ValueError(f"wavefront needs block_i >= radius*sweep_apps "
+                         f"(block_i={bi}, r_i={ri}, "
+                         f"sweep_apps={spec.sweep_apps})")
+    nbi = m // bi
+    s = sweeps
+    acc = acc_dtype_for(a4.dtype)
+    kern = functools.partial(stencil3d_wavefront_kernel, plan=plan, bi=bi,
+                             n_global=n, sweeps=s, acc_dtype=acc)
+    block = (1, bi, n, p)
+    in_specs = [
+        pl.BlockSpec(block, lambda bb, t: (bb, jnp.minimum(t, nbi - 1), 0, 0)),
+        pl.BlockSpec(geom.shape, lambda bb, t: (0,)),
+        pl.BlockSpec(wf.shape, lambda bb, t: (0,)),
+    ]
+    scratch = [pltpu.VMEM((bi + ha, n, p), a4.dtype)]
+    scratch += [pltpu.VMEM((bi + ha, n, p), acc) for _ in range(s - 1)]
+    return pl.pallas_call(
+        kern,
+        grid=(b, nbi + s),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(
+            block, lambda bb, t: (bb, jnp.clip(t - s, 0, nbi - 1), 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(a4.shape, a4.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(a4, geom, wf)
 
 
 def _call_1d(a2: jax.Array, wf: jax.Array, plan: StencilPlan, block_rows: int,

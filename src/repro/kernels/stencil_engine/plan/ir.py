@@ -116,6 +116,7 @@ class StencilPlan:
              "radius": list(self.spec.radius),
              "bc": list(bc_labels(self.spec.bc)),
              "coef": self.spec.coef,
+             "ordering": self.spec.ordering,
              "unroll": self.unroll,
              "pass_list": list(self.passes)}
         if self.modeled is not None:

@@ -132,6 +132,17 @@ def apply_spec_once(u: jax.Array, w: jax.Array, spec: StencilSpec,
     return apply_plan_once(u, w, compile_plan(spec, plan))
 
 
+def _parity_mask(shape, ndim: int) -> jax.Array:
+    """The *red* checkerboard half: global domain coordinates summing to an
+    even number over the trailing ``ndim`` axes (batch axes excluded) --
+    the same parity the kernel builds per strip from its global geometry."""
+    tot = None
+    for ax in range(-ndim, 0):
+        idx = jax.lax.broadcasted_iota(jnp.int32, shape, len(shape) + ax)
+        tot = idx if tot is None else tot + idx
+    return (tot % 2) == 0
+
+
 @functools.partial(jax.jit, static_argnames=("stencil", "sweeps", "plan",
                                              "bc"))
 def stencil_ref(a: jax.Array, w: jax.Array, stencil="stencil27",
@@ -153,6 +164,15 @@ def stencil_ref(a: jax.Array, w: jax.Array, stencil="stencil27",
     u = a.astype(acc)
     dom = a.shape[-spec.ndim:] if spec.coef == "var" else None
     wf = spec.canon_weights(w, dom).astype(acc)
-    for _ in range(sweeps):
-        u = apply_plan_once(u, wf, cplan)
+    if spec.ordering == "redblack":
+        # Gauss-Seidel halves: update the red checkerboard in place, then
+        # the black half reading the fresh red values -- matching the
+        # kernel's masked run_sweeps order.
+        red = _parity_mask(u.shape, spec.ndim)
+        for _ in range(sweeps):
+            u = jnp.where(red, apply_plan_once(u, wf, cplan), u)
+            u = jnp.where(red, u, apply_plan_once(u, wf, cplan))
+    else:
+        for _ in range(sweeps):
+            u = apply_plan_once(u, wf, cplan)
     return u.astype(a.dtype)

@@ -38,9 +38,10 @@ from jax.sharding import Mesh, PartitionSpec as P
 from .._compat import shard_map
 
 from ...sharding.planner import StencilShardPlan, stencil_halo_sharding
-from .autotune import PATH_KINDS, autotune_engine
+from .autotune import (PATH_KINDS, autotune_engine, autotune_sweeps,
+                       wavefront_block_i)
 from .kernel import acc_dtype_for
-from .ops import call_3d, resolve_interpret, stencil_apply
+from .ops import call_3d, call_3d_wavefront, resolve_interpret, stencil_apply
 from .plan import StencilPlan, compile_plan
 from .spec import StencilSpec, get_stencil
 
@@ -58,11 +59,12 @@ def _mesh_key(mesh: Mesh) -> tuple:
 
 def _sharded_fn(cplan: StencilPlan, mesh: Mesh, axis: str, bi: int,
                 bj: Optional[int], sweeps: int, interpret: bool, h: int,
-                m_loc: int, n_sh: int, m: int, part, path: str = "stream"):
+                m_loc: int, n_sh: int, m: int, part, path: str = "stream",
+                mode: str = "fused"):
     """Build (and cache) the jitted shard_map program for one geometry, so
     repeated calls don't retrace the inner pallas_call."""
     key = (cplan, _mesh_key(mesh), axis, bi, bj, sweeps, interpret, h,
-           m_loc, n_sh, m, part, path)
+           m_loc, n_sh, m, part, path, mode)
     fn = _SHARDED_CACHE.get(key)
     if fn is not None:
         _SHARDED_CACHE.move_to_end(key)
@@ -96,8 +98,15 @@ def _sharded_fn(cplan: StencilPlan, mesh: Mesh, axis: str, bi: int,
         wx = _halo_ext(wf_) if var else wf_
         geom = jnp.stack([idx * m_loc - h,
                           jnp.int32(m)]).astype(jnp.int32)
-        out = call_3d(ext, wx, geom, cplan, bi, bj, sweeps, interpret,
-                      path, external_i_halo=True)
+        if mode == "wavefront":
+            # one radius*sweep_apps*sweeps-deep exchange already happened
+            # (ext); the pipeline redundantly recomputes the shard-edge
+            # strip exactly like the fused deep halo does
+            out = call_3d_wavefront(ext, wx, geom, cplan, bi, sweeps,
+                                    interpret)
+        else:
+            out = call_3d(ext, wx, geom, cplan, bi, bj, sweeps, interpret,
+                          path, external_i_halo=True)
         return out[:, h:h + m_loc]
 
     w_spec = part if var else P(None)
@@ -114,8 +123,8 @@ def stencil_sharded(a: jax.Array, w: jax.Array,
                     mesh: Optional[Mesh] = None, axis: str = "data",
                     block_i: Optional[int] = None,
                     block_j: Optional[int] = None, plan: str = "auto",
-                    sweeps: int = 1, path: str = "auto", bc=None,
-                    interpret: Optional[bool] = None,
+                    sweeps: int = 1, path: str = "auto", mode: str = "fused",
+                    bc=None, interpret: Optional[bool] = None,
                     shard_plan: Optional[StencilShardPlan] = None
                     ) -> jax.Array:
     """Halo-exchange execution of ``stencil_apply`` over a mesh axis.
@@ -126,7 +135,15 @@ def stencil_sharded(a: jax.Array, w: jax.Array,
     ``path`` selects the per-shard data-movement strategy exactly as in
     ``stencil_apply`` -- ``"auto"`` streams the halo-extended local slab
     (each local plane fetched once), ``"replicate"`` re-fetches the halo
-    neighbours per block (parity escape hatch).  ``bc`` overrides the
+    neighbours per block (parity escape hatch).  ``mode`` selects the
+    per-shard time integration: ``"fused"`` (default) runs one fused
+    ``sweeps=s`` kernel per shard; ``"wavefront"`` runs the
+    temporal-wavefront pipeline (:func:`~.ops.call_3d_wavefront`) per
+    shard; ``"auto"`` races them on the sweeps-aware roofline over the
+    halo-extended local slab.  Either way ``s`` sweeps cost *one*
+    ``radius * sweep_apps * s``-deep ppermute round -- shard-edge strips
+    are redundantly recomputed from the deep halo instead of re-exchanged
+    per sweep.  ``bc`` overrides the
     spec's boundary conditions exactly as in ``stencil_apply``; a periodic
     i axis closes the halo exchange into a ring (wrap-around between shard
     0 and shard ``n-1``) while dirichlet/neumann ghosts materialize only on
@@ -146,11 +163,18 @@ def stencil_sharded(a: jax.Array, w: jax.Array,
     if path not in PATH_KINDS:
         raise ValueError(f"unknown path {path!r}; expected one of "
                          f"{PATH_KINDS}")
+    if mode not in ("auto", "fused", "wavefront"):
+        raise ValueError(f"unknown sharded mode {mode!r}; expected 'auto', "
+                         f"'fused', or 'wavefront' (chained per-sweep "
+                         f"exchange is exactly what the deep halo removes)")
     spec = get_stencil(stencil)
     if bc is not None:
         spec = spec.with_bc(bc)
     cplan = compile_plan(spec, plan)
     interpret = resolve_interpret(interpret)
+    if mode == "wavefront" and spec.coef == "var":
+        raise ValueError(f"{spec.name}: the wavefront mode needs constant "
+                         f"coefficients; use mode='fused'")
     if spec.ndim != 3:
         raise ValueError(f"{spec.name}: sharded execution needs a volumetric "
                          f"(ndim=3) spec")
@@ -161,18 +185,26 @@ def stencil_sharded(a: jax.Array, w: jax.Array,
     m, n, p = a.shape[-3:]
     ri = spec.radius[0]
     periodic_i = spec.bc[0][0].kind == "periodic"
+    apps = spec.sweep_apps              # red-black doubles the halo depth
     if shard_plan is None:
-        shard_plan = stencil_halo_sharding(m, mesh, axis=axis, sweeps=sweeps,
+        shard_plan = stencil_halo_sharding(m, mesh, axis=axis,
+                                           sweeps=sweeps * apps,
                                            radius=ri, periodic=periodic_i)
-    if shard_plan.n_shards > 1 and shard_plan.halo < ri * sweeps:
+    if shard_plan.n_shards > 1 and shard_plan.halo < ri * sweeps * apps:
         raise ValueError(
             f"shard_plan.halo={shard_plan.halo} rows/side cannot cover "
-            f"radius {ri} x sweeps {sweeps} = {ri * sweeps}; re-plan with "
-            f"stencil_halo_sharding(..., sweeps={sweeps}, radius={ri})")
+            f"radius {ri} x sweeps {sweeps} x sweep_apps {apps} = "
+            f"{ri * sweeps * apps}; re-plan with "
+            f"stencil_halo_sharding(..., sweeps={sweeps * apps}, "
+            f"radius={ri})")
     if shard_plan.n_shards <= 1:
         # An explicit block_i is sized for the halo-extended local slab; it
         # generally doesn't divide M, so let the cost model choose here --
         # the same call must work whatever the device count.
+        if mode == "wavefront":
+            from .sweeps import stencil_wavefront
+            return stencil_wavefront(a, w, spec, sweeps=sweeps, plan=plan,
+                                     interpret=interpret)
         return stencil_apply(a, w, spec, plan=plan, sweeps=sweeps,
                              path=path, interpret=interpret)
 
@@ -191,7 +223,21 @@ def stencil_sharded(a: jax.Array, w: jax.Array,
             f"slab (M/n_shards + 2*radius*sweeps = {m_loc} + {2 * h} = "
             f"{m_ext}); omit block_i to let the cost model choose")
     bi, bj, rpath = block_i, block_j, path
-    if bi is None:
+    run_mode = mode
+    if run_mode == "auto":
+        sel = autotune_sweeps(m_ext, n, p, a.dtype.itemsize, sweeps, cplan,
+                              block_j=bj, path=path, external_i_halo=True)
+        run_mode = "wavefront" if sel.mode == "wavefront" else "fused"
+    if run_mode == "wavefront":
+        if bj is not None:
+            raise ValueError(f"{spec.name}: the wavefront mode is untiled "
+                             f"(full-N blocks); omit block_j or use "
+                             f"mode='fused'")
+        if bi is None:
+            bi = wavefront_block_i(m_ext, n, p, a.dtype.itemsize, sweeps,
+                                   cplan)
+        rpath = "wavefront"
+    elif bi is None:
         rpath, bi, bj_auto = autotune_engine(m_ext, n, p, a.dtype.itemsize,
                                              sweeps=sweeps, plan=cplan,
                                              block_j=bj, path=path)
@@ -199,5 +245,5 @@ def stencil_sharded(a: jax.Array, w: jax.Array,
     elif rpath == "auto":
         rpath = "stream"
     fn = _sharded_fn(cplan, mesh, axis, bi, bj, sweeps, interpret, h, m_loc,
-                     n_sh, m, shard_plan.spec, rpath)
+                     n_sh, m, shard_plan.spec, rpath, run_mode)
     return fn(a4, wf).reshape(a.shape)

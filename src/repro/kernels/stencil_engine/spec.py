@@ -27,6 +27,7 @@ Radius = Tuple[int, int, int]
 
 BC_KINDS = ("clamp", "periodic", "dirichlet", "neumann")
 COEF_KINDS = ("const", "var")
+ORDERING_KINDS = ("jacobi", "redblack")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -192,10 +193,21 @@ class StencilSpec:
     radius: Radius = (1, 1, 1)       # per-axis (ri, rj, rk) offset bound
     bc: Boundary = CLAMP_ALL         # per-axis (lo, hi) boundary conditions
     coef: str = "const"              # "const" scalars | "var" per-point arrays
+    ordering: str = "jacobi"         # "jacobi" | "redblack" sweep ordering
 
     @property
     def taps(self) -> int:
         return len(self.offsets)
+
+    @property
+    def sweep_apps(self) -> int:
+        """Operator applications per sweep: 1 for Jacobi, 2 for red-black
+        Gauss-Seidel (red half-update then black half-update).  Every halo
+        computation downstream scales by this -- the black half reads the
+        red-updated field, so one red-black sweep propagates information
+        ``2 * radius`` cells and the fused halo depth is
+        ``radius * sweeps * sweep_apps``."""
+        return 2 if self.ordering == "redblack" else 1
 
     def canon_weights(self, w: jax.Array, domain_shape=None) -> jax.Array:
         """Canonicalize a user weight array.
@@ -266,6 +278,9 @@ class StencilSpec:
         if self.coef not in COEF_KINDS:
             raise ValueError(f"unknown coef kind {self.coef!r}; expected one "
                              f"of {COEF_KINDS}")
+        if self.ordering not in ORDERING_KINDS:
+            raise ValueError(f"unknown ordering {self.ordering!r}; expected "
+                             f"one of {ORDERING_KINDS}")
         # canonicalize any as_boundary spelling in place (idempotent on the
         # canonical nested-tuple form)
         object.__setattr__(self, "bc", as_boundary(self.bc))
@@ -291,6 +306,21 @@ class StencilSpec:
         from the constant-coefficient original for free.
         """
         return dataclasses.replace(self, coef=coef,
+                                   name=self.name if name is None else name)
+
+    def with_ordering(self, ordering: str, name: str = None) -> "StencilSpec":
+        """The same stencil under a different sweep ordering.
+
+        ``ordering="redblack"`` makes every sweep a red-black Gauss-Seidel
+        sweep: the operator is applied at the *red* checkerboard parity
+        (``(i + j + k) % 2 == 0`` in global coordinates), merged, then at
+        the black parity reading the red-updated field.  Specs hash on their
+        full value including ``ordering``, so plan memoization, jit static
+        hashing, and ``describe()`` distinguish ordering variants for free;
+        the plan itself (the per-application op schedule) is unchanged --
+        ordering is realized by the sweep loop's checkerboard masks.
+        """
+        return dataclasses.replace(self, ordering=ordering,
                                    name=self.name if name is None else name)
 
 
@@ -438,5 +468,16 @@ def _builtin_bc_variants() -> None:
             register_stencil(spec.with_bc(bc, name=f"{base}_{tag}"))
 
 
+def _builtin_ordering_variants() -> None:
+    """Red-black Gauss-Seidel registry aliases for the volumetric builtins
+    (and the k-only ``stencil3``): one checkerboarded sweep ordering per
+    base spec, same taps / weights / BCs."""
+    for base in ("stencil3", "stencil7", "stencil27", "star13", "box125"):
+        spec = _REGISTRY[base]
+        register_stencil(spec.with_ordering("redblack",
+                                            name=f"{base}_redblack"))
+
+
 _builtin_specs()
 _builtin_bc_variants()
+_builtin_ordering_variants()
