@@ -48,6 +48,10 @@ def _flatten(doc: Dict) -> Dict[str, float]:
             for k in GATED_PLAN_KEYS:
                 if isinstance(desc.get(k), (int, float)):
                     flat[f"plans/{spec_name}/{kind}/{k}"] = float(desc[k])
+    guard = doc.get("guard") or {}
+    if isinstance(guard.get("bytes_per_point_f32"), (int, float)):
+        # schema v6: the default guard policy's modeled check traffic
+        flat["guard/bytes_per_point_f32"] = float(guard["bytes_per_point_f32"])
     return flat
 
 
@@ -189,10 +193,25 @@ def main(argv=None) -> int:
     ap.add_argument("--tol", type=float, default=0.05,
                     help="allowed fractional regression (default 0.05)")
     args = ap.parse_args(argv)
-    with open(args.baseline) as f:
-        baseline = json.load(f)
-    with open(args.fresh) as f:
-        fresh = json.load(f)
+    loaded = []
+    for role, path in (("baseline", args.baseline), ("fresh", args.fresh)):
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except OSError as e:
+            print(f"check_regression: cannot read {role} file {path!r}: "
+                  f"{e.strerror or e}")
+            return 2
+        except json.JSONDecodeError as e:
+            print(f"check_regression: {role} file {path!r} is not valid "
+                  f"JSON (truncated or corrupt?): {e}")
+            return 2
+        if not isinstance(doc, dict):
+            print(f"check_regression: {role} file {path!r} holds a JSON "
+                  f"{type(doc).__name__}, expected an object")
+            return 2
+        loaded.append(doc)
+    baseline, fresh = loaded
     bs, fs = baseline.get("schema"), fresh.get("schema")
     if bs != fs:
         print(f"note: schema changed {bs!r} -> {fs!r}; gating on the "

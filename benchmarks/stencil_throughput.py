@@ -21,23 +21,26 @@ single-device view).
 
 Besides the ``name,us_per_call,derived`` text rows, every measurement is
 recorded as a dict and the whole run is dumped to ``BENCH_stencil.json``
-(path overridable via ``$BENCH_STENCIL_JSON``; schema v5: per-spec plan op
+(path overridable via ``$BENCH_STENCIL_JSON``; schema v6: per-spec plan op
 counts with ``radius`` + ``pass_list`` columns, per-path modeled
 bytes/point at radius 1 and 2, a per-spec ``selection`` section recording
 the cost-driven compiler's chosen ``(pass_list, unroll)``, its modeled
 cycles/point, and the losing candidates -- including a
-variable-coefficient variant -- and a ``sweeps`` section recording the
+variable-coefficient variant -- a ``sweeps`` section recording the
 sweeps-aware autotuner's (fused / wavefront / chained) verdict per
-``(spec, s)`` with each mode's modeled bytes/point and time) -- which CI
-uploads as an artifact.
+``(spec, s)`` with each mode's modeled bytes/point and time, and a
+``guard`` section recording the default :class:`GuardPolicy`'s modeled
+check traffic as a fraction of the streaming path) -- which CI uploads as
+an artifact.
 
 ``python benchmarks/stencil_throughput.py --quick`` runs only the
 streamed-vs-replicated rows plus the cost-model gates (exit 1 if the
 streamed path's modeled bytes/point exceeds 2.5 x itemsize -- at radius 1
 *and* radius 2 -- or regresses above the replicated path, for the
-reference 27-point and star13 configurations; or if the temporal
+reference 27-point and star13 configurations; if the temporal
 wavefront's modeled bytes/point exceeds ``1.25 * 2 * itemsize / s`` for
-stencil27 at s=4) -- the fast CI guard.
+stencil27 at s=4; or if the default guard policy's modeled check traffic
+reaches 10% of the streaming path's bytes/point) -- the fast CI guard.
 """
 
 from __future__ import annotations
@@ -55,11 +58,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.perfmodel import streaming_roofline
-from repro.kernels import (autotune_engine, autotune_sweeps,
-                           bytes_per_point, compile_plan, stencil_apply,
+from repro.kernels import (GuardPolicy, autotune_engine, autotune_sweeps,
+                           bytes_per_point, compile_plan,
+                           guard_bytes_per_point, stencil_apply,
                            stencil_ref, stencil_sweep_driver, stencil3_ref,
                            stencil7_ref, stencil27, stencil27_ref)
 from repro.kernels.stencil_engine.autotune import HBM_BW, VPU_FLOPS
+
+# The guard-overhead gate's canonical geometry: a production-depth i axis
+# (the sampled checks amortize over M; REF_CONFIG's m=16 is a kernel-stress
+# shape, not a serving one).
+GUARD_GATE_M = 128
 
 SIZES = (14, 30, 62, 126)
 
@@ -129,8 +138,17 @@ def write_json(path: Optional[str] = None,
     gitignored ``BENCH_stencil.quick.json`` so a local ``--quick`` can't
     silently clobber the baseline with a partial record set."""
     path = path or os.environ.get("BENCH_STENCIL_JSON", default)
+    import dataclasses as _dc
+    itemsize = REF_CONFIG["itemsize"]
+    g_bpp = guard_bytes_per_point(GuardPolicy(), itemsize, GUARD_GATE_M)
     doc = {
-        "schema": "bench_stencil/v5",
+        "schema": "bench_stencil/v6",
+        "guard": {
+            "default_policy": _dc.asdict(GuardPolicy()),
+            "gate_m": GUARD_GATE_M,
+            "bytes_per_point_f32": g_bpp,
+            "fraction_of_stream": g_bpp / (2.0 * itemsize),
+        },
         "plans": {name: {kind: compile_plan(name, kind).describe()
                          for kind in ("direct", "cse", "factored")}
                   for name in ("stencil27", "star13", "box125")},
@@ -210,6 +228,8 @@ def run() -> List[str]:
     rows.extend(_radius_rows(rng))
     rows.extend(_bc_rows(rng))
     rows.append(_jtiled_row(rng))
+    rows.append(_guard_row(rng))
+    rows.extend(check_guard_model())
     rows.append(_sharded_row())
     write_json()
     return rows
@@ -223,6 +243,7 @@ def run_quick() -> List[str]:
     rows = _path_rows(rng)
     rows.extend(check_stream_model())
     rows.extend(check_wavefront_model())
+    rows.extend(check_guard_model())
     write_json(default="BENCH_stencil.quick.json")
     return rows
 
@@ -471,6 +492,58 @@ def check_wavefront_model() -> List[str]:
             f"modeled {wf_bpp} bytes/point (limit {limit}), auto mode "
             f"{sel.mode!r}")
     return rows
+
+
+def check_guard_model() -> List[str]:
+    """The CI gate (guarded-execution PR): the *default* guard policy's
+    modeled check traffic -- :func:`guard_bytes_per_point`, the sampled
+    NaN + invariant checks sharing one gathered strip per sampled plane --
+    must cost < 10% of the streaming path's ``2 * itemsize`` bytes/point at
+    the canonical serving depth ``m = GUARD_GATE_M``.  Appends a gate row;
+    raises ``SystemExit(1)`` on violation so the workflow fails."""
+    itemsize = REF_CONFIG["itemsize"]
+    policy = GuardPolicy()
+    g_bpp = guard_bytes_per_point(policy, itemsize, GUARD_GATE_M)
+    stream = 2.0 * itemsize
+    frac = g_bpp / stream
+    ok = frac < 0.10
+    rows = [_row("engine27.guard_gate", 0.0,
+                 f"guard={g_bpp:.3f} B/pt stream={stream:.1f} B/pt "
+                 f"fraction={frac:.3f} limit=0.10 m={GUARD_GATE_M} "
+                 f"sample={policy.sample} ok={ok}",
+                 guard_bytes_per_point=g_bpp,
+                 stream_bytes_per_point=stream, fraction=frac,
+                 gate_m=GUARD_GATE_M, sample=policy.sample, ok=bool(ok))]
+    if not ok:
+        print("\n".join(rows))
+        write_json(default="BENCH_stencil.quick.json")
+        raise SystemExit(
+            f"stencil guard-overhead gate failed: default policy models "
+            f"{g_bpp} bytes/point = {frac:.1%} of the streaming path's "
+            f"{stream} (limit 10%) at m={GUARD_GATE_M}")
+    return rows
+
+
+def _guard_row(rng) -> str:
+    """Measured guard overhead: the default sampled policy vs ``guard="off"``
+    on the reference shape (interpret-mode wall clock is indicative only --
+    the modeled fraction in ``check_guard_model`` is the gated number)."""
+    m, n, p = (REF_CONFIG[k] for k in ("m", "n", "p"))
+    a = jnp.asarray(rng.integers(-4, 5, size=(m, n, p)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.1, 1, (2, 2, 2)), jnp.float32)
+    t_off = _time(lambda x: stencil_apply(x, w, "stencil27"), a, reps=3)
+    policy = GuardPolicy()
+    t_on = _time(lambda x: stencil_apply(x, w, "stencil27", guard=policy),
+                 a, reps=3)
+    g_bpp = guard_bytes_per_point(policy, 4, GUARD_GATE_M)
+    frac = g_bpp / (2.0 * 4)
+    return _row(
+        "engine27.guard_overhead", t_on * 1e6,
+        f"off={t_off * 1e6:.1f}us on={t_on * 1e6:.1f}us "
+        f"modeled_check_bytes={g_bpp:.3f} B/pt "
+        f"({frac:.1%} of stream @ m={GUARD_GATE_M})",
+        us_off=t_off * 1e6, us_on=t_on * 1e6,
+        guard_bytes_per_point=g_bpp, modeled_fraction=frac)
 
 
 def check_stream_model() -> List[str]:

@@ -2,15 +2,16 @@
 
 from .flash_attention import attention_ref, flash_attention  # noqa: F401
 from .mamba_scan import mamba_scan, mamba_scan_ref  # noqa: F401
-from .stencil_engine import (BC, SWEEP_MODES, StencilPlan,  # noqa: F401
-                             StencilSpec, SweepSelection, as_boundary,
-                             autotune_block_i, autotune_blocks,
+from .stencil_engine import (BC, SWEEP_MODES, GuardPolicy,  # noqa: F401
+                             StencilPlan, StencilSpec, SweepSelection,
+                             as_boundary, autotune_block_i, autotune_blocks,
                              autotune_engine, autotune_sweeps,
                              bytes_per_point, compile_plan, dirichlet,
-                             get_stencil, list_stencils, register_stencil,
-                             spec_from_mask, stencil_apply, stencil_ref,
-                             stencil_sharded, stencil_sweep_driver,
-                             stencil_wavefront, stencil3, stencil3_ref,
-                             stencil7, stencil7_ref, stencil27,
-                             stencil27_ref, wavefront_block_i)
+                             get_stencil, guard_bytes_per_point,
+                             last_guard_report, list_stencils,
+                             register_stencil, spec_from_mask, stencil_apply,
+                             stencil_ref, stencil_sharded,
+                             stencil_sweep_driver, stencil_wavefront,
+                             stencil3, stencil3_ref, stencil7, stencil7_ref,
+                             stencil27, stencil27_ref, wavefront_block_i)
 from .stencil_mxu import stencil27_mxu, stencil27_mxu_ref  # noqa: F401

@@ -127,6 +127,22 @@ Sharded execution -- :func:`stencil_sharded`
     shard_map programs are memoized keyed on device ids + axis names (not
     ``Mesh`` objects) in a bounded cache.
 
+Guarded execution -- ``guard=`` on every entry point (:mod:`.guard`)
+    Runtime verification + graceful degradation: a :class:`GuardPolicy`
+    (or a :data:`GUARD_KINDS` preset string) screens the output for
+    NaN/Inf, checks the weight-sum invariant (global under all-periodic
+    BCs, per-sampled-plane marginals otherwise/interior residual for
+    non-periodic), and optionally spot-checks sampled planes against an
+    exact thin-strip oracle (:func:`stencil_ref_planes`); on a detected
+    failure or a raised kernel the call retries once, then walks
+    ``wavefront -> fused -> chained -> stream -> replicate -> oracle``,
+    blacklisting raising candidates in the autotuner and recording every
+    demotion in ``last_guard_report().describe()["guard"]``.  The default
+    ``guard="off"`` dispatches to the historical byte-identical jitted
+    programs.  :mod:`.faults` is the seedable injection harness (bit-flip
+    planes, NaN scratch windows, corrupted ppermute halos, raising
+    candidates) that proves each detector in ``tests/test_stencil_guard``.
+
 Tier-1 verify: ``PYTHONPATH=src python -m pytest -x -q``
 (engine parity lives in ``tests/test_stencil_engine.py``; plan-correctness
 property tests in ``tests/test_stencil_plan.py``).
@@ -134,19 +150,26 @@ property tests in ``tests/test_stencil_plan.py``).
 
 from .autotune import (PATH_KINDS, SWEEP_MODES, SweepSelection,  # noqa: F401
                        autotune_block_i, autotune_blocks, autotune_engine,
-                       autotune_sweeps, bytes_per_point, pick_block_i,
-                       pick_block_rows, wavefront_block_i)
+                       autotune_sweeps, blacklist_candidate, bytes_per_point,
+                       clear_blacklist, is_blacklisted, list_blacklist,
+                       pick_block_i, pick_block_rows, wavefront_block_i)
 from .compat import (stencil3, stencil3_ref, stencil7, stencil7_ref,  # noqa: F401
                      stencil27, stencil27_ref)
 from .common import DEFAULT_VMEM_BUDGET  # noqa: F401
+from .faults import (BitFlipPlane, CorruptHalo, FaultInjector,  # noqa: F401
+                     NaNScratchWindow, NaNWindow, RaisingCandidate, inject)
+from .guard import (LADDER, GuardError, GuardPolicy,  # noqa: F401
+                    GuardReport, as_guard, guard_bytes_per_point,
+                    last_guard_report, run_guard_checks)
+from .kernel import KernelFault  # noqa: F401
 from .ops import default_interpret, stencil_apply  # noqa: F401
 from .plan import (PASS_PRESETS, PLAN_KINDS, PlanOp,  # noqa: F401
                    StencilPlan, compile_plan, execute_plan,
                    mirror_symmetric, peak_live, run_passes, shift_slice,
                    shift_slice_bc)
-from .ref import stencil_ref  # noqa: F401
+from .ref import stencil_ref, stencil_ref_planes  # noqa: F401
 from .sharded import stencil_sharded  # noqa: F401
-from .spec import (BC, BC_KINDS, CLAMP, NEUMANN,  # noqa: F401
+from .spec import (BC, BC_KINDS, CLAMP, GUARD_KINDS, NEUMANN,  # noqa: F401
                    ORDERING_KINDS, PERIODIC, StencilSpec, as_boundary,
                    bc_labels, dirichlet, get_stencil, list_stencils,
                    register_stencil, spec_from_mask)

@@ -61,6 +61,55 @@ SWEEP_MODES = ("auto", "fused", "wavefront", "chained")
 
 RadiusLike = Union[int, Tuple[int, int, int], None]
 
+# ---------------------------------------------------------------------------
+# Guarded-execution candidate blacklist.
+#
+# Historically a candidate that raised at compile or run time was fatal: the
+# autotuner would happily re-select it on the next call and the caller would
+# crash again.  The guard's degradation ladder (see .guard) records a
+# demoted candidate here after its retry also fails, and the two autotune
+# races consult the registry so a known-bad (spec, mode) / (spec, path)
+# pair drops out of future selections -- the process-local analogue of the
+# paper's "discard variants the simulator rejects" step.  Empty by default,
+# so unguarded behaviour is unchanged.
+# ---------------------------------------------------------------------------
+
+_BLACKLIST: set = set()
+
+
+def blacklist_candidate(spec_name: str, mode: Optional[str] = None,
+                        path: Optional[str] = None) -> None:
+    """Exclude a sweep ``mode`` and/or a data-movement ``path`` from future
+    ``auto`` races for the named spec (pinned modes/paths stay reachable --
+    an explicit request is the caller's escape hatch)."""
+    if mode is None and path is None:
+        raise ValueError("blacklist_candidate needs a mode and/or a path")
+    if mode is not None:
+        _BLACKLIST.add((str(spec_name), "mode", mode))
+    if path is not None:
+        _BLACKLIST.add((str(spec_name), "path", path))
+
+
+def is_blacklisted(spec_name: str, mode: Optional[str] = None,
+                   path: Optional[str] = None) -> bool:
+    return ((mode is not None
+             and (str(spec_name), "mode", mode) in _BLACKLIST)
+            or (path is not None
+                and (str(spec_name), "path", path) in _BLACKLIST))
+
+
+def clear_blacklist(spec_name: Optional[str] = None) -> None:
+    """Drop every blacklist entry (or only the named spec's)."""
+    if spec_name is None:
+        _BLACKLIST.clear()
+    else:
+        for e in [e for e in _BLACKLIST if e[0] == str(spec_name)]:
+            _BLACKLIST.discard(e)
+
+
+def list_blacklist() -> Tuple[Tuple[str, str, str], ...]:
+    return tuple(sorted(_BLACKLIST))
+
 
 def _radius3(radius: RadiusLike, plan=None) -> Tuple[int, int, int]:
     """Canonicalize a radius argument: ``None`` defers to the plan's spec
@@ -281,6 +330,10 @@ def autotune_engine(m: int, n: int, p: int, itemsize: int,
     apps = _plan_apps(plan)
     rad = _radius3(radius, plan)
     cands = ("stream", "replicate") if path == "auto" else (path,)
+    if path == "auto" and plan is not None:
+        live = tuple(c for c in cands
+                     if not is_blacklisted(plan.spec.name, path=c))
+        cands = live or cands       # never race an empty field
     best = None
     for cand in cands:
         bi, bj = autotune_blocks(m, n, p, itemsize, sweeps=sweeps, plan=plan,
@@ -468,6 +521,10 @@ def autotune_sweeps(m: int, n: int, p: int, itemsize: int, sweeps: int,
     apps = _plan_apps(plan)
     rad = _radius3(None, plan)
     modes = ("fused", "wavefront", "chained") if mode == "auto" else (mode,)
+    if mode == "auto":
+        live = tuple(c for c in modes
+                     if not is_blacklisted(spec.name, mode=c))
+        modes = live or modes       # never race an empty field
     pref = ({"wavefront": 0, "fused": 1, "chained": 2} if sweeps > 1
             else {"fused": 0, "wavefront": 1, "chained": 2})
     rows = []

@@ -1,0 +1,289 @@
+"""Seedable fault injection: prove every guard detector against a real fault.
+
+A guard nobody has ever seen fire is a guard that does not work.  This
+module manufactures the fault classes the PPC450 paper's era worried about
+(memory bit flips, stale/corrupt exchange buffers, miscompiled variants)
+inside the engine's own execution machinery, so the tests can demonstrate
+each :mod:`.guard` detector catching -- and the degradation ladder
+recovering from -- the exact failure it claims to cover:
+
+========================  =======================================  ==========
+injector                  where the fault lives                    detector
+========================  =======================================  ==========
+:class:`BitFlipPlane`     an exponent bit XOR'd across one output  invariant
+                          i-plane (huge-but-finite drift)
+:class:`NaNWindow`        a NaN window written into the output     nan
+:class:`NaNScratchWindow` a NaN plane poisoned *inside* the        nan
+                          stream kernel's VMEM rotating window
+                          (via the static ``_fault`` argument)
+:class:`CorruptHalo`      the ppermute'd halo slabs of the         invariant /
+                          sharded exchange (garbage / truncation   nan / oracle
+                          -to-zeros / NaN), or the edge planes of
+                          an unsharded output
+:class:`RaisingCandidate` an exception raised from the rung        exception
+                          runner (a candidate that dies at         ladder +
+                          compile/run time)                        blacklist
+========================  =======================================  ==========
+
+Injectors are seeded (:class:`numpy.random.Generator`), rung-filtered
+(default: every rung but the oracle -- the verifier itself stays honest),
+and budgeted (``fires``), so a test can let the fault hit the fast path and
+then watch the ladder recover on a clean lower rung.  Install them with
+:func:`inject`::
+
+    with inject(NaNWindow(seed=7)) as (inj,):
+        out = stencil_apply(a, w, "stencil27", guard="full")
+    assert inj.fired == 1                      # the fault really happened
+    report = last_guard_report()               # ...and the guard saw it
+
+Nothing here is imported by the engine's hot paths; installing zero
+injectors leaves every hook list empty and the traced programs untouched.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import guard as _guard
+from . import sharded as _sharded
+from .kernel import KernelFault
+
+# Every rung a fault may target; the oracle is deliberately absent from the
+# default so the ladder's last resort stays trustworthy.
+FAULT_RUNGS = ("wavefront", "fused", "chained", "stream", "replicate")
+
+
+class FaultInjector:
+    """Base class: seeded RNG, rung filter, fire budget, and a log.
+
+    Subclasses override one of the three hook slots: ``apply_out(out, ctx)``
+    (corrupt a produced output), ``on_run(ctx)`` (raise before a rung runs),
+    or ``kernel_fault(ctx)`` (return a :class:`~.kernel.KernelFault` to bake
+    into the rung's traced kernel)."""
+
+    def __init__(self, seed: int = 0,
+                 rungs: Sequence[str] = FAULT_RUNGS,
+                 fires: int = 1):
+        unknown = set(rungs) - set(_guard.LADDER)
+        if unknown:
+            raise ValueError(f"unknown rungs {sorted(unknown)}; expected a "
+                             f"subset of {_guard.LADDER}")
+        self.rng = np.random.default_rng(seed)
+        self.rungs = tuple(rungs)
+        self.fires = int(fires)
+        self.fired = 0
+        self.log: list = []
+
+    def _arm(self, ctx) -> bool:
+        return ctx.rung in self.rungs and self.fired < self.fires
+
+    def _record(self, ctx, **extra) -> None:
+        self.fired += 1
+        self.log.append({"injector": type(self).__name__, "rung": ctx.rung,
+                         "attempt": ctx.attempt, "entry": ctx.entry,
+                         **extra})
+
+    # Hook slots -- default no-ops.
+    def apply_out(self, out, ctx):
+        return out
+
+    def on_run(self, ctx) -> None:
+        return None
+
+    def kernel_fault(self, ctx) -> Optional[KernelFault]:
+        return None
+
+
+class BitFlipPlane(FaultInjector):
+    """XOR one exponent bit across one output i-plane: every value on the
+    plane scales by a power of two -- large, *finite* drift that sails
+    through the NaN screen and trips the weight-sum invariant.
+
+    ``bit=None`` picks a mid-exponent bit for the dtype (mantissa + 3), so
+    small integer-valued fields never flip into Inf/NaN territory."""
+
+    def __init__(self, seed: int = 0, plane: Optional[int] = None,
+                 bit: Optional[int] = None, **kw):
+        super().__init__(seed=seed, **kw)
+        self.plane = plane
+        self.bit = bit
+
+    def apply_out(self, out, ctx):
+        if not self._arm(ctx) or out.ndim < 3:
+            return out
+        arr = np.array(out)
+        if not np.issubdtype(arr.dtype, np.floating):
+            return out
+        mant = np.finfo(arr.dtype).nmant
+        bit = self.bit if self.bit is not None else mant + 3
+        m = arr.shape[-3]
+        pi = (int(self.plane) % m if self.plane is not None
+              else int(self.rng.integers(m)))
+        u = arr.view(np.dtype(f"uint{arr.dtype.itemsize * 8}"))
+        u[..., pi, :, :] ^= np.asarray(1 << bit, u.dtype)
+        self._record(ctx, plane=pi, bit=bit)
+        return jnp.asarray(arr)
+
+
+class NaNWindow(FaultInjector):
+    """Write a NaN window into the output (a poisoned store): the NaN/Inf
+    screen's canonical prey."""
+
+    def __init__(self, seed: int = 0, plane: Optional[int] = None,
+                 width: int = 2, **kw):
+        super().__init__(seed=seed, **kw)
+        self.plane = plane
+        self.width = width
+
+    def apply_out(self, out, ctx):
+        if not self._arm(ctx) or out.ndim < 3:
+            return out
+        arr = np.array(out)
+        if not np.issubdtype(arr.dtype, np.floating):
+            return out
+        m = arr.shape[-3]
+        pi = (int(self.plane) % m if self.plane is not None
+              else int(self.rng.integers(m)))
+        w = max(1, self.width)
+        arr[..., pi, :w, :w] = np.nan
+        self._record(ctx, plane=pi, width=w)
+        return jnp.asarray(arr)
+
+
+class NaNScratchWindow(FaultInjector):
+    """Poison a plane of the stream kernel's rotating VMEM scratch window
+    *inside* the traced kernel (see ``stencil3d_stream_kernel``'s ``fault``
+    hook): the NaN is manufactured where a real SEU in kernel-resident
+    state would live, then propagates through the sweeps into the output,
+    where the NaN screen catches it.  Only the streaming path has the
+    scratch window -- the replicate rung runs clean, which is exactly the
+    recovery the ladder demonstrates."""
+
+    def __init__(self, seed: int = 0, plane: Optional[int] = None, **kw):
+        super().__init__(seed=seed, **kw)
+        self.plane = plane
+
+    def kernel_fault(self, ctx) -> Optional[KernelFault]:
+        if not self._arm(ctx) or ctx.rung == "replicate":
+            return None
+        pi = (int(self.plane) if self.plane is not None
+              else int(self.rng.integers(1 << 16)))
+        self._record(ctx, plane=pi)
+        return KernelFault(kind="nan_scratch", plane=pi)
+
+
+class CorruptHalo(FaultInjector):
+    """Corrupt the halo data a rung consumes.
+
+    Sharded (``sharded=True``, the default): installs the
+    :func:`~.sharded.set_halo_fault` hook, so the ppermute'd lo/hi slabs are
+    corrupted inside the traced shard_map body -- the fault is in the
+    exchanged bytes themselves, covering the deep-halo ring/chain exchange.
+    ``mode``: ``"garbage"`` scales the slabs by a huge finite factor
+    (invariant detector), ``"truncate"`` zeroes them as a short/stale
+    message would (invariant / oracle detector -- the wrap rows silently
+    vanish), ``"nan"`` poisons them (NaN screen).  The traced hook fires on
+    every sharded rung while installed; the ladder recovers by leaving the
+    sharded path for the single-device rungs, which never touch the
+    exchange.
+
+    Unsharded: an output hook corrupting the ``halo`` edge i-planes, the
+    single-device analogue of a bad exchange."""
+
+    MODES = ("garbage", "truncate", "nan")
+
+    def __init__(self, seed: int = 0, mode: str = "garbage",
+                 sharded: bool = True, halo: int = 1, **kw):
+        super().__init__(seed=seed, **kw)
+        if mode not in self.MODES:
+            raise ValueError(f"unknown CorruptHalo mode {mode!r}; expected "
+                             f"one of {self.MODES}")
+        self.mode = mode
+        self.sharded = sharded
+        self.halo = max(1, halo)
+
+    def _corrupt(self, x):
+        if self.mode == "garbage":
+            return x * jnp.asarray(2.0 ** 60, x.dtype) + jnp.asarray(
+                1.0, x.dtype)
+        if self.mode == "truncate":
+            return jnp.zeros_like(x)
+        return jnp.full_like(x, jnp.nan)
+
+    def halo_fault(self, lo, hi) -> Tuple:
+        # Traced once into the cached shard_map program; count the install,
+        # not the (untraceable) per-call executions.
+        return self._corrupt(lo), self._corrupt(hi)
+
+    def apply_out(self, out, ctx):
+        if self.sharded or not self._arm(ctx) or out.ndim < 3:
+            return out
+        arr = np.array(out)
+        if not np.issubdtype(arr.dtype, np.floating):
+            return out
+        h = min(self.halo, arr.shape[-3])
+        bad = {"garbage": np.asarray(2.0 ** 60, arr.dtype),
+               "truncate": np.asarray(0.0, arr.dtype),
+               "nan": np.asarray(np.nan, arr.dtype)}[self.mode]
+        arr[..., :h, :, :] = (arr[..., :h, :, :] * bad + 1.0
+                              if self.mode == "garbage" else bad)
+        self._record(ctx, mode=self.mode, halo=h)
+        return jnp.asarray(arr)
+
+
+class RaisingCandidate(FaultInjector):
+    """A candidate that dies at compile/run time: raises from the rung
+    runner, driving the exception arm of the ladder -- retry, demote,
+    and blacklist the rung in :mod:`.autotune`."""
+
+    def __init__(self, seed: int = 0, exc: type = RuntimeError,
+                 message: str = "injected candidate failure", **kw):
+        kw.setdefault("fires", 10 ** 9)   # raise on retry too, by default
+        super().__init__(seed=seed, **kw)
+        self.exc = exc
+        self.message = message
+
+    def on_run(self, ctx) -> None:
+        if not self._arm(ctx):
+            return
+        self._record(ctx)
+        raise self.exc(f"{self.message} [rung={ctx.rung}, "
+                       f"attempt={ctx.attempt}]")
+
+
+@contextlib.contextmanager
+def inject(*injectors: FaultInjector):
+    """Install ``injectors`` into the guard's fault hooks (and the sharded
+    halo-exchange hook for sharded :class:`CorruptHalo`) for the dynamic
+    extent of the block; always uninstalls, even on error.  Yields the
+    injectors so tests can assert on ``fired`` / ``log``."""
+    out_hooks = [inj.apply_out for inj in injectors]
+    run_hooks = [inj.on_run for inj in injectors]
+    kern_hooks = [inj.kernel_fault for inj in injectors]
+    halo = [inj for inj in injectors
+            if isinstance(inj, CorruptHalo) and inj.sharded]
+    if len(halo) > 1:
+        raise ValueError("at most one sharded CorruptHalo at a time")
+    _guard._OUT_HOOKS.extend(out_hooks)
+    _guard._RUN_HOOKS.extend(run_hooks)
+    _guard._KERNEL_HOOKS.extend(kern_hooks)
+    if halo:
+        _sharded.set_halo_fault(halo[0].halo_fault)
+        halo[0].fired += 1
+        halo[0].log.append({"injector": "CorruptHalo", "mode": halo[0].mode,
+                            "installed": True})
+    try:
+        yield injectors
+    finally:
+        for h in out_hooks:
+            _guard._OUT_HOOKS.remove(h)
+        for h in run_hooks:
+            _guard._RUN_HOOKS.remove(h)
+        for h in kern_hooks:
+            _guard._KERNEL_HOOKS.remove(h)
+        if halo:
+            _sharded.set_halo_fault(None)

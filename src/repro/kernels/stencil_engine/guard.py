@@ -1,0 +1,663 @@
+"""Guarded execution: runtime verification + the path-degradation ladder.
+
+The paper's loop is synthesize -> schedule -> simulate -> **verify** ->
+select, but until this module the engine only verified at synthesis/test
+time: at run time any of the fast paths (stream / replicate / wavefront x
+BCs x orderings x sharded deep-halo) could silently diverge, OOM VMEM, or
+propagate NaN with no detection and no recovery.  This module is the
+runtime half of that loop:
+
+:class:`GuardPolicy` -- what to check
+    * **NaN/Inf screening** (``nan``): ``isfinite`` over the output (or a
+      sampled set of i-planes).
+    * **Weight-sum invariant** (``invariant``): the operator is linear with
+      constant row sums, so under all-periodic BCs
+      ``sum(out) == sum(w)**sweeps * sum(in)`` to dtype tolerance -- checked
+      globally, or per sampled plane via the i-marginal identity
+      ``q_out[i] == (W_i ** sweeps)(q_in)[i]`` where ``q`` is the
+      plane-marginal sum and ``W_i[di] = sum of taps at offset di`` (a 1-D
+      stencil on the marginals).  Non-periodic BCs get the *interior-only
+      residual*: over output windows at least ``max(radius, 1)`` from every
+      boundary, ``sum(out_window) == sum_t w_t * sum(in_window + off_t)``
+      exactly (free space; single-sweep Jacobi).
+    * **Sampled-plane oracle spot check** (``oracle``): sampled output
+      planes recomputed exactly from thin gathered strips
+      (:func:`~.ref.stencil_ref_planes`) -- or, unsampled, a full
+      :func:`~.ref.stencil_ref` comparison.
+
+    ``sample = k`` runs every enabled check on ``k`` stratified i-planes
+    (first/last valid plane always included): the whole guard then reads
+    ``~k * (2 * halo + 2)`` planes per call instead of the full volume --
+    :func:`guard_bytes_per_point` is the modeled cost the benchmark's
+    guard-overhead row gates at < 10% of the streaming path's
+    ``2 * itemsize``.  ``sample = 0`` checks everything (test/debug grade).
+
+Degradation ladder -- what happens on failure
+    On a detected check failure or a raised kernel error the guard retries
+    the same rung (``retries`` times, default once -- transient faults
+    clear), then walks ``wavefront -> fused -> chained -> stream ->
+    replicate -> oracle``, re-checking each rung; the final rung is the
+    NumPy/jnp oracle itself (trusted by definition -- it is the verifier).
+    A rung whose *kernel raised* (after its retry) is blacklisted in
+    :mod:`.autotune` (:func:`~.autotune.blacklist_candidate`) so future
+    ``auto`` races skip it -- previously a raising candidate was fatal on
+    every call.  Every demotion is recorded with its fault class, the path
+    taken, and the retry count in :meth:`GuardReport.describe`'s
+    ``["guard"]`` record (:func:`last_guard_report` returns the most recent
+    one), mirroring ``SweepSelection.describe()["selection"]``.
+
+``guard="off"`` (the default everywhere) bypasses this module entirely --
+the public entry points dispatch straight to the historical jitted
+programs, byte-identical to the pre-guard engine.  Fault injection hooks
+(:data:`_OUT_HOOKS` / :data:`_RUN_HOOKS` / :data:`_KERNEL_HOOKS`) are
+installed only by :mod:`.faults`' seedable harness, which is how every
+detector and every ladder rung is proven against a real fault in tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import autotune
+from .kernel import acc_dtype_for
+from .plan import compile_plan
+from .ref import stencil_ref, stencil_ref_planes
+from .spec import GUARD_KINDS, StencilSpec, get_stencil
+
+LADDER = ("wavefront", "fused", "chained", "stream", "replicate", "oracle")
+
+# Fault-injection hooks -- empty unless .faults installs them (tests only).
+_OUT_HOOKS: List[Callable] = []     # f(out, ctx) -> out, after a rung runs
+_RUN_HOOKS: List[Callable] = []     # f(ctx) -> None, may raise, before a rung
+_KERNEL_HOOKS: List[Callable] = []  # f(ctx) -> Optional[KernelFault]
+
+# Monotone counters (tests assert the off path never touches the guard).
+CHECK_RUNS = [0]
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardPolicy:
+    """What the guard checks, how much it samples, how hard it retries.
+
+    ``rtol=None`` picks a dtype default (f64 1e-9, f32 1e-4, bf16/f16
+    2e-2); integer data is compared exactly.  Hashable/frozen so a policy
+    can ride anywhere a spec can."""
+
+    nan: bool = True                # isfinite screen on the output
+    invariant: bool = True          # weight-sum conservation check
+    oracle: bool = False            # sampled-plane oracle spot check
+    sample: int = 4                 # checked i-planes; 0 = full-array checks
+    retries: int = 1                # same-rung retries before demotion
+    rtol: Optional[float] = None    # None = dtype default
+
+    def __post_init__(self):
+        if self.sample < 0 or self.retries < 0:
+            raise ValueError("GuardPolicy sample/retries must be >= 0")
+
+
+def as_guard(guard) -> Optional[GuardPolicy]:
+    """Canonicalize a guard spelling: ``None``/``"off"`` -> no guard; a
+    :data:`~.spec.GUARD_KINDS` string -> its preset policy; a
+    :class:`GuardPolicy` passes through."""
+    if guard is None or guard == "off":
+        return None
+    if isinstance(guard, GuardPolicy):
+        return guard
+    if guard == "nan":
+        return GuardPolicy(nan=True, invariant=False, oracle=False, sample=0)
+    if guard == "invariant":
+        return GuardPolicy(nan=True, invariant=True, oracle=False)
+    if guard == "oracle":
+        return GuardPolicy(nan=True, invariant=True, oracle=True)
+    if guard == "full":
+        return GuardPolicy(nan=True, invariant=True, oracle=True, sample=0)
+    raise ValueError(f"unknown guard {guard!r}; expected one of "
+                     f"{GUARD_KINDS} or a GuardPolicy")
+
+
+def default_rtol(dtype) -> float:
+    dt = jnp.dtype(dtype)
+    if not jnp.issubdtype(dt, jnp.inexact):
+        return 0.0
+    if dt == jnp.dtype("float64") or dt == jnp.dtype("complex128"):
+        return 1e-9
+    if dt.itemsize <= 2:            # bf16 / f16
+        return 2e-2
+    return 1e-4
+
+
+def guard_bytes_per_point(policy: Optional[GuardPolicy], itemsize: int,
+                          m: int, radius: int = 1, sweeps: int = 1,
+                          apps: int = 1) -> float:
+    """Modeled HBM bytes per output point the *checks* add to one call.
+
+    The sampled checks share their plane reads: the guard gathers each
+    sampled output plane once (1 plane) plus, when the invariant or the
+    oracle check is on, the ``2 * halo + 1`` input strip feeding it --
+    ``sample * (2 * halo + 2)`` plane-reads per ``m``-plane call, amortized
+    over ``sweeps`` like the traffic it guards.  Unsampled (``sample=0``)
+    checks read the full output (+ the full input for the invariant /
+    oracle), which is debug-grade: the benchmark's guard-overhead gate
+    prices the default *sampled* policy."""
+    if policy is None:
+        return 0.0
+    needs_strip = policy.invariant or policy.oracle
+    full = float(m) * (2.0 if needs_strip else 1.0)
+    if policy.sample == 0:
+        planes = full
+    else:
+        h = radius * apps * sweeps
+        per_plane = (2 * h + 2) if needs_strip else 1
+        # Overlapping strips share reads: oversampling never costs more
+        # than one full pass over output (+ input, for the strip checks).
+        planes = min(min(policy.sample, m) * float(per_plane), full)
+    return planes / m * itemsize / sweeps
+
+
+# ---------------------------------------------------------------------------
+# Checks.
+# ---------------------------------------------------------------------------
+
+def _sampled_planes(policy: GuardPolicy, m: int, h: int,
+                    periodic_i: bool) -> Optional[np.ndarray]:
+    """The checked i-plane indices: ``None`` = full-array checks; an empty
+    array when nothing is sampleable (halo swallows the interior).  First
+    and last valid planes always included; the rest stratified."""
+    if policy.sample <= 0:
+        return None
+    lo, hi = (0, m - 1) if periodic_i else (h, m - 1 - h)
+    if hi < lo:
+        return np.array([], dtype=int)
+    k = min(policy.sample, hi - lo + 1)
+    return np.unique(np.round(np.linspace(lo, hi, k)).astype(int))
+
+
+def _close(got, want, rtol: float) -> bool:
+    got = jnp.asarray(got)
+    want = jnp.asarray(want)
+    if rtol == 0.0:
+        return bool(jnp.array_equal(got, want))
+    scale = float(jnp.max(jnp.abs(want))) if want.size else 0.0
+    return bool(jnp.allclose(got, want, rtol=rtol,
+                             atol=rtol * max(scale, 1e-30)))
+
+
+def _all_periodic(spec: StencilSpec) -> bool:
+    return all(spec.bc[ax][0].kind == "periodic"
+               for ax in range(3 - spec.ndim, 3))
+
+
+def _nan_check(out, spec: StencilSpec, planes) -> Dict[str, object]:
+    if not jnp.issubdtype(out.dtype, jnp.inexact):
+        return {"check": "nan", "ok": True, "skipped": True,
+                "detail": "integer dtype is always finite"}
+    view = out
+    if planes is not None and spec.ndim == 3:
+        if planes.size == 0:
+            return {"check": "nan", "ok": True, "skipped": True,
+                    "detail": "no sampleable planes"}
+        view = jnp.take(out, jnp.asarray(planes), axis=out.ndim - 3)
+    ok = bool(jnp.isfinite(view).all())
+    return {"check": "nan", "ok": ok, "skipped": False,
+            "detail": "" if ok else "non-finite values in the output"}
+
+
+def _marginal_weights(spec: StencilSpec, wf) -> np.ndarray:
+    """``W_i[di + r_i]``: the i-marginal 1-D stencil -- summing a
+    (wrap-around) plane marginal commutes with the operator."""
+    r = spec.radius[0]
+    w = np.asarray(wf, dtype=np.float64)
+    wi = np.zeros(2 * r + 1)
+    for (di, _, _), t in zip(spec.offsets, spec.w_index):
+        wi[di + r] += w[t]
+    return wi
+
+
+def _invariant_check(out, a, wf, spec: StencilSpec, sweeps: int,
+                     rtol: float, planes) -> Dict[str, object]:
+    skip = None
+    if spec.coef != "const":
+        skip = "variable coefficients have no constant row sum"
+    elif spec.ordering != "jacobi":
+        skip = "red-black half-sweeps mix old and new values"
+    elif not jnp.issubdtype(out.dtype, jnp.inexact):
+        skip = "integer data is covered by the exact checks"
+    if skip:
+        return {"check": "invariant", "ok": True, "skipped": True,
+                "detail": skip}
+    sum_dt = acc_dtype_for(out.dtype)
+    w = np.asarray(wf, dtype=np.float64)
+    sw = float(w[list(spec.w_index)].sum())
+    sw_abs = float(np.abs(w[list(spec.w_index)]).sum())
+    if _all_periodic(spec):
+        if planes is None or spec.ndim != 3:
+            so = float(jnp.sum(out.astype(sum_dt)))
+            si = float(jnp.sum(a.astype(sum_dt)))
+            sa = float(jnp.sum(jnp.abs(a.astype(sum_dt))))
+            pred = (sw ** sweeps) * si
+            tol = rtol * max((sw_abs ** sweeps) * sa, 1e-30)
+            ok = abs(so - pred) <= tol
+            return {"check": "invariant", "ok": ok, "skipped": False,
+                    "detail": "" if ok else
+                    f"global weight-sum drift |{so:g} - {pred:g}| > {tol:g}"}
+        if planes.size == 0:
+            return {"check": "invariant", "ok": True, "skipped": True,
+                    "detail": "no sampleable planes"}
+        # Per sampled plane: the i-marginal identity on a wrapped strip.
+        wi = _marginal_weights(spec, wf)
+        r = spec.radius[0]
+        h = r * sweeps
+        m = out.shape[-3]
+        axis = out.ndim - 3
+        other = tuple(ax for ax in range(out.ndim) if ax != axis)
+        for i in planes:
+            idx = jnp.asarray(np.arange(i - h, i + h + 1) % m)
+            strip = jnp.take(a, idx, axis=axis).astype(sum_dt)
+            q = np.asarray(jnp.sum(strip, axis=other), dtype=np.float64)
+            qa = np.abs(q)
+            for _ in range(sweeps):
+                q = np.convolve(q, wi[::-1], mode="valid")
+                qa = np.convolve(qa, np.abs(wi)[::-1], mode="valid")
+            qo = float(jnp.sum(jnp.take(out, jnp.asarray([int(i)]),
+                                        axis=axis).astype(sum_dt)))
+            tol = rtol * max(float(qa[0]), 1e-30)
+            if abs(qo - float(q[0])) > tol:
+                return {"check": "invariant", "ok": False, "skipped": False,
+                        "detail": f"plane {int(i)}: marginal weight-sum "
+                                  f"drift |{qo:g} - {float(q[0]):g}| > "
+                                  f"{tol:g}"}
+        return {"check": "invariant", "ok": True, "skipped": False,
+                "detail": ""}
+    # Non-periodic BCs: interior-only residual, exact in free space for a
+    # single Jacobi application; deeper sweeps are the oracle check's job.
+    if sweeps != 1 or spec.ndim != 3:
+        return {"check": "invariant", "ok": True, "skipped": True,
+                "detail": "interior residual covers single volumetric "
+                          "Jacobi sweeps; rely on the oracle check"}
+    m, n, p = out.shape[-3:]
+    margins = []
+    for ax in range(3):
+        r = spec.radius[ax]
+        lo, hi = spec.bc[ax]
+        margins.append((max(r, 1) if lo.kind == "clamp" else r,
+                        max(r, 1) if hi.kind == "clamp" else r))
+    (ilo, ihi), (jlo, jhi), (klo, khi) = margins
+    if planes is None:
+        cand = np.arange(max(ilo, spec.radius[0]), m - max(ihi, spec.radius[0]))
+    else:
+        cand = planes[(planes >= max(ilo, spec.radius[0]))
+                      & (planes < m - max(ihi, spec.radius[0]))]
+    if (cand.size == 0 or jlo + jhi + spec.radius[1] * 2 >= n
+            or klo + khi + spec.radius[2] * 2 >= p):
+        return {"check": "invariant", "ok": True, "skipped": True,
+                "detail": "domain too small for an interior window"}
+    axis = out.ndim - 3
+    w64 = np.asarray(wf, dtype=np.float64)
+    for i in cand:
+        i = int(i)
+        pred = 0.0
+        scale = 0.0
+        for (di, dj, dk), t in zip(spec.offsets, spec.w_index):
+            win = jnp.take(a, jnp.asarray([i + di]), axis=axis)[
+                ..., 0, jlo + dj:n - jhi + dj, klo + dk:p - khi + dk]
+            s = float(jnp.sum(win.astype(acc_dtype_for(out.dtype))))
+            sa = float(jnp.sum(jnp.abs(win.astype(
+                acc_dtype_for(out.dtype)))))
+            pred += float(w64[t]) * s
+            scale += abs(float(w64[t])) * sa
+        qo = float(jnp.sum(jnp.take(out, jnp.asarray([i]), axis=axis)[
+            ..., 0, jlo:n - jhi, klo:p - khi].astype(
+                acc_dtype_for(out.dtype))))
+        tol = rtol * max(scale, 1e-30)
+        if abs(qo - pred) > tol:
+            return {"check": "invariant", "ok": False, "skipped": False,
+                    "detail": f"plane {i}: interior residual "
+                              f"|{qo:g} - {pred:g}| > {tol:g}"}
+    return {"check": "invariant", "ok": True, "skipped": False, "detail": ""}
+
+
+def _oracle_check(out, a, w, spec: StencilSpec, sweeps: int, rtol: float,
+                  planes, plan: str) -> Dict[str, object]:
+    if spec.coef != "const":
+        return {"check": "oracle", "ok": True, "skipped": True,
+                "detail": "strip oracle needs constant coefficients"}
+    if planes is None or spec.ndim != 3:
+        ref = stencil_ref(a, w, spec, sweeps=sweeps, plan=plan)
+        ok = _close(out, ref, rtol)
+        return {"check": "oracle", "ok": ok, "skipped": False,
+                "detail": "" if ok else "full oracle mismatch"}
+    if planes.size == 0:
+        return {"check": "oracle", "ok": True, "skipped": True,
+                "detail": "no sampleable planes"}
+    pred = stencil_ref_planes(a, w, spec, planes, sweeps=sweeps, plan=plan)
+    got = jnp.take(out, jnp.asarray(planes), axis=out.ndim - 3)
+    ok = _close(got, pred, rtol)
+    return {"check": "oracle", "ok": ok, "skipped": False,
+            "detail": "" if ok else
+            f"sampled planes {list(map(int, planes))} mismatch the strip "
+            f"oracle"}
+
+
+def run_guard_checks(out, a, w, spec: StencilSpec, sweeps: int,
+                     policy: GuardPolicy,
+                     plan: str = "auto") -> List[Dict[str, object]]:
+    """Run the enabled checks on one call's (input, output) pair; returns
+    one record per enabled check: ``{"check", "ok", "skipped", "detail"}``.
+    Exposed for tests and for external callers guarding their own
+    executors (the sharded guard routes through here too)."""
+    CHECK_RUNS[0] += 1
+    rtol = policy.rtol if policy.rtol is not None else default_rtol(out.dtype)
+    h = spec.radius[0] * spec.sweep_apps * sweeps if spec.ndim == 3 else 0
+    periodic_i = spec.ndim == 3 and spec.bc[0][0].kind == "periodic"
+    planes = (None if spec.ndim != 3
+              else _sampled_planes(policy, out.shape[-3], h, periodic_i))
+    results = []
+    if policy.nan:
+        results.append(_nan_check(out, spec, planes))
+    if policy.invariant:
+        wf = (spec.canon_weights(w) if spec.coef == "const" else None)
+        results.append(_invariant_check(out, a, wf, spec, sweeps, rtol,
+                                        planes))
+    if policy.oracle:
+        results.append(_oracle_check(out, a, w, spec, sweeps, rtol, planes,
+                                     plan))
+    return results
+
+
+# ---------------------------------------------------------------------------
+# The degradation ladder.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class GuardCtx:
+    """What a rung execution looks like to the fault hooks."""
+    rung: str
+    path: str
+    attempt: int
+    spec: StencilSpec
+    sweeps: int
+    entry: str                      # "apply" | "driver" | "sharded"
+
+
+@dataclasses.dataclass
+class GuardReport:
+    """The run record of one guarded call (``describe()["guard"]``)."""
+
+    spec: str
+    sweeps: int
+    entry: str
+    start: str
+    policy: GuardPolicy
+    final: Optional[str] = None
+    attempts: List[Dict[str, object]] = dataclasses.field(default_factory=list)
+    demotions: List[Dict[str, object]] = dataclasses.field(
+        default_factory=list)
+    blacklisted: List[Tuple[str, str]] = dataclasses.field(
+        default_factory=list)
+
+    def describe(self) -> Dict[str, object]:
+        """Machine-readable guard record, shaped like
+        ``SweepSelection.describe()["selection"]``: the policy knobs, every
+        attempt with its check verdicts, and every demotion with fault
+        class / path taken / retry count."""
+        return {"guard": {
+            "spec": self.spec, "sweeps": self.sweeps, "entry": self.entry,
+            "start": self.start, "final": self.final,
+            "policy": dataclasses.asdict(self.policy),
+            "attempts": list(self.attempts),
+            "demotions": list(self.demotions),
+            "blacklisted": [{"kind": k, "value": v}
+                            for k, v in self.blacklisted],
+        }}
+
+
+_LAST_REPORT: List[Optional[GuardReport]] = [None]
+
+
+def last_guard_report() -> Optional[GuardReport]:
+    """The :class:`GuardReport` of the most recent guarded call (any entry
+    point), or ``None`` when nothing guarded has run yet."""
+    return _LAST_REPORT[0]
+
+
+class GuardError(RuntimeError):
+    """Every ladder rung failed -- including the oracle."""
+
+
+def _fault_label(exc: BaseException) -> str:
+    return f"exception:{type(exc).__name__}"
+
+
+def _kernel_fault(ctx: GuardCtx):
+    for hook in _KERNEL_HOOKS:
+        f = hook(ctx)
+        if f is not None:
+            return f
+    return None
+
+
+def run_ladder(a, w, spec: StencilSpec, policy: GuardPolicy, sweeps: int,
+               start: str, runner: Callable, entry: str,
+               plan: str = "auto",
+               feasible: Optional[Callable[[str], bool]] = None):
+    """Execute ``runner(rung, ctx)`` down the ladder from ``start``.
+
+    Checks every non-oracle rung's output with ``run_guard_checks``,
+    retries a failed rung ``policy.retries`` times, demotes past it
+    otherwise, and blacklists a rung whose kernel *raised* after its retry.
+    Returns the first output that passes (the oracle's unconditionally) and
+    stores the :class:`GuardReport`."""
+    rungs = [r for r in LADDER[LADDER.index(start):]
+             if feasible is None or r == "oracle" or feasible(r)]
+    report = GuardReport(spec=spec.name, sweeps=sweeps, entry=entry,
+                         start=start, policy=policy)
+    _LAST_REPORT[0] = report
+    last_exc = None
+    for pos, rung in enumerate(rungs):
+        fault = None
+        retries_used = 0
+        for attempt in range(policy.retries + 1):
+            ctx = GuardCtx(rung=rung, path=rung, attempt=attempt, spec=spec,
+                           sweeps=sweeps, entry=entry)
+            rec = {"rung": rung, "attempt": attempt, "checks": [],
+                   "fault": None}
+            report.attempts.append(rec)
+            try:
+                for hook in _RUN_HOOKS:
+                    hook(ctx)
+                out = runner(rung, ctx)
+                for hook in _OUT_HOOKS:
+                    out = hook(out, ctx)
+            except Exception as exc:  # noqa: BLE001 - any kernel failure
+                fault = _fault_label(exc)
+                rec["fault"] = fault
+                last_exc = exc
+                retries_used = attempt
+                continue
+            if rung == "oracle":
+                rec["checks"] = [{"check": "oracle", "ok": True,
+                                  "skipped": True,
+                                  "detail": "the oracle is the verifier"}]
+                report.final = rung
+                return out
+            checks = run_guard_checks(out, a, w, spec, sweeps, policy, plan)
+            rec["checks"] = checks
+            bad = [c for c in checks if not c["ok"]]
+            if not bad:
+                report.final = rung
+                return out
+            fault = bad[0]["check"]
+            rec["fault"] = fault
+            retries_used = attempt
+        # Retries exhausted: demote (and blacklist a raising candidate --
+        # a reproducible crash; check failures may be transient data
+        # faults, so they demote without condemning the path).
+        nxt = rungs[pos + 1] if pos + 1 < len(rungs) else None
+        report.demotions.append({"from": rung, "to": nxt, "fault": fault,
+                                 "retries": retries_used})
+        if fault and fault.startswith("exception:") and rung != "oracle":
+            if rung in ("wavefront", "fused", "chained"):
+                autotune.blacklist_candidate(spec.name, mode=rung)
+                report.blacklisted.append(("mode", rung))
+            else:
+                autotune.blacklist_candidate(spec.name, path=rung)
+                report.blacklisted.append(("path", rung))
+    raise GuardError(
+        f"{spec.name}: every ladder rung from {start!r} failed "
+        f"(demotions: {report.demotions})") from last_exc
+
+
+# ---------------------------------------------------------------------------
+# Guarded entry points (reached from ops/sweeps/sharded when guard != off).
+# ---------------------------------------------------------------------------
+
+def _strip(spec: StencilSpec) -> StencilSpec:
+    """The spec with the guard field removed, so plans/kernels/jit caches
+    are shared with unguarded calls."""
+    return spec.with_guard("off") if spec.guard != "off" else spec
+
+
+def resolve_guard(stencil, guard) -> Tuple[StencilSpec,
+                                           Optional[GuardPolicy]]:
+    """(spec, active policy): an explicit ``guard`` argument overrides the
+    spec's own ``guard`` field; ``None`` defers to it."""
+    spec = get_stencil(stencil)
+    return spec, as_guard(spec.guard if guard is None else guard)
+
+
+def _wavefront_ok(spec: StencilSpec, a, sweeps: int,
+                  block_j) -> bool:
+    if spec.ndim != 3 or spec.coef != "const" or block_j is not None:
+        return False
+    h = spec.radius[0] * spec.sweep_apps * sweeps
+    return not (spec.bc[0][0].kind == "periodic" and h > a.shape[-3])
+
+
+def guarded_apply(a, w, spec: StencilSpec, policy: GuardPolicy, *,
+                  block_i=None, block_j=None, plan: str = "auto",
+                  sweeps: int = 1, path: str = "auto", interpret=None):
+    """The guarded body of ``stencil_apply``: start at the fused rung (one
+    call IS the fused execution), walk down on failure."""
+    from .ops import stencil_apply_jit
+    spec = _strip(spec)
+
+    def runner(rung: str, ctx: GuardCtx):
+        kf = _kernel_fault(ctx)
+        if rung == "oracle":
+            return stencil_ref(a, w, spec, sweeps=sweeps, plan=plan)
+        if rung == "fused":
+            return stencil_apply_jit(a, w, spec, block_i=block_i,
+                                     block_j=block_j, plan=plan,
+                                     sweeps=sweeps, path=path,
+                                     interpret=interpret, _fault=kf)
+        rpath = {"chained": path, "stream": "stream",
+                 "replicate": "replicate"}[rung]
+        u = a
+        for _ in range(sweeps):
+            u = stencil_apply_jit(u, w, spec, block_i=block_i,
+                                  block_j=block_j, plan=plan, sweeps=1,
+                                  path=rpath, interpret=interpret, _fault=kf)
+        return u
+
+    return run_ladder(a, w, spec, policy, sweeps, "fused", runner, "apply",
+                      plan=plan)
+
+
+def guarded_driver(a, w, spec: StencilSpec, policy: GuardPolicy, *,
+                   sweeps: int = 1, mode: str = "auto", block_i=None,
+                   block_j=None, plan: str = "auto", path: str = "auto",
+                   interpret=None):
+    """The guarded body of ``stencil_sweep_driver``: start at the raced (or
+    pinned) mode's rung and walk the full ladder."""
+    from .ops import stencil_apply_jit
+    from .sweeps import stencil_wavefront
+    spec = _strip(spec)
+    start = mode
+    if mode == "auto":
+        if sweeps == 1 or spec.ndim != 3:
+            start = "fused"
+        else:
+            cplan = compile_plan(spec, plan)
+            m, n, p = a.shape[-3:]
+            sel = autotune.autotune_sweeps(m, n, p, a.dtype.itemsize, sweeps,
+                                           cplan, block_j=block_j, path=path)
+            start = sel.mode
+    if start == "wavefront" and not _wavefront_ok(spec, a, sweeps, block_j):
+        start = "fused"
+
+    def runner(rung: str, ctx: GuardCtx):
+        kf = _kernel_fault(ctx)
+        if rung == "oracle":
+            return stencil_ref(a, w, spec, sweeps=sweeps, plan=plan)
+        if rung == "wavefront":
+            return stencil_wavefront(a, w, spec, block_i=block_i,
+                                     sweeps=sweeps, plan=plan,
+                                     interpret=interpret)
+        if rung == "fused":
+            return stencil_apply_jit(a, w, spec, block_i=block_i,
+                                     block_j=block_j, plan=plan,
+                                     sweeps=sweeps, path=path,
+                                     interpret=interpret, _fault=kf)
+        rpath = {"chained": path, "stream": "stream",
+                 "replicate": "replicate"}[rung]
+        u = a
+        for _ in range(sweeps):
+            u = stencil_apply_jit(u, w, spec, block_i=block_i,
+                                  block_j=block_j, plan=plan, sweeps=1,
+                                  path=rpath, interpret=interpret, _fault=kf)
+        return u
+
+    def feasible(rung: str) -> bool:
+        if rung == "wavefront":
+            return start == "wavefront"
+        return True
+
+    return run_ladder(a, w, spec, policy, sweeps, start, runner, "driver",
+                      plan=plan, feasible=feasible)
+
+
+def guarded_sharded(a, w, spec: StencilSpec, policy: GuardPolicy, *,
+                    mesh=None, axis: str = "data", block_i=None,
+                    block_j=None, plan: str = "auto", sweeps: int = 1,
+                    path: str = "auto", mode: str = "fused", interpret=None,
+                    shard_plan=None):
+    """The guarded body of ``stencil_sharded``: the sharded wavefront /
+    fused rungs first, then *off the sharded path entirely* -- the chained /
+    stream / replicate rungs re-run single-device, so a corrupted halo
+    exchange cannot reach them."""
+    from .ops import stencil_apply_jit
+    from .sharded import stencil_sharded
+    spec = _strip(spec)
+    start = "wavefront" if mode == "wavefront" else "fused"
+    if start == "wavefront" and not _wavefront_ok(spec, a, sweeps, block_j):
+        start = "fused"
+
+    def runner(rung: str, ctx: GuardCtx):
+        if rung == "oracle":
+            return stencil_ref(a, w, spec, sweeps=sweeps, plan=plan)
+        if rung in ("wavefront", "fused"):
+            return stencil_sharded(a, w, spec, mesh=mesh, axis=axis,
+                                   block_i=block_i, block_j=block_j,
+                                   plan=plan, sweeps=sweeps, path=path,
+                                   mode=rung, interpret=interpret,
+                                   shard_plan=shard_plan, guard="off")
+        rpath = {"chained": path, "stream": "stream",
+                 "replicate": "replicate"}[rung]
+        kf = _kernel_fault(ctx)
+        u = a
+        for _ in range(sweeps):
+            u = stencil_apply_jit(u, w, spec, plan=plan, sweeps=1,
+                                  path=rpath, interpret=interpret, _fault=kf)
+        return u
+
+    def feasible(rung: str) -> bool:
+        if rung == "wavefront":
+            return start == "wavefront"
+        return True
+
+    return run_ladder(a, w, spec, policy, sweeps, start, runner, "sharded",
+                      plan=plan, feasible=feasible)

@@ -72,6 +72,7 @@ is the one regime j-tiling exists to avoid).
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Optional, Tuple
 
 import jax
@@ -80,6 +81,23 @@ from jax.experimental import pallas as pl
 
 from .plan import StencilPlan, execute_plan, shift_slice, shift_slice_bc
 from .spec import Boundary
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelFault:
+    """A static, hashable in-kernel fault descriptor (fault injection).
+
+    Threaded through the jitted entry points as a static argument (default
+    ``None`` -- the traced program is byte-identical to the historical one)
+    and realized inside the kernel body, so the fault genuinely lives in
+    compiled/interpreted kernel state rather than being patched onto the
+    output afterwards.  ``kind="nan_scratch"`` poisons one in-domain plane
+    of the stream kernel's rotating VMEM scratch window at prime time
+    (``plane`` is taken modulo the block height).  Only :mod:`.faults`
+    constructs these."""
+
+    kind: str = "nan_scratch"
+    plane: int = 0
 
 
 def acc_dtype_for(dtype) -> jnp.dtype:
@@ -440,7 +458,8 @@ def stencil3d_kernel(*refs, plan: StencilPlan, bi: int, bj: Optional[int],
 
 def stencil3d_stream_kernel(*refs, plan: StencilPlan, bi: int,
                             bj: Optional[int], n_global: int, sweeps: int,
-                            acc_dtype, wrap_i: bool = False):
+                            acc_dtype, wrap_i: bool = False,
+                            fault: Optional[KernelFault] = None):
     """Plane-streaming fused-sweep volumetric kernel (``path="stream"``).
 
     ``refs`` is ``(*views, geom_ref, w_ref, o_ref, scr_ref)``.  Untiled
@@ -544,6 +563,16 @@ def stencil3d_stream_kernel(*refs, plan: StencilPlan, bi: int,
             scr_ref[hi:] = cur
             if var:
                 wscr_ref[:, hi:] = wcur
+
+    if (fault is not None and fault.kind == "nan_scratch"
+            and jnp.issubdtype(jnp.dtype(scr_ref.dtype), jnp.inexact)):
+        # Fault injection (tests): poison one in-domain scratch plane right
+        # after priming, so the NaN rides the rotating window into the
+        # first computed output block.
+        @pl.when(t == lag - 1)
+        def _inject_fault():
+            fp = hi + (fault.plane % bi)
+            scr_ref[fp] = jnp.full(scr_ref.shape[1:], jnp.nan, scr_ref.dtype)
 
     @pl.when(t >= lag)
     def _compute():

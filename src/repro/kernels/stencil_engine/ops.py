@@ -26,8 +26,9 @@ from jax.experimental.pallas import tpu as pltpu
 
 from .autotune import (PATH_KINDS, autotune_blocks, autotune_engine,
                        pick_block_rows)
-from .kernel import (acc_dtype_for, stencil1d_kernel, stencil3d_kernel,
-                     stencil3d_stream_kernel, stencil3d_wavefront_kernel)
+from .kernel import (KernelFault, acc_dtype_for, stencil1d_kernel,
+                     stencil3d_kernel, stencil3d_stream_kernel,
+                     stencil3d_wavefront_kernel)
 from .plan import StencilPlan, compile_plan
 from .spec import StencilSpec, get_stencil
 
@@ -97,7 +98,8 @@ def _validate_blocks(m: int, n: int, bi: int, bj: Optional[int],
 def _call_3d_stream(a4: jax.Array, wf: jax.Array, geom: jax.Array,
                     plan: StencilPlan, bi: int, bj: Optional[int],
                     sweeps: int, interpret: bool,
-                    external_i_halo: bool = False) -> jax.Array:
+                    external_i_halo: bool = False,
+                    fault: Optional[KernelFault] = None) -> jax.Array:
     """Wire the plane-streaming kernel: one pass over the i-blocks with one
     extra grid step, a lagged output index map, and a VMEM scratch window of
     ``bi + ri * sweeps`` input planes carried across steps.  Untiled, the
@@ -130,7 +132,7 @@ def _call_3d_stream(a4: jax.Array, wf: jax.Array, geom: jax.Array,
     kern = functools.partial(stencil3d_stream_kernel, plan=plan, bi=bi,
                              bj=bj, n_global=n, sweeps=sweeps,
                              acc_dtype=acc_dtype_for(a4.dtype),
-                             wrap_i=wrap_i)
+                             wrap_i=wrap_i, fault=fault)
     if wrap_i:
         def imap_t(t):
             return (t + nbi - 1) % nbi
@@ -212,7 +214,8 @@ def _call_3d_stream(a4: jax.Array, wf: jax.Array, geom: jax.Array,
 
 def call_3d(a4: jax.Array, wf: jax.Array, geom: jax.Array, plan: StencilPlan,
             bi: int, bj: Optional[int], sweeps: int, interpret: bool,
-            path: str = "stream", external_i_halo: bool = False) -> jax.Array:
+            path: str = "stream", external_i_halo: bool = False,
+            fault: Optional[KernelFault] = None) -> jax.Array:
     """Wire a fused volumetric kernel: ``a4`` is ``(B, M, N, P)``.
 
     ``path="stream"`` (default) walks the i-blocks in order and carries the
@@ -234,7 +237,7 @@ def call_3d(a4: jax.Array, wf: jax.Array, geom: jax.Array, plan: StencilPlan,
                      plan.spec.sweep_apps)
     if path == "stream":
         return _call_3d_stream(a4, wf, geom, plan, bi, bj, sweeps, interpret,
-                               external_i_halo)
+                               external_i_halo, fault)
     if path != "replicate":
         raise ValueError(f"unknown path {path!r}; expected 'stream' or "
                          f"'replicate'")
@@ -387,15 +390,80 @@ def _call_1d(a2: jax.Array, wf: jax.Array, plan: StencilPlan, block_rows: int,
     )(a2, wf)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("stencil", "block_i", "block_j", "plan",
-                                    "sweeps", "path", "bc", "interpret"))
+def _stencil_apply_impl(a: jax.Array, w: jax.Array,
+                        stencil: Union[str, int, StencilSpec] = "stencil27",
+                        block_i: Optional[int] = None,
+                        block_j: Optional[int] = None, plan: str = "auto",
+                        sweeps: int = 1, path: str = "auto", bc=None,
+                        interpret: Optional[bool] = None,
+                        _fault: Optional[KernelFault] = None) -> jax.Array:
+    """The jittable body of :func:`stencil_apply` (see its docstring).
+
+    ``_fault`` is the static in-kernel fault-injection descriptor
+    (:class:`~.kernel.KernelFault`; tests only) -- ``None``, the default,
+    traces the byte-identical historical program."""
+    if sweeps < 1:
+        raise ValueError(f"sweeps must be >= 1, got {sweeps}")
+    if path not in PATH_KINDS:
+        raise ValueError(f"unknown path {path!r}; expected one of "
+                         f"{PATH_KINDS}")
+    spec = get_stencil(stencil)
+    if spec.guard != "off":
+        # The guard never reaches the traced program: strip it so guarded
+        # and unguarded calls share plan and jit caches.
+        spec = spec.with_guard("off")
+    if bc is not None:
+        spec = spec.with_bc(bc)
+    cplan = compile_plan(spec, plan)
+    acc = acc_dtype_for(a.dtype)
+    var = spec.coef == "var"
+    interp = resolve_interpret(interpret)
+
+    if spec.ndim == 1:
+        if a.ndim < 2:
+            raise ValueError(f"{spec.name}: need (..., rows, P), got {a.shape}")
+        wf = spec.canon_weights(w, a.shape[-1:] if var else None).astype(acc)
+        rows = int(np.prod(a.shape[:-1]))
+        a2 = a.reshape(rows, a.shape[-1])
+        br = block_i or pick_block_rows(rows, a.shape[-1], a.dtype.itemsize)
+        return _call_1d(a2, wf, cplan, br, sweeps, interp).reshape(a.shape)
+
+    if a.ndim < 3:
+        raise ValueError(f"{spec.name}: need (..., M, N, P), got {a.shape}")
+    m, n, p = a.shape[-3:]
+    wf = spec.canon_weights(w, (m, n, p) if var else None).astype(acc)
+    batch = int(np.prod(a.shape[:-3])) if a.ndim > 3 else 1
+    a4 = a.reshape(batch, m, n, p)
+    bi, bj, rpath = block_i, block_j, path
+    if bi is None:
+        rpath, bi, bj_auto = autotune_engine(m, n, p, a.dtype.itemsize,
+                                             sweeps=sweeps, plan=cplan,
+                                             block_j=bj, path=path)
+        bj = bj if bj is not None else bj_auto
+    elif rpath == "auto":
+        rpath = "stream"            # pinned blocks: stream is strictly
+    geom = jnp.array([0, m], jnp.int32)  # fewer HBM bytes at equal blocks
+    out = call_3d(a4, wf, geom, cplan, bi, bj, sweeps, interp, rpath,
+                  fault=_fault)
+    return out.reshape(a.shape)
+
+
+stencil_apply_jit = jax.jit(
+    _stencil_apply_impl,
+    static_argnames=("stencil", "block_i", "block_j", "plan", "sweeps",
+                     "path", "bc", "interpret", "_fault"))
+"""The jitted unguarded executor -- exactly the historical ``stencil_apply``
+program (``_fault=None`` adds nothing to the trace); the guarded wrapper and
+the degradation ladder call this."""
+
+
 def stencil_apply(a: jax.Array, w: jax.Array,
                   stencil: Union[str, int, StencilSpec] = "stencil27",
                   block_i: Optional[int] = None,
                   block_j: Optional[int] = None, plan: str = "auto",
                   sweeps: int = 1, path: str = "auto", bc=None,
-                  interpret: Optional[bool] = None) -> jax.Array:
+                  interpret: Optional[bool] = None,
+                  guard=None) -> jax.Array:
     """Apply a registered stencil: ``sweeps`` fused Jacobi applications.
 
     * volumetric specs: ``a`` is ``(..., M, N, P)`` -- leading dims batch;
@@ -431,44 +499,31 @@ def stencil_apply(a: jax.Array, w: jax.Array,
       spec's own BCs (all-clamp for the plain builtins);
     * ``interpret=None`` (default) interprets the kernel only when no
       compiled Pallas backend exists for the platform (CPU/CI) and compiles
-      on TPU (the kernels are Mosaic-TPU-shaped; GPU stays interpreted); pass an explicit bool to force either mode.
+      on TPU (the kernels are Mosaic-TPU-shaped; GPU stays interpreted);
+      pass an explicit bool to force either mode;
+    * ``guard`` selects runtime verification + the degradation ladder
+      (:mod:`.guard`): ``None`` defers to the spec's own ``guard`` field
+      (``"off"`` for every builtin -- this call then *is* the historical
+      jitted program, byte-identical); a :data:`~.spec.GUARD_KINDS` string
+      or a :class:`~.guard.GuardPolicy` runs the checks on the result and,
+      on a detected failure or a raised kernel error, retries then walks
+      fused -> chained -> stream -> replicate -> oracle, returning the
+      first verified result (see ``last_guard_report()``).
     """
-    if sweeps < 1:
-        raise ValueError(f"sweeps must be >= 1, got {sweeps}")
-    if path not in PATH_KINDS:
-        raise ValueError(f"unknown path {path!r}; expected one of "
-                         f"{PATH_KINDS}")
     spec = get_stencil(stencil)
+    policy_src = spec.guard if guard is None else guard
+    if policy_src is None or policy_src == "off":
+        return stencil_apply_jit(a, w, stencil, block_i=block_i,
+                                 block_j=block_j, plan=plan, sweeps=sweeps,
+                                 path=path, bc=bc, interpret=interpret)
+    from .guard import as_guard, guarded_apply
+    policy = as_guard(policy_src)
+    if policy is None:              # e.g. an explicit guard="off" string
+        return stencil_apply_jit(a, w, stencil, block_i=block_i,
+                                 block_j=block_j, plan=plan, sweeps=sweeps,
+                                 path=path, bc=bc, interpret=interpret)
     if bc is not None:
         spec = spec.with_bc(bc)
-    cplan = compile_plan(spec, plan)
-    acc = acc_dtype_for(a.dtype)
-    var = spec.coef == "var"
-    interp = resolve_interpret(interpret)
-
-    if spec.ndim == 1:
-        if a.ndim < 2:
-            raise ValueError(f"{spec.name}: need (..., rows, P), got {a.shape}")
-        wf = spec.canon_weights(w, a.shape[-1:] if var else None).astype(acc)
-        rows = int(np.prod(a.shape[:-1]))
-        a2 = a.reshape(rows, a.shape[-1])
-        br = block_i or pick_block_rows(rows, a.shape[-1], a.dtype.itemsize)
-        return _call_1d(a2, wf, cplan, br, sweeps, interp).reshape(a.shape)
-
-    if a.ndim < 3:
-        raise ValueError(f"{spec.name}: need (..., M, N, P), got {a.shape}")
-    m, n, p = a.shape[-3:]
-    wf = spec.canon_weights(w, (m, n, p) if var else None).astype(acc)
-    batch = int(np.prod(a.shape[:-3])) if a.ndim > 3 else 1
-    a4 = a.reshape(batch, m, n, p)
-    bi, bj, rpath = block_i, block_j, path
-    if bi is None:
-        rpath, bi, bj_auto = autotune_engine(m, n, p, a.dtype.itemsize,
-                                             sweeps=sweeps, plan=cplan,
-                                             block_j=bj, path=path)
-        bj = bj if bj is not None else bj_auto
-    elif rpath == "auto":
-        rpath = "stream"            # pinned blocks: stream is strictly
-    geom = jnp.array([0, m], jnp.int32)  # fewer HBM bytes at equal blocks
-    out = call_3d(a4, wf, geom, cplan, bi, bj, sweeps, interp, rpath)
-    return out.reshape(a.shape)
+    return guarded_apply(a, w, spec, policy, block_i=block_i,
+                         block_j=block_j, plan=plan, sweeps=sweeps,
+                         path=path, interpret=interpret)

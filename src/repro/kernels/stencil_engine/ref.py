@@ -25,6 +25,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .kernel import acc_dtype_for, bc_all_clamp
 from .plan import StencilPlan, compile_plan, execute_plan
@@ -75,11 +76,12 @@ def pad_bc(u: jax.Array, spec: StencilSpec) -> jax.Array:
     return u
 
 
-def _clamp_ring_mask(shape, spec: StencilSpec):
-    """Boolean mask zeroing the one-point output ring of every clamp side;
-    ``None`` when no side is clamp."""
+def _clamp_ring_mask(shape, spec: StencilSpec, axes=None):
+    """Boolean mask zeroing the one-point output ring of every clamp side
+    (restricted to ``axes`` -- spec axis indices -- when given); ``None``
+    when no selected side is clamp."""
     mask = None
-    for ax in range(3 - spec.ndim, 3):
+    for ax in (range(3 - spec.ndim, 3) if axes is None else axes):
         axis = len(shape) - 3 + ax
         lo, hi = spec.bc[ax]
         if lo.kind != "clamp" and hi.kind != "clamp":
@@ -130,6 +132,105 @@ def apply_spec_once(u: jax.Array, w: jax.Array, spec: StencilSpec,
                     plan: str = "auto") -> jax.Array:
     """One BC-padded application of the operator, in ``u.dtype``."""
     return apply_plan_once(u, w, compile_plan(spec, plan))
+
+
+def apply_plan_once_free_i(u: jax.Array, w: jax.Array,
+                           cplan: StencilPlan) -> jax.Array:
+    """One application of the planned operator on an i-*strip* of genuine
+    rows: the j/k ghosts are realized per the spec's boundary conditions
+    (pad + crop + clamp-ring, exactly like :func:`apply_plan_once`), while
+    the i axis is left un-padded -- zero-fill shifts, so output rows within
+    ``radius_i`` of either strip edge are free-space-invalid and must be
+    discarded by the caller.  This is the strip-oracle contract the guard's
+    sampled-plane spot check builds on: an interior plane gathered with its
+    ``radius * sweep_apps * sweeps`` i-neighbourhood never observes the
+    i-boundary condition, so the strip prediction is exact there.
+    Volumetric constant-coefficient specs only."""
+    spec = cplan.spec
+    if spec.ndim != 3 or spec.coef != "const":
+        raise ValueError(f"{spec.name}: the strip oracle needs a volumetric "
+                         f"constant-coefficient spec")
+    up = u
+    for ax in (1, 2):
+        r = spec.radius[ax]
+        if r == 0:
+            continue
+        axis = u.ndim - 3 + ax
+        lo, hi = spec.bc[ax]
+        if lo.kind == "periodic":           # validated paired
+            up = _pad_side(up, axis, r, r, lo)
+        else:
+            up = _pad_side(up, axis, r, 0, lo)
+            up = _pad_side(up, axis, 0, r, hi)
+    v = execute_plan(cplan, up, w)
+    crop = [slice(None)] * u.ndim
+    for ax in (1, 2):
+        axis = u.ndim - 3 + ax
+        r = spec.radius[ax]
+        crop[axis] = slice(r, r + u.shape[axis])
+    v = v[tuple(crop)]
+    mask = _clamp_ring_mask(u.shape, spec, axes=(1, 2))
+    return v if mask is None else jnp.where(mask, v, 0)
+
+
+def _parity_mask_rows(shape, rows: jax.Array) -> jax.Array:
+    """Red checkerboard parity of an i-strip whose rows sit at the *global*
+    i-coordinates ``rows`` (what keeps red-black strip oracles exact under
+    periodic wrap-around gathering, even at odd M)."""
+    ii = rows.astype(jnp.int32).reshape((len(shape) - 3) * (1,)
+                                        + (shape[-3], 1, 1))
+    jj = jax.lax.broadcasted_iota(jnp.int32, shape, len(shape) - 2)
+    kk = jax.lax.broadcasted_iota(jnp.int32, shape, len(shape) - 1)
+    return ((ii + jj + kk) % 2) == 0
+
+
+def stencil_ref_planes(a: jax.Array, w: jax.Array, stencil,
+                       planes, sweeps: int = 1,
+                       plan: str = "auto") -> jax.Array:
+    """Exact expected output i-planes, from thin gathered strips.
+
+    For each global plane index in ``planes``, gathers the
+    ``radius_i * sweep_apps * sweeps``-deep i-neighbourhood (wrapping for a
+    periodic i axis), runs ``sweeps`` applications with free-space i
+    (:func:`apply_plan_once_free_i`) and full j/k boundary handling, and
+    returns the predicted centre planes stacked along i -- shape
+    ``(..., len(planes), N, P)`` in ``a.dtype``.  A non-periodic i axis
+    requires every plane to lie at least the halo depth from both i edges
+    (the interior, where the i BC is unobservable).  This costs
+    ``len(planes) * (2 * halo + 1)`` plane-reads instead of a full oracle
+    run -- the sampled spot check's entire budget."""
+    spec = get_stencil(stencil)
+    cplan = compile_plan(spec, plan)
+    if a.ndim < 3:
+        raise ValueError(f"{spec.name}: need (..., M, N, P), got {a.shape}")
+    m = a.shape[-3]
+    axis = a.ndim - 3
+    h = spec.radius[0] * spec.sweep_apps * sweeps
+    periodic_i = spec.bc[0][0].kind == "periodic"
+    acc = acc_dtype_for(a.dtype)
+    wf = spec.canon_weights(w).astype(acc)
+    preds = []
+    for i in planes:
+        i = int(i)
+        offs = np.arange(i - h, i + h + 1)
+        if periodic_i:
+            offs = offs % m
+        elif offs[0] < 0 or offs[-1] >= m:
+            raise ValueError(
+                f"{spec.name}: plane {i} is within the halo depth {h} of a "
+                f"non-periodic i edge (M={m}); sample interior planes")
+        rows = jnp.asarray(offs, jnp.int32)
+        u = jnp.take(a, rows, axis=axis).astype(acc)
+        if spec.ordering == "redblack":
+            red = _parity_mask_rows(u.shape, rows)
+            for _ in range(sweeps):
+                u = jnp.where(red, apply_plan_once_free_i(u, wf, cplan), u)
+                u = jnp.where(red, u, apply_plan_once_free_i(u, wf, cplan))
+        else:
+            for _ in range(sweeps):
+                u = apply_plan_once_free_i(u, wf, cplan)
+        preds.append(jnp.take(u, jnp.asarray([h]), axis=axis))
+    return jnp.concatenate(preds, axis=axis).astype(a.dtype)
 
 
 def _parity_mask(shape, ndim: int) -> jax.Array:

@@ -48,6 +48,21 @@ from .spec import StencilSpec, get_stencil
 _SHARDED_CACHE: "OrderedDict[tuple, object]" = OrderedDict()
 _SHARDED_CACHE_MAX = 32
 
+# Fault injection (tests): a callable (lo, hi) -> (lo, hi) applied to the
+# ppermute'd halo slabs inside the traced shard_map body -- the fault lives
+# in the exchanged data itself, exactly where a real link corruption would.
+# The version counter rides the program cache key so installing/clearing a
+# fault always retraces instead of reusing a clean (or faulty) program.
+_HALO_FAULT = [None]
+_HALO_FAULT_VERSION = [0]
+
+
+def set_halo_fault(fn) -> None:
+    """Install (or clear, with ``None``) the halo-exchange fault hook.
+    Only :mod:`.faults` calls this."""
+    _HALO_FAULT[0] = fn
+    _HALO_FAULT_VERSION[0] += 1
+
 
 def _mesh_key(mesh: Mesh) -> tuple:
     """Hashable mesh identity that does not retain the Mesh object: device
@@ -64,7 +79,7 @@ def _sharded_fn(cplan: StencilPlan, mesh: Mesh, axis: str, bi: int,
     """Build (and cache) the jitted shard_map program for one geometry, so
     repeated calls don't retrace the inner pallas_call."""
     key = (cplan, _mesh_key(mesh), axis, bi, bj, sweeps, interpret, h,
-           m_loc, n_sh, m, part, path, mode)
+           m_loc, n_sh, m, part, path, mode, _HALO_FAULT_VERSION[0])
     fn = _SHARDED_CACHE.get(key)
     if fn is not None:
         _SHARDED_CACHE.move_to_end(key)
@@ -90,6 +105,8 @@ def _sharded_fn(cplan: StencilPlan, mesh: Mesh, axis: str, bi: int,
         # stack (lead = n_weights), so one exchange serves both.
         lo = jax.lax.ppermute(x[:, -h:], axis, lo_perm)
         hi = jax.lax.ppermute(x[:, :h], axis, hi_perm)
+        if _HALO_FAULT[0] is not None:
+            lo, hi = _HALO_FAULT[0](lo, hi)
         return jnp.concatenate([lo, x, hi], axis=1)
 
     def local_fn(a_loc: jax.Array, wf_: jax.Array) -> jax.Array:
@@ -125,8 +142,8 @@ def stencil_sharded(a: jax.Array, w: jax.Array,
                     block_j: Optional[int] = None, plan: str = "auto",
                     sweeps: int = 1, path: str = "auto", mode: str = "fused",
                     bc=None, interpret: Optional[bool] = None,
-                    shard_plan: Optional[StencilShardPlan] = None
-                    ) -> jax.Array:
+                    shard_plan: Optional[StencilShardPlan] = None,
+                    guard=None) -> jax.Array:
     """Halo-exchange execution of ``stencil_apply`` over a mesh axis.
 
     ``a`` is ``(..., M, N, P)`` (volumetric specs only); ``mesh`` defaults to
@@ -168,6 +185,19 @@ def stencil_sharded(a: jax.Array, w: jax.Array,
                          f"'fused', or 'wavefront' (chained per-sweep "
                          f"exchange is exactly what the deep halo removes)")
     spec = get_stencil(stencil)
+    policy_src = spec.guard if guard is None else guard
+    if policy_src is not None and policy_src != "off":
+        from .guard import as_guard, guarded_sharded
+        policy = as_guard(policy_src)
+        if policy is not None:
+            gspec = spec.with_bc(bc) if bc is not None else spec
+            return guarded_sharded(a, w, gspec, policy, mesh=mesh, axis=axis,
+                                   block_i=block_i, block_j=block_j,
+                                   plan=plan, sweeps=sweeps, path=path,
+                                   mode=mode, interpret=interpret,
+                                   shard_plan=shard_plan)
+    if spec.guard != "off":
+        spec = spec.with_guard("off")   # guards never reach the trace
     if bc is not None:
         spec = spec.with_bc(bc)
     cplan = compile_plan(spec, plan)

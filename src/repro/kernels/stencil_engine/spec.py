@@ -28,6 +28,10 @@ Radius = Tuple[int, int, int]
 BC_KINDS = ("clamp", "periodic", "dirichlet", "neumann")
 COEF_KINDS = ("const", "var")
 ORDERING_KINDS = ("jacobi", "redblack")
+# Guarded-execution spellings a spec may carry (see .guard for the policy
+# each resolves to): "off" is the historical default -- no checks, no
+# wrappers, byte-identical programs.
+GUARD_KINDS = ("off", "nan", "invariant", "oracle", "full")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -194,6 +198,7 @@ class StencilSpec:
     bc: Boundary = CLAMP_ALL         # per-axis (lo, hi) boundary conditions
     coef: str = "const"              # "const" scalars | "var" per-point arrays
     ordering: str = "jacobi"         # "jacobi" | "redblack" sweep ordering
+    guard: str = "off"               # runtime-verification level (GUARD_KINDS)
 
     @property
     def taps(self) -> int:
@@ -281,6 +286,10 @@ class StencilSpec:
         if self.ordering not in ORDERING_KINDS:
             raise ValueError(f"unknown ordering {self.ordering!r}; expected "
                              f"one of {ORDERING_KINDS}")
+        if self.guard not in GUARD_KINDS:
+            raise ValueError(f"unknown guard {self.guard!r}; expected one "
+                             f"of {GUARD_KINDS} (or pass a GuardPolicy to "
+                             f"the guard= call argument)")
         # canonicalize any as_boundary spelling in place (idempotent on the
         # canonical nested-tuple form)
         object.__setattr__(self, "bc", as_boundary(self.bc))
@@ -321,6 +330,22 @@ class StencilSpec:
         ordering is realized by the sweep loop's checkerboard masks.
         """
         return dataclasses.replace(self, ordering=ordering,
+                                   name=self.name if name is None else name)
+
+    def with_guard(self, guard: str, name: str = None) -> "StencilSpec":
+        """The same stencil under a guarded-execution level.
+
+        ``guard`` is one of :data:`GUARD_KINDS` -- ``"off"`` (the default:
+        no checks, the historical byte-identical programs), ``"nan"``
+        (NaN/Inf output screening), ``"invariant"`` (+ the weight-sum
+        conservation check), ``"oracle"`` (+ the sampled-plane oracle spot
+        check), or ``"full"`` (every check over the full output).  The
+        guarded entry points strip the field back to ``"off"`` before
+        compiling plans and tracing kernels, so the executed programs are
+        shared with unguarded calls -- the guard only wraps them with
+        host-side checks and the degradation ladder (see :mod:`.guard`).
+        """
+        return dataclasses.replace(self, guard=guard,
                                    name=self.name if name is None else name)
 
 

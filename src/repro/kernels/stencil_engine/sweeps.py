@@ -70,6 +70,8 @@ def stencil_wavefront(a: jax.Array, w: jax.Array,
     if sweeps < 1:
         raise ValueError(f"sweeps must be >= 1, got {sweeps}")
     spec = get_stencil(stencil)
+    if spec.guard != "off":
+        spec = spec.with_guard("off")   # guards never reach the trace
     if bc is not None:
         spec = spec.with_bc(bc)
     if spec.ndim != 3:
@@ -117,7 +119,8 @@ def stencil_sweep_driver(a: jax.Array, w: jax.Array,
                          block_i: Optional[int] = None,
                          block_j: Optional[int] = None, plan: str = "auto",
                          path: str = "auto", bc=None,
-                         interpret: Optional[bool] = None) -> jax.Array:
+                         interpret: Optional[bool] = None,
+                         guard=None) -> jax.Array:
     """Run ``sweeps`` applications under the modeled-best execution mode.
 
     ``mode="auto"`` races (fused, wavefront, chained) per
@@ -128,6 +131,14 @@ def stencil_sweep_driver(a: jax.Array, w: jax.Array,
     round-trip baseline).  All modes agree bit-exactly on integer-valued
     data.  Not itself jitted (the dispatch is static per shape); the
     jitted executors underneath carry the usual caching.
+
+    ``guard`` selects runtime verification + the degradation ladder exactly
+    as in :func:`~.ops.stencil_apply`: ``None`` defers to the spec's own
+    ``guard`` field, ``"off"`` (the default everywhere) dispatches to the
+    historical byte-identical executors, anything else checks the selected
+    mode's result and walks the ladder (wavefront -> fused -> chained ->
+    stream -> replicate -> oracle) on failure, blacklisting rungs whose
+    kernels raise (see :mod:`.guard` and ``last_guard_report()``).
     """
     if mode not in SWEEP_MODES:
         raise ValueError(f"unknown sweep mode {mode!r}; expected one of "
@@ -135,6 +146,16 @@ def stencil_sweep_driver(a: jax.Array, w: jax.Array,
     if sweeps < 1:
         raise ValueError(f"sweeps must be >= 1, got {sweeps}")
     spec = get_stencil(stencil)
+    policy_src = spec.guard if guard is None else guard
+    if policy_src is not None and policy_src != "off":
+        from .guard import as_guard, guarded_driver
+        policy = as_guard(policy_src)
+        if policy is not None:
+            gspec = spec.with_bc(bc) if bc is not None else spec
+            return guarded_driver(a, w, gspec, policy, sweeps=sweeps,
+                                  mode=mode, block_i=block_i,
+                                  block_j=block_j, plan=plan, path=path,
+                                  interpret=interpret)
     if bc is not None:
         spec = spec.with_bc(bc)
 

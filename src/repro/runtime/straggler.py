@@ -31,7 +31,12 @@ class StepTimer:
         self._t0 = time.perf_counter()
 
     def stop(self, step: int) -> float:
+        if self._t0 is None:
+            raise RuntimeError(
+                f"StepTimer.stop(step={step}) called before start(); call "
+                f"start() at the top of each timed step")
         dt = time.perf_counter() - self._t0
+        self._t0 = None
         med = statistics.median(self._times) if self._times else dt
         self._times.append(dt)
         if len(self._times) > self.window:

@@ -160,3 +160,13 @@ def test_straggler_detector():
     time.sleep(0.05)
     t.stop(99)
     assert 99 in t.flagged and hits == [99]
+
+
+def test_step_timer_stop_before_start_raises():
+    t = StepTimer()
+    with pytest.raises(RuntimeError, match="before start"):
+        t.stop(0)
+    t.start()
+    t.stop(1)                       # a completed step consumes the start()
+    with pytest.raises(RuntimeError, match="before start"):
+        t.stop(2)
