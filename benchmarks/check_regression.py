@@ -14,7 +14,9 @@ fresh cost table (the new choice modeled no slower than the baseline's
 choice costs now), and (schema v5) the sweeps-aware ``sweeps`` table: the
 chosen (fused / wavefront / chained) mode's modeled bytes/point must not
 regress beyond ``tol`` and a mode flip must be consistent with the fresh
-race (feasibility, then bytes, then time) -- and fails (exit 1) when any
+race (feasibility, then bytes, then time), and (schema v7) the multi-axis
+grid's modeled per-axis halo-exchange bytes/point -- and fails (exit 1)
+when any
 fresh value regresses more than ``tol`` (5% default) above the committed
 baseline, or when a baseline key disappeared.  Rows present only in the
 fresh run (new specs, new sweep configurations) are reported as "new, not
@@ -52,6 +54,12 @@ def _flatten(doc: Dict) -> Dict[str, float]:
     if isinstance(guard.get("bytes_per_point_f32"), (int, float)):
         # schema v6: the default guard policy's modeled check traffic
         flat["guard/bytes_per_point_f32"] = float(guard["bytes_per_point_f32"])
+    sharded = doc.get("sharded") or {}
+    for ax, v in (sharded.get("exchange_bytes_per_point") or {}).items():
+        # schema v7: the multi-axis grid's modeled per-axis halo-exchange
+        # traffic at the benchmark's reference geometry
+        if isinstance(v, (int, float)):
+            flat[f"sharded/exchange_bytes_per_point/{ax}"] = float(v)
     return flat
 
 

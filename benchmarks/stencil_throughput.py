@@ -15,23 +15,25 @@ kernel vs the halo-replicated one, with each path's modeled bytes/point and
 achieved HBM bandwidth), the radius-2 builtins (star13 / box125: streaming
 still ~2 x itemsize/point where the replicated path pays 6 x), a j-tiled
 run at a size where the untiled N x P slab exceeds the VMEM budget
-(previously a hard wall), and a 2-device halo-exchange ``shard_map`` run
+(previously a hard wall), a 2-device halo-exchange ``shard_map`` run
 (forced host-platform devices, in a subprocess so this process keeps its
-single-device view).
+single-device view), and an 8-device 2x2x2 process-grid pair timing the
+serialized vs compute/communication-overlap schedules.
 
 Besides the ``name,us_per_call,derived`` text rows, every measurement is
 recorded as a dict and the whole run is dumped to ``BENCH_stencil.json``
-(path overridable via ``$BENCH_STENCIL_JSON``; schema v6: per-spec plan op
+(path overridable via ``$BENCH_STENCIL_JSON``; schema v7: per-spec plan op
 counts with ``radius`` + ``pass_list`` columns, per-path modeled
 bytes/point at radius 1 and 2, a per-spec ``selection`` section recording
 the cost-driven compiler's chosen ``(pass_list, unroll)``, its modeled
 cycles/point, and the losing candidates -- including a
 variable-coefficient variant -- a ``sweeps`` section recording the
 sweeps-aware autotuner's (fused / wavefront / chained) verdict per
-``(spec, s)`` with each mode's modeled bytes/point and time, and a
-``guard`` section recording the default :class:`GuardPolicy`'s modeled
-check traffic as a fraction of the streaming path) -- which CI uploads as
-an artifact.
+``(spec, s)`` with each mode's modeled bytes/point and time, a ``guard``
+section recording the default :class:`GuardPolicy`'s modeled check traffic
+as a fraction of the streaming path, and a ``sharded`` section recording
+the multi-axis grid's modeled per-axis halo-exchange bytes/point at the
+``GRID_REF`` geometry) -- which CI uploads as an artifact.
 
 ``python benchmarks/stencil_throughput.py --quick`` runs only the
 streamed-vs-replicated rows plus the cost-model gates (exit 1 if the
@@ -60,6 +62,7 @@ import numpy as np
 from repro.core.perfmodel import streaming_roofline
 from repro.kernels import (GuardPolicy, autotune_engine, autotune_sweeps,
                            bytes_per_point, compile_plan,
+                           exchange_bytes_per_point,
                            guard_bytes_per_point, stencil_apply,
                            stencil_ref, stencil_sweep_driver, stencil3_ref,
                            stencil7_ref, stencil27, stencil27_ref)
@@ -93,6 +96,13 @@ def _time(fn, *args, reps: int = 5) -> float:
 
 SELECTION_SPECS = ("stencil3", "stencil7", "stencil27", "star13", "box125",
                    "stencil27_var")
+
+# The ``sharded`` section's reference grid: a 64^3 f32 domain on a 2x2x2
+# process grid at s=2 (radius-1 deep halo = 2 planes/face).  The modeled
+# per-axis exchange bytes/point are deterministic, so the regression gate
+# holds them like the path/plan numbers.
+GRID_REF = dict(shape=(64, 64, 64), grid=(2, 2, 2), halo=2, itemsize=4,
+                sweeps=2)
 
 # (spec, s) configurations recorded in the ``sweeps`` section: the
 # sweeps-aware autotuner's (fused / wavefront / chained) race at the
@@ -141,8 +151,10 @@ def write_json(path: Optional[str] = None,
     import dataclasses as _dc
     itemsize = REF_CONFIG["itemsize"]
     g_bpp = guard_bytes_per_point(GuardPolicy(), itemsize, GUARD_GATE_M)
+    g = GRID_REF
+    locs = tuple(s // n for s, n in zip(g["shape"], g["grid"]))
     doc = {
-        "schema": "bench_stencil/v6",
+        "schema": "bench_stencil/v7",
         "guard": {
             "default_policy": _dc.asdict(GuardPolicy()),
             "gate_m": GUARD_GATE_M,
@@ -156,6 +168,18 @@ def write_json(path: Optional[str] = None,
                       for name in SELECTION_SPECS},
         "sweeps": {f"{name}/s{s}": _sweeps_doc(name, s)
                    for name, s in SWEEPS_CONFIGS},
+        "sharded": {
+            # schema v7: the multi-axis halo-exchange traffic model at the
+            # GRID_REF geometry -- the j faces ship bare, the k faces carry
+            # the j ghosts, the i faces carry both (the transitive
+            # j -> k -> i exchange), so per-axis bytes/point is the number
+            # the overlap scheduler has to hide for i and *cannot* hide for
+            # j/k.  Deterministic, gated by check_regression like the
+            # per-path bytes/point.
+            "grid_ref": dict(g),
+            "exchange_bytes_per_point": exchange_bytes_per_point(
+                g["itemsize"], (g["halo"],) * 3, locs, sweeps=g["sweeps"]),
+        },
         "paths": {p: {"bytes_per_point_f32": bytes_per_point(p, 4),
                       "bytes_per_point_f32_jtiled":
                           bytes_per_point(p, 4, j_tiled=True),
@@ -231,6 +255,7 @@ def run() -> List[str]:
     rows.append(_guard_row(rng))
     rows.extend(check_guard_model())
     rows.append(_sharded_row())
+    rows.extend(_sharded_grid_rows())
     write_json()
     return rows
 
@@ -633,8 +658,15 @@ def _sharded_row() -> str:
               f"{st/best/1e6:.2f} Mstencil/s n_dev={jax.device_count()} "
               f"max_err_vs_single={err:.2e} ok={err < 1e-4}")
     """
+    return _subprocess_rows(code, "engine27.sharded_2dev_s2.16x24x128",
+                            n_dev=2)[0]
+
+
+def _subprocess_rows(code: str, fallback_name: str, n_dev: int) -> List[str]:
+    """Run ``code`` under ``n_dev`` forced host devices and parse every
+    ``name,usec,derived`` stdout line into text rows + JSON records."""
     env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
     env["PYTHONPATH"] = (os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), "src")
         + os.pathsep + env.get("PYTHONPATH", ""))
@@ -642,22 +674,58 @@ def _sharded_row() -> str:
                          capture_output=True, text=True, timeout=600, env=env)
     if out.returncode != 0:
         err_lines = out.stderr.strip().splitlines() or ["(no stderr)"]
-        _RECORDS.append({"name": "engine27.sharded_2dev_s2.16x24x128",
-                         "us_per_call": None, "ok": False,
-                         "error": err_lines[-1][:200]})
-        return ("engine27.sharded_2dev_s2.16x24x128,nan,"
-                f"FAILED: {err_lines[-1][:120]}")
-    line = (out.stdout.strip().splitlines() or ["(no stdout)"])[-1]
-    parts = line.split(",", 2)
-    if len(parts) == 3:
-        name, usec, derived = parts
-        _RECORDS.append({"name": name, "us_per_call": float(usec),
-                         "ok": "ok=True" in derived, "derived": derived})
-    else:
-        _RECORDS.append({"name": "engine27.sharded_2dev_s2.16x24x128",
-                         "us_per_call": None, "ok": False,
-                         "error": f"unparseable row: {line[:200]}"})
-    return line
+        _RECORDS.append({"name": fallback_name, "us_per_call": None,
+                         "ok": False, "error": err_lines[-1][:200]})
+        return [f"{fallback_name},nan,FAILED: {err_lines[-1][:120]}"]
+    rows = []
+    for line in out.stdout.strip().splitlines() or ["(no stdout)"]:
+        parts = line.split(",", 2)
+        if len(parts) == 3:
+            name, usec, derived = parts
+            _RECORDS.append({"name": name, "us_per_call": float(usec),
+                             "ok": "ok=True" in derived, "derived": derived})
+            rows.append(line)
+        else:
+            _RECORDS.append({"name": fallback_name, "us_per_call": None,
+                             "ok": False,
+                             "error": f"unparseable row: {line[:200]}"})
+            rows.append(f"{fallback_name},nan,unparseable: {line[:120]}")
+    return rows
+
+
+def _sharded_grid_rows() -> List[str]:
+    """The multi-axis grid on 8 forced host devices: a 2x2x2 stencil27 run
+    with the serialized exchange (``overlap="off"``) and the
+    compute/communication-overlap schedule (``overlap="on"``), both checked
+    against the single-device oracle.  Timing rows (never gated -- host
+    devices on a CI runner measure scheduling, not bandwidth); correctness
+    ``ok`` flags ride the ``derived`` column like the other sharded row."""
+    code = """
+        import time
+        import jax, numpy as np, jax.numpy as jnp
+        from repro.kernels import stencil_apply, stencil_sharded
+        rng = np.random.default_rng(0)
+        a = jnp.asarray(rng.integers(-4, 5, (32, 32, 64)), jnp.float32)
+        w = jnp.asarray(rng.integers(-3, 4, (2, 2, 2)), jnp.float32)
+        mesh = jax.make_mesh((2, 2, 2), ("x", "y", "z"))
+        one = stencil_apply(a, w, "stencil27", sweeps=2)
+        for overlap in ("off", "on"):
+            run = lambda: stencil_sharded(
+                a, w, "stencil27", mesh=mesh, axes=("x", "y", "z"),
+                sweeps=2, overlap=overlap).block_until_ready()
+            got = run()                             # compile + warm
+            err = float(jnp.max(jnp.abs(got - one)))
+            best = float("inf")
+            for _ in range(3):
+                t0 = time.perf_counter(); run()
+                best = min(best, time.perf_counter() - t0)
+            st = 2 * 30 * 30 * 62
+            print(f"engine27.grid_2x2x2_s2_overlap_{overlap}.32x32x64,"
+                  f"{best*1e6:.1f},{st/best/1e6:.2f} Mstencil/s "
+                  f"n_dev={jax.device_count()} max_err_vs_single={err:.2e} "
+                  f"ok={err == 0.0}")
+    """
+    return _subprocess_rows(code, "engine27.grid_2x2x2_s2.32x32x64", n_dev=8)
 
 
 if __name__ == "__main__":

@@ -7,6 +7,7 @@ from .stencil_engine import (BC, SWEEP_MODES, GuardPolicy,  # noqa: F401
                              as_boundary, autotune_block_i, autotune_blocks,
                              autotune_engine, autotune_sweeps,
                              bytes_per_point, compile_plan, dirichlet,
+                             exchange_bytes_per_point,
                              get_stencil, guard_bytes_per_point,
                              last_guard_report, list_stencils,
                              register_stencil, spec_from_mask, stencil_apply,

@@ -127,6 +127,21 @@ Sharded execution -- :func:`stencil_sharded`
     shard_map programs are memoized keyed on device ids + axis names (not
     ``Mesh`` objects) in a bounded cache.
 
+Multi-axis process grids + overlap -- ``stencil_sharded(axes=..., overlap=...)``
+    ``axes=(ai, aj, ak)`` shards the domain over an (pi, pj, pk) process
+    grid (plan: ``repro.sharding.planner.stencil_grid_sharding``).  Face
+    ghosts are exchanged one axis at a time on the progressively extended
+    slab -- j, then k, then i -- so corner/edge ghosts arrive
+    *transitively* and no diagonal messages exist
+    (:func:`exchange_bytes_per_point` is the per-axis traffic model).
+    ``overlap="on"`` hides the i exchange behind compute: the ghost-slab
+    ppermutes are issued first, the interior planes (needing no ghosts)
+    are swept while the collectives are in flight, and the boundary
+    strips are finished from the arrived slabs by a dedicated strip
+    kernel; ``overlap="off"`` stays the serialized bit-exact escape
+    hatch.  :class:`CorruptHalo` targets any single axis's exchange via
+    ``axes=("j",)``-style filters.
+
 Guarded execution -- ``guard=`` on every entry point (:mod:`.guard`)
     Runtime verification + graceful degradation: a :class:`GuardPolicy`
     (or a :data:`GUARD_KINDS` preset string) screens the output for
@@ -151,8 +166,9 @@ property tests in ``tests/test_stencil_plan.py``).
 from .autotune import (PATH_KINDS, SWEEP_MODES, SweepSelection,  # noqa: F401
                        autotune_block_i, autotune_blocks, autotune_engine,
                        autotune_sweeps, blacklist_candidate, bytes_per_point,
-                       clear_blacklist, is_blacklisted, list_blacklist,
-                       pick_block_i, pick_block_rows, wavefront_block_i)
+                       clear_blacklist, exchange_bytes_per_point,
+                       is_blacklisted, list_blacklist, pick_block_i,
+                       pick_block_rows, wavefront_block_i)
 from .compat import (stencil3, stencil3_ref, stencil7, stencil7_ref,  # noqa: F401
                      stencil27, stencil27_ref)
 from .common import DEFAULT_VMEM_BUDGET  # noqa: F401

@@ -444,6 +444,34 @@ def wavefront_block_i(m: int, n: int, p: int, itemsize: int, sweeps: int,
     return cands[0]
 
 
+def exchange_bytes_per_point(itemsize: int, halos, locs, sweeps: int = 1,
+                             n_weights: int = 0) -> Dict[str, float]:
+    """Per-axis halo-exchange traffic of the multi-axis sharded executor,
+    in bytes per owned point per sweep.
+
+    ``halos``/``locs`` are the per-domain-axis (i, j, k) deep halo and
+    local extent (halo 0 = axis unsharded, no exchange).  The executor
+    exchanges one axis at a time on the *progressively extended* slab
+    (j, then k, then i -- the transitive corner fill), so each later
+    axis's face slabs carry the earlier axes' ghost columns and grow
+    accordingly: that growth is the entire cost of corner correctness --
+    no extra diagonal messages.  Each sharded axis moves two face slabs
+    per shard (send+receive symmetric, counted once as arriving bytes);
+    variable-coefficient specs ship ``n_weights`` coefficient slabs with
+    the field (the ``1 + n_weights`` factor).  ``sweeps`` fused sweeps
+    amortize the one deep exchange, exactly like the compute-side deep
+    halo.  Returns ``{"i", "j", "k", "total"}``."""
+    hi, hj, hk = halos
+    m_l, n_l, p_l = locs
+    stacks = itemsize * (1 + n_weights)
+    bj = 2 * hj * m_l * p_l * stacks
+    bk = 2 * hk * m_l * (n_l + 2 * hj) * stacks
+    bi = 2 * hi * (n_l + 2 * hj) * (p_l + 2 * hk) * stacks
+    pts = m_l * n_l * p_l * max(sweeps, 1)
+    return {"i": bi / pts, "j": bj / pts, "k": bk / pts,
+            "total": (bi + bj + bk) / pts}
+
+
 @dataclasses.dataclass(frozen=True)
 class SweepSelection:
     """The sweeps-aware autotuner's verdict for one ``(spec, shape, s)``.
@@ -486,8 +514,8 @@ def autotune_sweeps(m: int, n: int, p: int, itemsize: int, sweeps: int,
                     plan, acc_itemsize: int = 4,
                     vmem_budget: int = DEFAULT_VMEM_BUDGET,
                     block_j: Optional[int] = None, mode: str = "auto",
-                    path: str = "auto",
-                    external_i_halo: bool = False) -> SweepSelection:
+                    path: str = "auto", external_i_halo: bool = False,
+                    exchange_bytes: float = 0.0) -> SweepSelection:
     """Race the three ways to run ``sweeps`` applications -- one *fused*
     call (halo ``radius * sweeps * apps``), the *wavefront* pipeline (each
     plane fetched once per ``sweeps``, per-stage halo ``radius * apps``),
@@ -509,6 +537,12 @@ def autotune_sweeps(m: int, n: int, p: int, itemsize: int, sweeps: int,
     variable coefficients, j-tiled shapes, and 1-D specs; a periodic i
     axis (unless ``external_i_halo``) charges its pre-extension re-read
     (``m + 2 * radius * apps * sweeps`` rows read per ``m`` written).
+
+    ``exchange_bytes`` (the sharded caller: per-point-per-sweep halo
+    traffic from :func:`exchange_bytes_per_point`) is added to every
+    entrant's modeled bytes/point -- the deep exchange happens once per
+    call whatever the mode, so it shifts the reported totals without
+    re-ranking the race.
     """
     if mode not in SWEEP_MODES:
         raise ValueError(f"unknown sweep mode {mode!r}; expected one of "
@@ -551,7 +585,8 @@ def autotune_sweeps(m: int, n: int, p: int, itemsize: int, sweeps: int,
             bpp = (read_f + 1.0) * itemsize / sweeps
             tpp = _wavefront_step_time(bi, n, p, itemsize, sweeps, shifts,
                                        flops, ha, apps, read_f)
-            rows.append((cand, "wavefront", bi, None, bpp, tpp, feasible))
+            rows.append((cand, "wavefront", bi, None, bpp + exchange_bytes,
+                         tpp, feasible))
         else:
             s_eff = sweeps if cand == "fused" else 1
             rpath, bi, bj = autotune_engine(
@@ -564,7 +599,8 @@ def autotune_sweeps(m: int, n: int, p: int, itemsize: int, sweeps: int,
                                   rad, spec.coef, spec.n_weights)
             tpp = _step_time(bi, bj, n, p, itemsize, s_eff, shifts, flops,
                              rpath, rad, var_w, apps)
-            rows.append((cand, rpath, bi, bj, bpp, tpp, feasible))
+            rows.append((cand, rpath, bi, bj, bpp + exchange_bytes, tpp,
+                         feasible))
     if not rows:
         raise ValueError(f"{spec.name}: no feasible sweep mode candidates")
     best = min(rows, key=lambda r: (not r[6], r[4], r[5], pref[r[0]]))

@@ -186,7 +186,11 @@ class CorruptHalo(FaultInjector):
     ``mode``: ``"garbage"`` scales the slabs by a huge finite factor
     (invariant detector), ``"truncate"`` zeroes them as a short/stale
     message would (invariant / oracle detector -- the wrap rows silently
-    vanish), ``"nan"`` poisons them (NaN screen).  The traced hook fires on
+    vanish), ``"nan"`` poisons them (NaN screen).  ``axes`` filters which
+    domain axes' exchanges are corrupted (default: all three) -- the
+    multi-axis grid executor labels every exchange ``"i"`` / ``"j"`` /
+    ``"k"``, so ``axes=("j",)`` poisons only the j-face ppermutes and
+    leaves the i/k exchanges clean.  The traced hook fires on
     every sharded rung while installed; the ladder recovers by leaving the
     sharded path for the single-device rungs, which never touch the
     exchange.
@@ -195,16 +199,23 @@ class CorruptHalo(FaultInjector):
     single-device analogue of a bad exchange."""
 
     MODES = ("garbage", "truncate", "nan")
+    AXES = ("i", "j", "k")
 
     def __init__(self, seed: int = 0, mode: str = "garbage",
-                 sharded: bool = True, halo: int = 1, **kw):
+                 sharded: bool = True, halo: int = 1,
+                 axes: Sequence[str] = AXES, **kw):
         super().__init__(seed=seed, **kw)
         if mode not in self.MODES:
             raise ValueError(f"unknown CorruptHalo mode {mode!r}; expected "
                              f"one of {self.MODES}")
+        bad_axes = set(axes) - set(self.AXES)
+        if bad_axes:
+            raise ValueError(f"unknown CorruptHalo axes {sorted(bad_axes)}; "
+                             f"expected a subset of {self.AXES}")
         self.mode = mode
         self.sharded = sharded
         self.halo = max(1, halo)
+        self.axes = tuple(axes)
 
     def _corrupt(self, x):
         if self.mode == "garbage":
@@ -214,9 +225,12 @@ class CorruptHalo(FaultInjector):
             return jnp.zeros_like(x)
         return jnp.full_like(x, jnp.nan)
 
-    def halo_fault(self, lo, hi) -> Tuple:
+    def halo_fault(self, lo, hi, axis: str = "i") -> Tuple:
         # Traced once into the cached shard_map program; count the install,
-        # not the (untraceable) per-call executions.
+        # not the (untraceable) per-call executions.  ``axis`` names the
+        # domain axis whose exchange carried the slabs ("i"/"j"/"k").
+        if axis not in self.axes:
+            return lo, hi
         return self._corrupt(lo), self._corrupt(hi)
 
     def apply_out(self, out, ctx):

@@ -624,11 +624,14 @@ def guarded_sharded(a, w, spec: StencilSpec, policy: GuardPolicy, *,
                     mesh=None, axis: str = "data", block_i=None,
                     block_j=None, plan: str = "auto", sweeps: int = 1,
                     path: str = "auto", mode: str = "fused", interpret=None,
-                    shard_plan=None):
+                    shard_plan=None, axes=None, overlap: str = "off"):
     """The guarded body of ``stencil_sharded``: the sharded wavefront /
     fused rungs first, then *off the sharded path entirely* -- the chained /
     stream / replicate rungs re-run single-device, so a corrupted halo
-    exchange cannot reach them."""
+    exchange cannot reach them.  ``axes``/``overlap`` ride through to the
+    sharded rungs (the multi-axis grid and the compute/communication
+    overlap are properties of the sharded execution only; the
+    single-device recovery rungs never exchange)."""
     from .ops import stencil_apply_jit
     from .sharded import stencil_sharded
     spec = _strip(spec)
@@ -644,7 +647,8 @@ def guarded_sharded(a, w, spec: StencilSpec, policy: GuardPolicy, *,
                                    block_i=block_i, block_j=block_j,
                                    plan=plan, sweeps=sweeps, path=path,
                                    mode=rung, interpret=interpret,
-                                   shard_plan=shard_plan, guard="off")
+                                   shard_plan=shard_plan, guard="off",
+                                   axes=axes, overlap=overlap)
         rpath = {"chained": path, "stream": "stream",
                  "replicate": "replicate"}[rung]
         kf = _kernel_fault(ctx)

@@ -109,16 +109,20 @@ def bc_all_clamp(bc: Boundary) -> bool:
     return all(s.kind == "clamp" for ax in bc for s in ax)
 
 
-def make_shift(bc: Boundary, j_in_shift: bool) -> Callable:
+def make_shift(bc: Boundary, j_in_shift: bool,
+               k_in_shift: bool = True) -> Callable:
     """The plan executor's shift primitive for this BC configuration.
 
-    Axes whose strip extent *is* the domain extent (k always; j on untiled
-    volumetric blocks / the 1-D path) realize their BC inside the shift fill
-    (:func:`~.plan.shift_slice_bc`); halo axes keep zero fill -- their BC is
-    realized by :func:`fill_ghosts` on the assembled strip.  All-clamp
-    configurations keep the exact legacy :func:`~.plan.shift_slice` (same
-    traced graph, byte-identical programs)."""
-    bc_axes = (False, j_in_shift, True)
+    Axes whose strip extent *is* the domain extent (k unless its halo is
+    externally materialized; j on untiled volumetric blocks / the 1-D path)
+    realize their BC inside the shift fill (:func:`~.plan.shift_slice_bc`);
+    halo axes keep zero fill -- their BC is realized by :func:`fill_ghosts`
+    on the assembled strip.  ``k_in_shift=False`` (a k-sharded slab whose
+    ghost planes arrived by exchange) moves k to the fill side too.
+    All-clamp configurations keep the exact legacy
+    :func:`~.plan.shift_slice` (same traced graph, byte-identical
+    programs)."""
+    bc_axes = (False, j_in_shift, k_in_shift)
     if all(bc[ax][side].kind in ("clamp", "dirichlet")
            for ax in (1, 2) if bc_axes[ax] for side in (0, 1)):
         return shift_slice          # dirichlet ghosts are zero-fill too
@@ -200,36 +204,43 @@ def run_sweeps(u: jax.Array, interior: Optional[jax.Array], w: jax.Array,
     return u
 
 
-def _volumetric_interior(ext, gi0, j0, m_ref, n_global: int):
+def _volumetric_interior(ext, gi0, j0, m_ref, n_global: int, k0=0,
+                         p_top=None):
     """Interior (non-clamp-ring) mask of an extended working strip whose
     row 0 sits at global row ``gi0`` and column 0 at global column ``j0``;
-    ``m_ref`` is the (traced) global M.  The clamp ring stays one point
-    wide at every radius (out-of-domain reads are zeros, matching the
-    reference's zero-fill shifts).  Built once per grid step and shared
-    across every fused sweep."""
+    ``m_ref`` is the (traced) global M.  ``k0``/``p_top`` generalize the
+    k axis for k-sharded slabs (default: local k *is* global k).  The
+    clamp ring stays one point wide at every radius (out-of-domain reads
+    are zeros, matching the reference's zero-fill shifts).  Built once per
+    grid step and shared across every fused sweep."""
+    if p_top is None:
+        p_top = ext[-1]
     gi = gi0 + jax.lax.broadcasted_iota(jnp.int32, ext, 0)
     jj = j0 + jax.lax.broadcasted_iota(jnp.int32, ext, 1)
-    kk = jax.lax.broadcasted_iota(jnp.int32, ext, 2)
+    kk = k0 + jax.lax.broadcasted_iota(jnp.int32, ext, 2)
     return ((gi > 0) & (gi < m_ref - 1)
             & (jj > 0) & (jj < n_global - 1)
-            & (kk > 0) & (kk < ext[-1] - 1))
+            & (kk > 0) & (kk < p_top - 1))
 
 
-def _clamp_interior(ext, gi0, j0, m_ref, n_global: int, bc: Boundary):
+def _clamp_interior(ext, gi0, j0, m_ref, n_global: int, bc: Boundary,
+                    k0=0, p_top=None):
     """Per-side generalization of :func:`_volumetric_interior`: one ring
     constraint per *clamp* side (other BCs apply the operator everywhere and
     realize their ghosts by fill/wrap instead).  ``None`` when no side is
     clamp -- the per-sweep select is skipped entirely."""
+    if p_top is None:
+        p_top = ext[-1]
     coords = {}
 
     def coord(axis):
         if axis not in coords:
-            base = (gi0, j0, 0)[axis]
+            base = (gi0, j0, k0)[axis]
             coords[axis] = base + jax.lax.broadcasted_iota(jnp.int32, ext,
                                                            axis)
         return coords[axis]
 
-    tops = (m_ref, n_global, ext[-1])
+    tops = (m_ref, n_global, p_top)
     mask = None
     for axis in range(3):
         lo, hi = bc[axis]
@@ -282,69 +293,82 @@ def _fill_axis(u: jax.Array, axis: int, c0, top, lo, hi,
 
 
 def fill_ghosts(u: jax.Array, gi0, j0, m_ref, n_global: int, bc: Boundary,
-                fill_j: bool, include_clamp: bool) -> jax.Array:
+                fill_j: bool, include_clamp: bool, k0=0, p_top=None,
+                fill_k: bool = False) -> jax.Array:
     """Realize the halo axes' BCs on an assembled working strip: axis i
-    always (its halo is staged/streamed), axis j only when tiled (untiled
-    strips span the full N, so j is an in-shift axis).  i is filled before
-    j, so at i/j ghost corners the later axis wins -- the same corner
-    convention as the reference's sequential ``np.pad`` (i, then j, then
-    k)."""
+    always (its halo is staged/streamed), axis j only when tiled or its
+    halo arrived by exchange (untiled single-device strips span the full
+    N, so j is an in-shift axis), axis k only when its halo arrived by
+    exchange (``fill_k``).  i is filled before j before k, so at ghost
+    corners the later axis wins -- the same corner convention as the
+    reference's sequential ``np.pad`` (i, then j, then k)."""
     u = _fill_axis(u, u.ndim - 3, gi0, m_ref, *bc[0], include_clamp)
     if fill_j:
         u = _fill_axis(u, u.ndim - 2, j0, n_global, *bc[1], include_clamp)
+    if fill_k:
+        u = _fill_axis(u, u.ndim - 1, k0, p_top, *bc[2], include_clamp)
     return u
 
 
-def _needs_refill(bc: Boundary, fill_j: bool) -> bool:
-    axes = (0, 1) if fill_j else (0,)
+def _needs_refill(bc: Boundary, fill_j: bool, fill_k: bool = False) -> bool:
+    axes = (0,) + ((1,) if fill_j else ()) + ((2,) if fill_k else ())
     return any(bc[ax][side].kind in ("dirichlet", "neumann")
                for ax in axes for side in (0, 1))
 
 
-def _strip_parity(ext, gi0, j0) -> jax.Array:
+def _strip_parity(ext, gi0, j0, k0=0) -> jax.Array:
     """Global checkerboard parity ``(i + j + k) % 2 == 0`` ("red") of a
-    volumetric working strip whose row 0 sits at global row ``gi0`` and
-    column 0 at global column ``j0`` (k is always fully resident, so local
-    k *is* global k).  Built once per grid step and shared by both
-    half-applications of every red-black sweep."""
+    volumetric working strip whose row 0 sits at global row ``gi0``,
+    column 0 at global column ``j0``, and lane 0 at global lane ``k0``
+    (0 unless the k axis is sharded -- local k is then global k).  Built
+    once per grid step and shared by both half-applications of every
+    red-black sweep."""
     gi = gi0 + jax.lax.broadcasted_iota(jnp.int32, ext, 0)
     jj = j0 + jax.lax.broadcasted_iota(jnp.int32, ext, 1)
-    kk = jax.lax.broadcasted_iota(jnp.int32, ext, 2)
+    kk = k0 + jax.lax.broadcasted_iota(jnp.int32, ext, 2)
     return ((gi + jj + kk) % 2) == 0
 
 
 def prepare_strip(u: jax.Array, gi0, j0, m_ref, n_global: int,
-                  plan: StencilPlan, tiled_j: bool):
+                  plan: StencilPlan, tiled_j: bool, k0=0, p_top=None,
+                  fill_k: bool = False):
     """Shared BC set-up for the volumetric kernel bodies: fill the assembled
     strip's out-of-domain ghosts, and return the per-sweep machinery
     ``(u, interior, shift, refill, parity)`` for :func:`run_sweeps`
     (``parity`` is the global red checkerboard for red-black specs, else
-    ``None``).  All-clamp specs take the exact legacy path (zero fill at
-    radius >= 2 only, the ring mask, plain zero-fill shifts) so default-BC
-    programs stay byte-identical."""
+    ``None``).  ``k0``/``p_top``/``fill_k`` describe a k axis whose ghost
+    planes were materialized externally (the k-sharded exchange): k then
+    leaves the shift primitive and its BC is realized by fill at *global*
+    k coordinates, exactly like a tiled j.  All-clamp specs take the exact
+    legacy path (zero fill at radius >= 2 only, the ring mask, plain
+    zero-fill shifts) so default-BC programs stay byte-identical."""
     bc = plan.spec.bc
-    parity = (_strip_parity(u.shape, gi0, j0)
+    parity = (_strip_parity(u.shape, gi0, j0, k0)
               if plan.spec.ordering == "redblack" else None)
     if bc_all_clamp(bc):
         u = zero_outside_domain(u, gi0, j0, m_ref, n_global,
-                                plan.spec.radius)
-        return (u, _volumetric_interior(u.shape, gi0, j0, m_ref, n_global),
+                                plan.spec.radius, k0, p_top, fill_k)
+        return (u, _volumetric_interior(u.shape, gi0, j0, m_ref, n_global,
+                                        k0, p_top),
                 shift_slice, None, parity)
     u = fill_ghosts(u, gi0, j0, m_ref, n_global, bc, fill_j=tiled_j,
-                    include_clamp=True)
-    interior = _clamp_interior(u.shape, gi0, j0, m_ref, n_global, bc)
-    shift = make_shift(bc, j_in_shift=not tiled_j)
+                    include_clamp=True, k0=k0, p_top=p_top, fill_k=fill_k)
+    interior = _clamp_interior(u.shape, gi0, j0, m_ref, n_global, bc,
+                               k0, p_top)
+    shift = make_shift(bc, j_in_shift=not tiled_j, k_in_shift=not fill_k)
     refill = None
-    if _needs_refill(bc, fill_j=tiled_j):
+    if _needs_refill(bc, fill_j=tiled_j, fill_k=fill_k):
         def refill(v):
             return fill_ghosts(v, gi0, j0, m_ref, n_global, bc,
-                               fill_j=tiled_j, include_clamp=False)
+                               fill_j=tiled_j, include_clamp=False,
+                               k0=k0, p_top=p_top, fill_k=fill_k)
     return u, interior, shift, refill, parity
 
 
 def zero_outside_domain(u: jax.Array, gi0, j0, m_ref, n_global: int,
-                        radius: Tuple[int, int, int]) -> jax.Array:
-    """Zero strip positions outside the global (M, N) domain.
+                        radius: Tuple[int, int, int], k0=0, p_top=None,
+                        zero_k: bool = False) -> jax.Array:
+    """Zero strip positions outside the global (M, N[, P]) domain.
 
     Clamped neighbour index maps duplicate edge blocks, so strip rows/
     columns beyond the domain hold copies of in-domain data instead of the
@@ -353,12 +377,18 @@ def zero_outside_domain(u: jax.Array, gi0, j0, m_ref, n_global: int,
     one-plane-per-sweep shrink argument), so this is skipped to keep the
     radius-1 programs byte-identical; at radius >= 2 an interior point at
     distance 1 from the boundary genuinely reads distance-2 neighbours
-    across it, so the zeros must be materialized."""
-    if radius[0] <= 1 and radius[1] <= 1:
+    across it, so the zeros must be materialized.  ``zero_k`` extends the
+    check to a k axis with externally materialized ghosts (a chain-edge
+    exchange already delivers genuine zeros there, so this is defensive)."""
+    if (radius[0] <= 1 and radius[1] <= 1
+            and (not zero_k or radius[2] <= 1)):
         return u
     gi = gi0 + jax.lax.broadcasted_iota(jnp.int32, u.shape, 0)
     jj = j0 + jax.lax.broadcasted_iota(jnp.int32, u.shape, 1)
     ok = (gi >= 0) & (gi < m_ref) & (jj >= 0) & (jj < n_global)
+    if zero_k:
+        kk = k0 + jax.lax.broadcasted_iota(jnp.int32, u.shape, 2)
+        ok = ok & (kk >= 0) & (kk < p_top)
     return jnp.where(ok, u, jnp.zeros(u.shape, u.dtype))
 
 
@@ -403,7 +433,9 @@ def _assemble_strip(tiles, ri: int, rj: int, hi: int, hj: int,
 
 
 def stencil3d_kernel(*refs, plan: StencilPlan, bi: int, bj: Optional[int],
-                     n_global: int, sweeps: int, acc_dtype):
+                     n_global: int, sweeps: int, acc_dtype,
+                     ext_j: bool = False, ext_k: bool = False,
+                     p_global: Optional[int] = None):
     """Replicated-halo fused-sweep volumetric kernel (``path="replicate"``).
 
     ``refs`` is ``(*blocks, geom_ref, w_ref, o_ref)`` where ``blocks`` holds
@@ -411,7 +443,10 @@ def stencil3d_kernel(*refs, plan: StencilPlan, bi: int, bj: Optional[int],
     the ``(2ri + 1) x (2rj + 1)`` i/j-neighbour views in row-major
     ``(di, dj)`` order (j-tiled, blocks ``(1, bi, bj, P)``).  ``geom_ref`` =
     (global row of this array's row 0, global M) -- both 0 and the local M
-    for the single-device path; shard-dependent under shard_map.
+    for the single-device path; shard-dependent under shard_map.  A
+    multi-axis-sharded slab extends ``geom_ref`` with the global j/k
+    coordinates of its column/lane 0 (``ext_j``/``ext_k`` mark those axes'
+    ghosts as externally materialized; ``p_global`` is then the global P).
 
     Variable-coefficient specs replace the single resident ``w_ref`` with a
     full parallel set of coefficient views (``refs`` becomes ``(*blocks,
@@ -436,10 +471,11 @@ def stencil3d_kernel(*refs, plan: StencilPlan, bi: int, bj: Optional[int],
     hi = ri * s * apps
     hj = rj * s * apps
     if bj is None:
-        j0 = 0
+        j0 = geom_ref[2] if ext_j else 0
     else:
         j_blk = pl.program_id(2)
         j0 = j_blk * bj - hj
+    k0 = geom_ref[3] if ext_k else 0
     u = _assemble_strip([blk[0] for blk in blocks], ri, rj, hi, hj, bj,
                         0).astype(acc_dtype)
     if var:
@@ -449,7 +485,8 @@ def stencil3d_kernel(*refs, plan: StencilPlan, bi: int, bj: Optional[int],
         w = w_ref[...]
     gi0 = geom_ref[0] + i_blk * bi - hi
     u, interior, shift, refill, parity = prepare_strip(
-        u, gi0, j0, geom_ref[1], n_global, plan, bj is not None)
+        u, gi0, j0, geom_ref[1], n_global, plan, bj is not None or ext_j,
+        k0=k0, p_top=p_global if ext_k else None, fill_k=ext_k)
     u = run_sweeps(u, interior, w, plan, s, shift=shift, refill=refill,
                    parity=parity)
     out = u[hi:hi + bi] if bj is None else u[hi:hi + bi, hj:hj + bj]
@@ -459,7 +496,9 @@ def stencil3d_kernel(*refs, plan: StencilPlan, bi: int, bj: Optional[int],
 def stencil3d_stream_kernel(*refs, plan: StencilPlan, bi: int,
                             bj: Optional[int], n_global: int, sweeps: int,
                             acc_dtype, wrap_i: bool = False,
-                            fault: Optional[KernelFault] = None):
+                            fault: Optional[KernelFault] = None,
+                            ext_j: bool = False, ext_k: bool = False,
+                            p_global: Optional[int] = None):
     """Plane-streaming fused-sweep volumetric kernel (``path="stream"``).
 
     ``refs`` is ``(*views, geom_ref, w_ref, o_ref, scr_ref)``.  Untiled
@@ -516,12 +555,13 @@ def stencil3d_stream_kernel(*refs, plan: StencilPlan, bi: int,
     apps = plan.spec.sweep_apps
     hi = ri * s * apps
     lag = 2 if wrap_i else 1
+    k0 = geom_ref[3] if ext_k else 0
     if bj is None:
         t = pl.program_id(1)
         cur = views[0][0]                                  # (bi, N, P)
         if var:
             wcur = wviews[0][...]                          # (nw, bi, N, P)
-        j0 = 0
+        j0 = geom_ref[2] if ext_j else 0
     else:
         hj = rj * s * apps
         t = pl.program_id(2)
@@ -585,7 +625,8 @@ def stencil3d_stream_kernel(*refs, plan: StencilPlan, bi: int,
             w = w_ref[...]
         gi0 = geom_ref[0] + (t - lag) * bi - hi
         u, interior, shift, refill, parity = prepare_strip(
-            u, gi0, j0, geom_ref[1], n_global, plan, bj is not None)
+            u, gi0, j0, geom_ref[1], n_global, plan, bj is not None or ext_j,
+            k0=k0, p_top=p_global if ext_k else None, fill_k=ext_k)
         u = run_sweeps(u, interior, w, plan, s, shift=shift, refill=refill,
                        parity=parity)
         out = u[hi:hi + bi] if bj is None else u[hi:hi + bi, hj:hj + bj]
@@ -604,7 +645,9 @@ def stencil3d_stream_kernel(*refs, plan: StencilPlan, bi: int,
 
 
 def stencil3d_wavefront_kernel(*refs, plan: StencilPlan, bi: int,
-                               n_global: int, sweeps: int, acc_dtype):
+                               n_global: int, sweeps: int, acc_dtype,
+                               ext_j: bool = False, ext_k: bool = False,
+                               p_global: Optional[int] = None):
     """Temporal wavefront-tiled volumetric kernel: ``s = sweeps`` *pipelined*
     sweep stages ride one pass over the i-blocks, each input plane fetched
     from HBM once per ``s`` sweeps (vs once per sweep chained, and vs a
@@ -658,13 +701,16 @@ def stencil3d_wavefront_kernel(*refs, plan: StencilPlan, bi: int,
     @pl.when(t >= 1)
     def _compute():
         w = w_ref[...]
+        j0 = geom_ref[2] if ext_j else 0
+        k0 = geom_ref[3] if ext_k else 0
 
         def stage(win_ref, nxt, blk):
             u = (jnp.concatenate([win_ref[...], nxt[:ha]], axis=0) if ha
                  else win_ref[...]).astype(acc_dtype)      # (bi + 2ha, N, P)
             gi0 = geom_ref[0] + blk * bi - ha
             u, interior, shift, refill, parity = prepare_strip(
-                u, gi0, 0, geom_ref[1], n_global, plan, False)
+                u, gi0, j0, geom_ref[1], n_global, plan, ext_j, k0=k0,
+                p_top=p_global if ext_k else None, fill_k=ext_k)
             u = run_sweeps(u, interior, w, plan, 1, shift=shift,
                            refill=refill, parity=parity)
             return u[ha:ha + bi]
@@ -680,6 +726,41 @@ def stencil3d_wavefront_kernel(*refs, plan: StencilPlan, bi: int,
             win[ha:] = nxt
             nxt = val
         o_ref[0] = nxt.astype(o_ref.dtype)
+
+
+def stencil3d_strip_kernel(*refs, plan: StencilPlan, h: int, n_global: int,
+                           sweeps: int, acc_dtype, ext_j: bool = False,
+                           ext_k: bool = False,
+                           p_global: Optional[int] = None):
+    """Boundary-strip fused-sweep kernel: one fully pre-extended i-strip.
+
+    The compute/communication-overlap executor splits a shard's sweep into
+    an interior pass (no i ghosts needed, runs while the i-axis ppermutes
+    are in flight) and two thin boundary strips computed from the arrived
+    ghost slabs.  This body is the strip entry: ``refs`` is ``(u_ref,
+    geom_ref, w_ref, o_ref)`` with a single identity-mapped block ``(1,
+    rows, N, P)`` whose ``rows = out_rows + 2h`` i-planes *already include*
+    the ``h`` exchanged ghost planes per side (``h = radius * sweeps *
+    sweep_apps``), so no staging, streaming window, or neighbour views are
+    involved -- the strip runs :func:`prepare_strip` + :func:`run_sweeps`
+    at its global geometry and writes the central ``rows - 2h`` planes.
+    (The replicated path cannot serve here: at a single i-block its clamped
+    index maps would duplicate resident data into halo positions that are
+    genuinely interior on a sharded slab.)  Variable-coefficient specs pass
+    the matching pre-extended coefficient strip as ``w_ref``."""
+    u_ref, geom_ref, w_ref, o_ref = refs
+    u = u_ref[0].astype(acc_dtype)
+    w = w_ref[...]          # var: the whole (n_weights, rows, N, P) strip
+    gi0 = geom_ref[0]
+    j0 = geom_ref[2] if ext_j else 0
+    k0 = geom_ref[3] if ext_k else 0
+    u, interior, shift, refill, parity = prepare_strip(
+        u, gi0, j0, geom_ref[1], n_global, plan, ext_j, k0=k0,
+        p_top=p_global if ext_k else None, fill_k=ext_k)
+    u = run_sweeps(u, interior, w, plan, sweeps, shift=shift, refill=refill,
+                   parity=parity)
+    rows = u.shape[0]
+    o_ref[0] = u[h:rows - h].astype(o_ref.dtype)
 
 
 def stencil1d_kernel(a_ref, w_ref, o_ref, *, plan: StencilPlan, sweeps: int,

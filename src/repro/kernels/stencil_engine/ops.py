@@ -28,7 +28,7 @@ from .autotune import (PATH_KINDS, autotune_blocks, autotune_engine,
                        pick_block_rows)
 from .kernel import (KernelFault, acc_dtype_for, stencil1d_kernel,
                      stencil3d_kernel, stencil3d_stream_kernel,
-                     stencil3d_wavefront_kernel)
+                     stencil3d_strip_kernel, stencil3d_wavefront_kernel)
 from .plan import StencilPlan, compile_plan
 from .spec import StencilSpec, get_stencil
 
@@ -99,7 +99,10 @@ def _call_3d_stream(a4: jax.Array, wf: jax.Array, geom: jax.Array,
                     plan: StencilPlan, bi: int, bj: Optional[int],
                     sweeps: int, interpret: bool,
                     external_i_halo: bool = False,
-                    fault: Optional[KernelFault] = None) -> jax.Array:
+                    fault: Optional[KernelFault] = None,
+                    ext_j: bool = False, ext_k: bool = False,
+                    n_global: Optional[int] = None,
+                    p_global: Optional[int] = None) -> jax.Array:
     """Wire the plane-streaming kernel: one pass over the i-blocks with one
     extra grid step, a lagged output index map, and a VMEM scratch window of
     ``bi + ri * sweeps`` input planes carried across steps.  Untiled, the
@@ -130,9 +133,12 @@ def _call_3d_stream(a4: jax.Array, wf: jax.Array, geom: jax.Array,
     steps = nbi + (2 if wrap_i else 1)
     lag = 2 if wrap_i else 1
     kern = functools.partial(stencil3d_stream_kernel, plan=plan, bi=bi,
-                             bj=bj, n_global=n, sweeps=sweeps,
+                             bj=bj, n_global=n_global if ext_j else n,
+                             sweeps=sweeps,
                              acc_dtype=acc_dtype_for(a4.dtype),
-                             wrap_i=wrap_i, fault=fault)
+                             wrap_i=wrap_i, fault=fault, ext_j=ext_j,
+                             ext_k=ext_k,
+                             p_global=p_global if ext_k else None)
     if wrap_i:
         def imap_t(t):
             return (t + nbi - 1) % nbi
@@ -215,7 +221,10 @@ def _call_3d_stream(a4: jax.Array, wf: jax.Array, geom: jax.Array,
 def call_3d(a4: jax.Array, wf: jax.Array, geom: jax.Array, plan: StencilPlan,
             bi: int, bj: Optional[int], sweeps: int, interpret: bool,
             path: str = "stream", external_i_halo: bool = False,
-            fault: Optional[KernelFault] = None) -> jax.Array:
+            fault: Optional[KernelFault] = None,
+            ext_j: bool = False, ext_k: bool = False,
+            n_global: Optional[int] = None,
+            p_global: Optional[int] = None) -> jax.Array:
     """Wire a fused volumetric kernel: ``a4`` is ``(B, M, N, P)``.
 
     ``path="stream"`` (default) walks the i-blocks in order and carries the
@@ -231,13 +240,27 @@ def call_3d(a4: jax.Array, wf: jax.Array, geom: jax.Array, plan: StencilPlan,
     M) int32.  ``external_i_halo=True`` (the sharded path) marks the i-axis
     halo as already materialized in ``a4`` -- a periodic i BC is then *not*
     wrapped locally (the ring exchange supplied the wrapped rows).
+
+    ``ext_j``/``ext_k`` (the multi-axis-sharded path) mark the j/k ghosts
+    as externally materialized too: ``a4`` is the per-shard slab already
+    extended along those axes, ``geom`` grows to ``(gi0, M, j0, k0)``, and
+    the kernels realize the j/k BCs at the *global* edges from
+    ``n_global``/``p_global`` (the global N/P).  External j is
+    incompatible with j-tiling (the tile walk would re-wrap the exchanged
+    columns), so ``bj`` must be ``None``.
     """
     b, m, n, p = a4.shape
+    if (ext_j or ext_k) and bj is not None:
+        raise ValueError("call_3d: block_j tiling is incompatible with an "
+                         "externally materialized j/k halo (ext_j/ext_k); "
+                         "pass block_j=None on j/k-sharded slabs")
     _validate_blocks(m, n, bi, bj, sweeps, plan.spec.radius,
                      plan.spec.sweep_apps)
     if path == "stream":
         return _call_3d_stream(a4, wf, geom, plan, bi, bj, sweeps, interpret,
-                               external_i_halo, fault)
+                               external_i_halo, fault, ext_j=ext_j,
+                               ext_k=ext_k, n_global=n_global,
+                               p_global=p_global)
     if path != "replicate":
         raise ValueError(f"unknown path {path!r}; expected 'stream' or "
                          f"'replicate'")
@@ -247,8 +270,11 @@ def call_3d(a4: jax.Array, wf: jax.Array, geom: jax.Array, plan: StencilPlan,
     per_i, per_j = _periodic_axes(plan.spec)
     wrap_i = per_i and not external_i_halo
     kern = functools.partial(stencil3d_kernel, plan=plan, bi=bi, bj=bj,
-                             n_global=n, sweeps=sweeps,
-                             acc_dtype=acc_dtype_for(a4.dtype))
+                             n_global=n_global if ext_j else n,
+                             sweeps=sweeps,
+                             acc_dtype=acc_dtype_for(a4.dtype),
+                             ext_j=ext_j, ext_k=ext_k,
+                             p_global=p_global if ext_k else None)
     if bj is None:
         block = (1, bi, n, p)
 
@@ -316,7 +342,9 @@ def call_3d(a4: jax.Array, wf: jax.Array, geom: jax.Array, plan: StencilPlan,
 
 def call_3d_wavefront(a4: jax.Array, wf: jax.Array, geom: jax.Array,
                       plan: StencilPlan, bi: int, sweeps: int,
-                      interpret: bool) -> jax.Array:
+                      interpret: bool, ext_j: bool = False,
+                      ext_k: bool = False, n_global: Optional[int] = None,
+                      p_global: Optional[int] = None) -> jax.Array:
     """Wire the temporal-wavefront kernel: ``sweeps`` pipelined sweep stages
     ride one pass over the i-blocks on a grid of ``nbi + sweeps`` steps with
     an ``s``-lagged output map, so each input plane is fetched from HBM once
@@ -351,7 +379,9 @@ def call_3d_wavefront(a4: jax.Array, wf: jax.Array, geom: jax.Array,
     s = sweeps
     acc = acc_dtype_for(a4.dtype)
     kern = functools.partial(stencil3d_wavefront_kernel, plan=plan, bi=bi,
-                             n_global=n, sweeps=s, acc_dtype=acc)
+                             n_global=n_global if ext_j else n, sweeps=s,
+                             acc_dtype=acc, ext_j=ext_j, ext_k=ext_k,
+                             p_global=p_global if ext_k else None)
     block = (1, bi, n, p)
     in_specs = [
         pl.BlockSpec(block, lambda bb, t: (bb, jnp.minimum(t, nbi - 1), 0, 0)),
@@ -368,6 +398,46 @@ def call_3d_wavefront(a4: jax.Array, wf: jax.Array, geom: jax.Array,
             block, lambda bb, t: (bb, jnp.clip(t - s, 0, nbi - 1), 0, 0)),
         out_shape=jax.ShapeDtypeStruct(a4.shape, a4.dtype),
         scratch_shapes=scratch,
+        interpret=interpret,
+    )(a4, geom, wf)
+
+
+def call_3d_strip(a4: jax.Array, wf: jax.Array, geom: jax.Array,
+                  plan: StencilPlan, sweeps: int, interpret: bool, h: int,
+                  ext_j: bool = False, ext_k: bool = False,
+                  n_global: Optional[int] = None,
+                  p_global: Optional[int] = None) -> jax.Array:
+    """Wire the boundary-strip kernel for the overlap executor: ``a4`` is
+    ``(B, rows, N, P)`` with ``rows = out_rows + 2h`` i-planes that already
+    include the ``h`` exchanged ghost planes per side (``h = radius *
+    sweeps * sweep_apps``).  One identity-mapped block per batch entry --
+    the strip is thin by construction (``3h`` planes for the overlap
+    executor's edge strips), so no streaming window or neighbour views are
+    staged.  Returns the central ``(B, rows - 2h, N, P)`` planes.  On a
+    variable-coefficient spec ``wf`` is the matching pre-extended
+    ``(n_weights, rows, N, P)`` coefficient strip."""
+    b, rows, n, p = a4.shape
+    if rows <= 2 * h:
+        raise ValueError(f"call_3d_strip: strip of {rows} planes has no "
+                         f"interior under the {h}-plane halo")
+    kern = functools.partial(stencil3d_strip_kernel, plan=plan, h=h,
+                             n_global=n_global if ext_j else n,
+                             sweeps=sweeps,
+                             acc_dtype=acc_dtype_for(a4.dtype),
+                             ext_j=ext_j, ext_k=ext_k,
+                             p_global=p_global if ext_k else None)
+    in_specs = [
+        pl.BlockSpec((1, rows, n, p), lambda bb: (bb, 0, 0, 0)),
+        pl.BlockSpec(geom.shape, lambda bb: (0,)),
+        pl.BlockSpec(wf.shape, lambda bb: (0,) * wf.ndim),
+    ]
+    return pl.pallas_call(
+        kern,
+        grid=(b,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, rows - 2 * h, n, p),
+                               lambda bb: (bb, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, rows - 2 * h, n, p), a4.dtype),
         interpret=interpret,
     )(a4, geom, wf)
 

@@ -1,2 +1,4 @@
-from .planner import (PlanNote, batch_sharding, decode_state_sharding,  # noqa: F401
-                      param_sharding, plan_summary)
+from .planner import (PlanNote, StencilGridPlan, StencilShardPlan,  # noqa: F401
+                      batch_sharding, decode_state_sharding, param_sharding,
+                      plan_summary, stencil_grid_sharding,
+                      stencil_halo_sharding)

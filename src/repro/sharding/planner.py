@@ -14,13 +14,15 @@ what replicated -- the paper's Table-2 discipline applied to partitioning.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import TYPE_CHECKING, Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..models.common import ArchConfig, ShapeConfig
+if TYPE_CHECKING:   # annotation-only; a runtime import would close the
+    # planner -> models -> kernels -> stencil_engine.sharded -> planner cycle
+    from ..models.common import ArchConfig, ShapeConfig
 
 
 @dataclasses.dataclass
@@ -218,7 +220,16 @@ def stencil_halo_sharding(m: int, mesh: Mesh, axis: str = "data",
         return fallback(f"M={m} not divisible by {axis}={n}; replicating")
     local = m // n
     if local < halo:
-        return fallback(f"local rows {local} < halo {halo}; replicating")
+        # Too-thin shards are a configuration error, not a graceful
+        # degradation: the deep-halo exchange would need rows the owning
+        # shard does not hold, so silently replicating here used to hide a
+        # mesh that can never shard this problem.
+        raise ValueError(
+            f"stencil_halo_sharding: M={m} over mesh axis {axis!r}={n} "
+            f"leaves {local} local rows/shard, fewer than the "
+            f"{halo}-row halo (radius {radius} x sweeps {sweeps}); "
+            f"need M // n_shards >= radius * sweeps -- use a smaller "
+            f"mesh axis, a larger M, or fewer fused sweeps")
     topo = ("ring (periodic wrap between shard 0 and shard "
             f"{n - 1})" if periodic else
             "chain (edge shards take boundary ghosts locally)")
@@ -228,6 +239,109 @@ def stencil_halo_sharding(m: int, mesh: Mesh, axis: str = "data",
         f"(radius {radius} x sweeps {sweeps}), {topo}"))
     return StencilShardPlan(axis, n, halo, local,
                             P(None, axis, None, None), notes, periodic)
+
+
+@dataclasses.dataclass
+class StencilGridPlan:
+    """How to split a stencil grid over an (pi, pj, pk) process grid.
+
+    One entry per domain axis (i, j, k): ``axes[d]`` is the mesh axis that
+    shards domain axis ``d`` (``None`` = that axis stays whole), and the
+    per-axis ``n_shards`` / ``halo`` / ``local`` describe its slab.  An
+    axis whose mesh axis has size 1 or whose extent does not divide falls
+    back to unsharded with a PlanNote; a shard too thin to cover its own
+    halo *raises* (same contract as :func:`stencil_halo_sharding`).
+    ``spec`` is the combined ``P(None, ai, aj, ak)`` for a ``(B, M, N, P)``
+    operand.  ``periodic[d]`` closes axis ``d``'s exchange into a ring."""
+    axes: Tuple[Optional[str], Optional[str], Optional[str]]
+    n_shards: Tuple[int, int, int]
+    halo: Tuple[int, int, int]
+    local: Tuple[int, int, int]
+    spec: Any
+    notes: List[PlanNote]
+    periodic: Tuple[bool, bool, bool] = (False, False, False)
+
+    @property
+    def total_shards(self) -> int:
+        return int(np.prod(self.n_shards))
+
+
+def stencil_grid_sharding(shape: Tuple[int, int, int], mesh: Mesh,
+                          axes=("data", None, None), sweeps: int = 1,
+                          radius=(1, 1, 1),
+                          periodic=(False, False, False)) -> StencilGridPlan:
+    """Plan multi-axis halo-exchange sharding for an (..., M, N, P) grid.
+
+    ``axes`` names the mesh axis carrying each domain axis (i, j, k) --
+    ``None`` leaves that axis whole.  Per sharded axis the shard owns
+    ``extent / n`` contiguous planes and exchanges ``radius * sweeps``
+    ghost planes per side (callers fold ``sweep_apps`` into ``sweeps``,
+    as with :func:`stencil_halo_sharding`).  Corner/edge ghosts need no
+    diagonal sends: the executor exchanges one axis at a time on the
+    progressively extended slab (j, then k, then i), so each later
+    exchange carries the earlier axes' ghost columns and the diagonal
+    data arrives transitively.  A per-axis ``periodic`` entry closes that
+    axis's exchange into a ring.  Indivisible extents and size-1 mesh
+    axes fall back (PlanNote'd) to unsharded on that axis; a shard
+    thinner than its own halo raises with the shapes in the message."""
+    if isinstance(radius, int):
+        radius = (radius, radius, radius)
+    if len(shape) != 3 or len(axes) != 3:
+        raise ValueError(f"stencil_grid_sharding needs a 3-axis shape and "
+                         f"axes triple, got shape={shape}, axes={axes}")
+    names = ("i", "j", "k")
+    out_axes: List[Optional[str]] = []
+    n_shards: List[int] = []
+    halos: List[int] = []
+    local: List[int] = []
+    notes: List[PlanNote] = []
+    for d in range(3):
+        ext, ax = int(shape[d]), axes[d]
+        halo = radius[d] * sweeps
+        n = _mesh_axis_size(mesh, ax) if ax is not None else 1
+
+        def keep_whole(reason: str) -> None:
+            notes.append(PlanNote(f"stencil/{names[d]}-axis", (ext,), None,
+                                  reason))
+            out_axes.append(None)
+            n_shards.append(1)
+            halos.append(halo)
+            local.append(ext)
+
+        if ax is None:
+            out_axes.append(None)
+            n_shards.append(1)
+            halos.append(halo)
+            local.append(ext)
+            continue
+        if n <= 1:
+            keep_whole(f"axis {ax!r} has size {n}; {names[d]} unsharded")
+            continue
+        if ext % n != 0:
+            keep_whole(f"{names[d]}-extent {ext} not divisible by "
+                       f"{ax}={n}; replicating along {names[d]}")
+            continue
+        loc = ext // n
+        if loc < halo:
+            raise ValueError(
+                f"stencil_grid_sharding: {names[d]}-extent {ext} over mesh "
+                f"axis {ax!r}={n} leaves {loc} local planes/shard, fewer "
+                f"than the {halo}-plane halo (radius {radius[d]} x sweeps "
+                f"{sweeps}); need extent // n_shards >= radius * sweeps")
+        topo = (f"ring (periodic wrap between shard 0 and shard {n - 1})"
+                if periodic[d] else
+                "chain (edge shards take boundary ghosts locally)")
+        notes.append(PlanNote(
+            f"stencil/{names[d]}-axis", (ext,), ax,
+            f"{names[d]}-axis split {n} ways x {loc} planes, halo "
+            f"{halo}/side (radius {radius[d]} x sweeps {sweeps}), {topo}"))
+        out_axes.append(ax)
+        n_shards.append(n)
+        halos.append(halo)
+        local.append(loc)
+    part = P(None, *out_axes)
+    return StencilGridPlan(tuple(out_axes), tuple(n_shards), tuple(halos),
+                           tuple(local), part, notes, tuple(periodic))
 
 
 def plan_summary(notes: List[PlanNote], max_rows: int = 12) -> str:
